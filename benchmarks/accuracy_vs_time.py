@@ -1,0 +1,69 @@
+"""Paper Fig. 3: test accuracy vs communication time for ECRT / naive /
+proposed, at SNR 10 and 20 dB. Headline: ECRT needs >= 2x (20 dB) and >= 3x
+(10 dB) the airtime of the proposed scheme to reach the same accuracy.
+
+Scale deviations from the paper, recorded in EXPERIMENTS.md: procedural
+digits instead of MNIST (offline container), 40 clients instead of 100 and
+eta=0.05 instead of 0.01 (single-core budget; orderings and time *ratios*
+are preserved — run with quick=False for 100 clients).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, fl_world
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import latency as LAT
+from repro.core import transport as T
+from repro.fl.loop import run_fl
+
+
+def time_to_accuracy(res, target: float) -> float:
+    for acc, air in zip(res.accuracy, res.airtime_s):
+        if acc >= target:
+            return air
+    return float("inf")
+
+
+def run(quick: bool = True):
+    n_clients = 40 if quick else 100
+    rounds = 120 if quick else 400
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05 if quick else 0.01)
+
+    results = {}
+    for snr in (10.0, 20.0):
+        for mode in ("approx", "naive", "ecrt"):
+            e_tx = 1.0
+            if mode == "ecrt":
+                # calibrate with the real soft decoder (block fading);
+                # the paper's bounded-distance model is reported alongside
+                e_tx = LAT.calibrate_ecrt(snr, n_codewords=64, max_tx=6)
+            tcfg = T.TransportConfig(
+                mode=mode, channel=CH.ChannelConfig(snr_db=snr),
+                simulate_fec=False, ecrt_expected_tx=float(e_tx))
+            res = run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=rounds,
+                         batch_per_round=32, eval_every=5)
+            results[(mode, snr)] = res
+            emit(f"fig3/{mode}/snr{int(snr)}", res.wall_s * 1e6,
+                 f"final_acc={res.final_accuracy:.3f} airtime={res.airtime_s[-1]:.2f}s"
+                 + (f" E[tx]={e_tx:.2f}" if mode == "ecrt" else ""))
+
+    # headline ratios: airtime to reach the best-common accuracy
+    for snr in (10.0, 20.0):
+        a = results[("approx", snr)]
+        e = results[("ecrt", snr)]
+        target = 0.8 * min(a.final_accuracy, e.final_accuracy)
+        ta, te = time_to_accuracy(a, target), time_to_accuracy(e, target)
+        ratio = te / ta if np.isfinite(ta) and ta > 0 else float("nan")
+        emit(f"fig3/ecrt_over_approx_time/snr{int(snr)}", 0.0,
+             f"target_acc={target:.2f} approx={ta:.2f}s ecrt={te:.2f}s ratio={ratio:.2f}"
+             f" (paper: >={3 if snr == 10 else 2}x)")
+        n = results[("naive", snr)]
+        emit(f"fig3/naive_collapse/snr{int(snr)}", 0.0,
+             f"naive_final={n.final_accuracy:.3f} (paper: ~0.10)")
+    return results

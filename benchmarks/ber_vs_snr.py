@@ -1,0 +1,32 @@
+"""Paper Sec. V BER-vs-SNR claims: QPSK ~4e-2 @10 dB, ~5e-3 @20 dB over the
+Rayleigh uplink; QPSK < 16-QAM < 256-QAM at equal SNR."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, timeit
+from repro.core import modulation as M
+
+
+def run(quick: bool = True):
+    key = jax.random.PRNGKey(0)
+    n = 1 << 15 if quick else 1 << 18
+    rows = []
+    for name in ("qpsk", "16qam", "256qam"):
+        scheme = M.MOD_SCHEMES[name]
+        for snr in (0.0, 5.0, 10.0, 15.0, 20.0, 25.0, 30.0):
+            ber = float(M.measure_ber(key, scheme, snr, n_symbols=n))
+            rows.append((name, snr, ber))
+            emit(f"ber/{name}/snr{int(snr)}", 0.0, f"ber={ber:.4g}")
+    # headline checks vs the paper
+    qpsk10 = next(b for m, s, b in rows if m == "qpsk" and s == 10.0)
+    qpsk20 = next(b for m, s, b in rows if m == "qpsk" and s == 20.0)
+    th10, th20 = M.rayleigh_qpsk_ber(10), M.rayleigh_qpsk_ber(20)
+    emit("ber/qpsk10_vs_paper", 0.0,
+         f"measured={qpsk10:.3g} paper~4e-2 theory={th10:.3g}")
+    emit("ber/qpsk20_vs_paper", 0.0,
+         f"measured={qpsk20:.3g} paper~5e-3 theory={th20:.3g}")
+    us = timeit(lambda: M.measure_ber(key, M.MOD_SCHEMES["qpsk"], 10.0, n_symbols=n))
+    emit("ber/measure_call", us, f"n_symbols={n}")
+    return rows

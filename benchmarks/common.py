@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocking on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def fl_world(n_clients: int = 40, per_client: int = 96, seed: int = 0):
+    from repro.data import synth_mnist
+    from repro.fl import partition
+
+    (img, lab), (ti, tl) = synth_mnist.train_test(300, 60, seed=seed)
+    parts = partition.non_iid_partition(img, lab, n_clients=n_clients, seed=seed)
+    cx, cy = partition.stack_clients(parts, per_client=per_client, seed=seed)
+    return cx, cy, ti, tl

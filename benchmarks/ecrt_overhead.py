@@ -1,0 +1,33 @@
+"""ECRT cost quantification: E[transmissions] of the rate-1/2 LDPC chain
+under per-codeword block fading, via (a) the real min-sum decoder and
+(b) the paper's bounded-distance (7-error) abstraction; plus the resulting
+per-round airtime model vs the approximate scheme."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import latency as LAT
+from repro.core import transport as T
+
+
+def run(quick: bool = True):
+    n_cw = 48 if quick else 256
+    n_params = 21_840  # the paper CNN's parameter count
+    timings = LAT.PhyTimings()
+    for snr in (10.0, 16.0, 20.0, 26.0):
+        e_soft = LAT.calibrate_ecrt(snr, n_codewords=n_cw, max_tx=6)
+        e_hard = LAT.calibrate_ecrt(snr, n_codewords=n_cw, max_tx=6,
+                                    decoder="bounded")
+        emit(f"ecrt/etx/snr{int(snr)}", 0.0,
+             f"minsum={e_soft:.2f} bounded7={e_hard:.2f}")
+        n_bits = n_params * 32
+        approx = T.TxStats(*map(jnp.float32, (n_bits / 2, 1, 0, n_bits)))
+        ecrt = T.TxStats(*map(jnp.float32,
+                              (2 * n_bits / 2 * e_soft, e_soft, 0, n_bits)))
+        ta = float(LAT.round_airtime(approx, timings, "approx"))
+        te = float(LAT.round_airtime(ecrt, timings, "ecrt"))
+        emit(f"ecrt/airtime_ratio/snr{int(snr)}", 0.0,
+             f"approx={ta*1e3:.2f}ms ecrt={te*1e3:.2f}ms ratio={te/ta:.2f}")
+    return None

@@ -1,0 +1,34 @@
+"""Beyond-paper ablation: FedAvg (multi-step local training) over the
+approximate uplink, with and without adaptive max-abs pre-scaling.
+
+Findings recorded in EXPERIMENTS.md: FedAvg's weight deltas survive the
+same clamp prior (they are bounded like gradients); adaptive scaling does
+NOT reliably help — QAM bit errors hit exponent bits regardless of where
+values sit in the representable range, so concentrating magnitudes near the
+bound only helps with a smarter receiver prior than bit-30 clamping."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, fl_world
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.fl.fedavg import run_fedavg
+
+
+def run(quick: bool = True):
+    n_clients = 24 if quick else 100
+    rounds = 40 if quick else 200
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05 if quick else 0.01)
+    for mode, scale in (("perfect", "none"), ("approx", "none"),
+                        ("approx", "max_abs"), ("naive", "none")):
+        tcfg = T.TransportConfig(mode=mode, channel=CH.ChannelConfig(snr_db=10.0))
+        res = run_fedavg(cfg, tcfg, cx, cy, ti, tl, n_rounds=rounds,
+                         local_steps=3, batch_per_step=24, scale_mode=scale,
+                         eval_every=max(2, rounds // 8))
+        emit(f"fedavg/{mode}/scale-{scale}", res.wall_s * 1e6,
+             f"final_acc={res.final_accuracy:.3f} airtime={res.airtime_s[-1]:.2f}s")
+    return None

@@ -1,0 +1,26 @@
+"""Summarize the dry-run roofline artifacts into the benchmark CSV."""
+
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True):
+    art = "artifacts/dryrun"
+    if not os.path.isdir(art):
+        emit("roofline/missing", 0.0, "run scripts/run_dryruns.sh first")
+        return
+    from repro.configs import ARCH_IDS, INPUT_SHAPES
+    from repro.launch import roofline as RL
+
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            r = RL.analyze(art, arch, shape)
+            if r is None:
+                continue
+            emit(f"roofline/{arch}/{shape}", 0.0,
+                 f"compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+                 f"collective={r['collective_s']*1e3:.2f}ms dominant={r['dominant']} "
+                 f"useful={r['useful_ratio']*100:.1f}%")

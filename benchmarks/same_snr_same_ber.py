@@ -1,0 +1,57 @@
+"""Paper Fig. 4(a): accuracy at the same SNR (10 dB) across modulations —
+QPSK wins (fewest errors). Fig. 4(b): accuracy at the same BER ~4e-2
+(QPSK@10dB, 16-QAM@16dB, 256-QAM@26dB) — 256-QAM wins thanks to Gray-coded
+MSB protection concentrated on the float sign/exponent bits."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, fl_world
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import modulation as M
+from repro.core import transport as T
+from repro.fl.loop import run_fl
+import jax
+
+
+def _fl(modulation, snr, cx, cy, ti, tl, rounds, lr):
+    cfg = dataclasses.replace(cnn_config(), lr=lr)
+    tcfg = T.TransportConfig(mode="approx", modulation=modulation,
+                             channel=CH.ChannelConfig(snr_db=snr))
+    return run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=rounds,
+                  batch_per_round=32, eval_every=5)
+
+
+def run(quick: bool = True):
+    n_clients = 30 if quick else 100
+    rounds = 100 if quick else 400
+    lr = 0.05 if quick else 0.01
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+
+    # Fig 4(a): same SNR
+    accs_a = {}
+    for mod in ("qpsk", "16qam", "256qam"):
+        res = _fl(mod, 10.0, cx, cy, ti, tl, rounds, lr)
+        accs_a[mod] = res.final_accuracy
+        ber = float(M.measure_ber(jax.random.PRNGKey(0), M.MOD_SCHEMES[mod], 10.0))
+        emit(f"fig4a/{mod}/snr10", res.wall_s * 1e6,
+             f"acc={res.final_accuracy:.3f} ber={ber:.3g}")
+    emit("fig4a/ordering", 0.0,
+         f"qpsk>=16qam>=256qam: {accs_a['qpsk'] >= accs_a['16qam'] - 0.05} "
+         f"{accs_a['16qam'] >= accs_a['256qam'] - 0.05} (paper: QPSK best)")
+
+    # Fig 4(b): same BER ~ 4e-2
+    pairs = {"qpsk": 10.0, "16qam": 16.0, "256qam": 26.0}
+    accs_b = {}
+    for mod, snr in pairs.items():
+        res = _fl(mod, snr, cx, cy, ti, tl, rounds, lr)
+        accs_b[mod] = res.final_accuracy
+        ber = float(M.measure_ber(jax.random.PRNGKey(0), M.MOD_SCHEMES[mod], snr))
+        emit(f"fig4b/{mod}/snr{int(snr)}", res.wall_s * 1e6,
+             f"acc={res.final_accuracy:.3f} ber={ber:.3g}")
+    emit("fig4b/ordering", 0.0,
+         f"256qam_acc={accs_b['256qam']:.3f} vs qpsk_acc={accs_b['qpsk']:.3f} "
+         f"(paper: 256-QAM significantly better at equal BER)")
+    return accs_a, accs_b

@@ -1,0 +1,34 @@
+"""Modulation playground: sweep schemes/SNRs and inspect per-bit protection.
+
+    PYTHONPATH=src python examples/modulation_playground.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import modulation as M
+
+key = jax.random.PRNGKey(0)
+
+print("=== BER vs SNR (Rayleigh uplink) ===")
+print(f"{'snr_db':>7} " + " ".join(f"{n:>9}" for n in M.MOD_SCHEMES))
+for snr in (0, 5, 10, 15, 20, 25, 30):
+    row = [float(M.measure_ber(key, s, snr, n_symbols=1 << 14))
+           for s in M.MOD_SCHEMES.values()]
+    print(f"{snr:7.0f} " + " ".join(f"{b:9.4f}" for b in row))
+
+print("\n=== per-bit error rate within a Gray 256-QAM symbol ===")
+scheme = M.MOD_SCHEMES["256qam"]
+k = scheme.bits_per_symbol
+sym = jax.random.randint(key, (1 << 16,), 0, scheme.points).astype(jnp.uint32)
+tx = M.modulate(sym, scheme)
+k1, k2 = jax.random.split(key)
+noise = 0.08 * (jax.random.normal(k1, sym.shape) + 1j * jax.random.normal(k2, sym.shape))
+rx = M.demod_hard(tx + noise.astype(jnp.complex64), scheme)
+diff = sym ^ rx
+for j in range(k):
+    r = float(jnp.mean((diff >> (k - 1 - j)) & 1))
+    bar = "#" * int(r * 2500)
+    print(f"bit {j} ({'most significant' if j == 0 else 'least significant' if j == k - 1 else '...':>17}): {r:.4f} {bar}")
+print("\nMSB-first float packing rides this gradient of protection: the "
+      "float sign/exponent land on the best-protected constellation bits.")

@@ -1,0 +1,37 @@
+"""Quickstart: send a gradient through the approximate wireless uplink.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's core mechanics in ~40 lines: a bounded gradient survives
+a 10 dB Rayleigh channel with no FEC (bit-30 clamp keeps every received
+value finite and < 2), while naive transmission produces NaN/garbage.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ChannelConfig, TransportConfig, transmit_flat
+from repro.core.latency import PhyTimings, round_airtime
+
+key = jax.random.PRNGKey(0)
+grad = jax.random.normal(key, (100_000,)) * 0.05  # typical gradient scale
+
+for mode in ("perfect", "naive", "approx", "ecrt"):
+    cfg = TransportConfig(
+        mode=mode,
+        modulation="qpsk",
+        channel=ChannelConfig(snr_db=10.0, fading="rayleigh"),
+        simulate_fec=False,          # ecrt: use the calibrated airtime model
+        ecrt_expected_tx=1.1,
+    )
+    out, stats = jax.jit(lambda g, k: transmit_flat(g, k, cfg))(grad, key)
+    err = jnp.abs(out - grad)
+    air = float(round_airtime(stats, PhyTimings(), mode)) * 1e3
+    print(f"{mode:8s} ber={float(stats.ber):.4f} "
+          f"mean|err|={float(jnp.nanmean(err)):.2e} "
+          f"max|out|={float(jnp.abs(out).max()):9.3g} "
+          f"finite={bool(jnp.isfinite(out).all())!s:5s} airtime={air:7.2f} ms")
+
+print("\nThe paper's receiver prior: any gradient decodes to a finite value "
+      "in (-2, 2); errors stay small enough for FedSGD to converge, and the "
+      "uplink needs no FEC airtime (compare the ecrt row).")

@@ -1,0 +1,41 @@
+"""Checkpointing: pytree <-> .npz with a json manifest (offline-friendly)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(p) for p in path) for path, _ in flat]
+    vals = [np.asarray(v) for _, v in flat]
+    return keys, vals, treedef
+
+
+def save(path: str, tree: Any, step: int = 0, extra: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    keys, vals, _ = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **{f"a{i}": v for i, v in enumerate(vals)})
+    manifest = {"step": step, "keys": keys, "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    keys_like, vals_like, treedef = _flatten_with_paths(like)
+    if manifest["keys"] != keys_like:
+        raise ValueError("checkpoint structure mismatch")
+    vals = [data[f"a{i}"].astype(v.dtype) for i, v in enumerate(vals_like)]
+    import jax.numpy as jnp
+
+    tree = jax.tree_util.tree_unflatten(treedef, [jnp.asarray(v) for v in vals])
+    return tree, manifest["step"]

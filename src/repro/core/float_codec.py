@@ -1,0 +1,143 @@
+"""Float32 <-> bit/symbol codec for approximate gradient transmission.
+
+Implements the paper's encoding layer (Sec. IV-A):
+
+* IEEE-754 float32 gradients are bitcast to 32-bit words.
+* Words are split into ``32/k`` modulation symbols of ``k`` bits each,
+  MSB-first, so the sign and exponent bits land in the earliest symbols and,
+  within a symbol, the more significant float bit occupies the more protected
+  Gray-constellation position (see ``modulation.py``).
+* A symbol-level block interleaver spreads each float's symbols across the
+  transmitted stream so a fading burst corrupts many floats once each rather
+  than one float catastrophically (paper Sec. IV-A "interleaving").
+* On receive, the second bit (bit 30 — the exponent MSB) is forced to 0:
+  gradients are bounded with |g| < 2 (paper Sec. III), so that bit is always
+  0 at the transmitter and any received 1 there is an error (paper Fig. 1).
+  Forcing it also makes NaN/Inf unrepresentable (exponent 0xFF needs bit 30).
+
+Everything here is pure jnp and jit-friendly; the fused Pallas kernel in
+``repro.kernels`` implements the same pipeline for TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "f32_to_bits",
+    "bits_to_f32",
+    "words_to_symbols",
+    "symbols_to_words",
+    "interleave",
+    "deinterleave",
+    "clamp_exponent_bits",
+    "exponent_clamp_mask",
+    "BIT30_MASK",
+]
+
+# ~(1 << 30): clears the exponent MSB.
+BIT30_MASK = jnp.uint32(0xBFFFFFFF)
+
+
+def f32_to_bits(x: jax.Array) -> jax.Array:
+    """Bitcast float32 -> uint32 (same shape)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+
+
+def bits_to_f32(u: jax.Array) -> jax.Array:
+    """Bitcast uint32 -> float32 (same shape)."""
+    return jax.lax.bitcast_convert_type(u.astype(jnp.uint32), jnp.float32)
+
+
+def bf16_to_bits(x: jax.Array) -> jax.Array:
+    """Bitcast bfloat16 -> uint16. bf16 shares float32's exponent layout
+    (8 bits, bias 127), so the paper's exponent-MSB clamp applies verbatim
+    at half the airtime — the beyond-paper 16-bit uplink (EXPERIMENTS Perf)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16)
+
+
+def bits_to_bf16(u: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(u.astype(jnp.uint16), jnp.bfloat16)
+
+
+def words_to_symbols(u: jax.Array, bits_per_symbol: int, word_bits: int = 32) -> jax.Array:
+    """Split uint words (N,) into symbol indices (N, word_bits/k), MSB-first.
+
+    Symbol ``s`` of a word carries float bits [wb-1 - s*k, ..., wb - (s+1)*k]
+    with the more significant float bit in the higher bit of the symbol index.
+    """
+    k = bits_per_symbol
+    if word_bits % k != 0:
+        raise ValueError(f"bits_per_symbol={k} must divide {word_bits}")
+    s_per_word = word_bits // k
+    u = u.astype(jnp.uint32)
+    shifts = jnp.uint32(word_bits - k * (jnp.arange(s_per_word, dtype=jnp.uint32) + 1))
+    mask = jnp.uint32((1 << k) - 1)
+    return (u[..., None] >> shifts) & mask
+
+
+def symbols_to_words(sym: jax.Array, bits_per_symbol: int, word_bits: int = 32) -> jax.Array:
+    """Inverse of :func:`words_to_symbols`: (N, wb/k) -> (N,) uint32."""
+    k = bits_per_symbol
+    s_per_word = word_bits // k
+    shifts = jnp.uint32(word_bits - k * (jnp.arange(s_per_word, dtype=jnp.uint32) + 1))
+    return jnp.sum(
+        (sym.astype(jnp.uint32) & jnp.uint32((1 << k) - 1)) << shifts,
+        axis=-1,
+        dtype=jnp.uint32,
+    )
+
+
+def interleave(sym: jax.Array) -> jax.Array:
+    """Row-column symbol interleaver.
+
+    ``sym`` is (N, S) — N floats x S symbols each. The transmitted stream is
+    read column-major so adjacent airtime symbols come from different floats.
+    Returns the flat stream (N*S,).
+    """
+    return jnp.transpose(sym).reshape(-1)
+
+
+def deinterleave(stream: jax.Array, n_words: int, s_per_word: int) -> jax.Array:
+    """Inverse of :func:`interleave`: (N*S,) -> (N, S)."""
+    return jnp.transpose(stream.reshape(s_per_word, n_words))
+
+
+def exponent_clamp_mask16(bound: float) -> int:
+    """bf16 analogue of :func:`exponent_clamp_mask` (exponent bits 14..7)."""
+    m32 = exponent_clamp_mask(bound)
+    return (m32 >> 16) & 0xFFFF
+
+
+def clamp_exponent_bits16(u: jax.Array, bound: float = 2.0) -> jax.Array:
+    return (u.astype(jnp.uint32) & jnp.uint32(exponent_clamp_mask16(bound))).astype(jnp.uint16)
+
+
+def exponent_clamp_mask(bound: float) -> int:
+    """AND-mask forcing exponent bits that are provably 0 for |g| < bound.
+
+    The paper's scheme (bound <= 2) clears only bit 30. Tighter certified
+    bounds (Sec. III gives B^l; empirically |g| << 1) let us clear more
+    leading exponent bits: if bound <= 2**(1 - 2**m) ... in practice we clear
+    the top ``j`` exponent bits such that the max biased exponent
+    ``E_max = 127 + floor(log2(bound_strict))`` fits in ``8 - j`` bits.
+    """
+    import math
+
+    if bound <= 0:
+        raise ValueError("bound must be positive")
+    # Largest representable magnitude strictly below `bound` has biased
+    # exponent E_max = 127 + ceil(log2(bound)) - 1.
+    e_max = 127 + math.ceil(math.log2(bound)) - 1
+    e_max = max(0, min(254, e_max))
+    j = 8 - max(1, e_max.bit_length())  # leading exponent bits that must be 0
+    mask = 0xFFFFFFFF
+    for b in range(j):
+        mask &= ~(1 << (30 - b))
+    return mask
+
+
+def clamp_exponent_bits(u: jax.Array, bound: float = 2.0) -> jax.Array:
+    """Force provably-zero exponent bits to 0 in received words (Fig. 1)."""
+    return u & jnp.uint32(exponent_clamp_mask(bound))

@@ -1,0 +1,2 @@
+from repro.data.synth_mnist import make_dataset, train_test
+from repro.data.tokens import TokenStream

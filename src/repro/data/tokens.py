@@ -1,0 +1,36 @@
+"""Synthetic token pipeline for LM training drivers (offline container).
+
+Deterministic, shardable stream with learnable structure: each next token is
+an affine function of the previous one (mod vocab) with occasional uniform
+noise — a pattern a small LM drives to low loss quickly, which makes e2e
+training examples meaningful without any corpus on disk.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class TokenStream:
+    def __init__(self, vocab_size: int, seq_len: int, batch_size: int,
+                 seed: int = 0, noise: float = 0.05):
+        self.vocab = vocab_size
+        self.seq_len = seq_len
+        self.batch = batch_size
+        self.noise = noise
+        self._rng = np.random.default_rng(seed)
+        # affine next-token rule, coprime multiplier
+        self.a = 5
+        self.b = 131
+
+    def next_batch(self):
+        rng = self._rng
+        first = rng.integers(0, self.vocab, (self.batch, 1))
+        seq = [first]
+        for _ in range(self.seq_len):
+            nxt = (seq[-1] * self.a + self.b) % self.vocab
+            noise_mask = rng.random((self.batch, 1)) < self.noise
+            rand = rng.integers(0, self.vocab, (self.batch, 1))
+            seq.append(np.where(noise_mask, rand, nxt))
+        arr = np.concatenate(seq, axis=1).astype(np.int32)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}

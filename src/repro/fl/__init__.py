@@ -1,0 +1,2 @@
+from repro.fl import cnn, partition
+from repro.fl.loop import run_fl, FLResult

@@ -1,0 +1,62 @@
+"""The paper's FL model (Sec. V): 2x conv(k5) + 2x maxpool(2) + 2x FC.
+
+ReLU hidden activations, log-softmax output, cross-entropy loss, eta=0.01.
+28x28 -> conv(1->10,k5) -> pool2 -> conv(10->20,k5) -> pool2 -> flatten(320)
+-> fc(50) -> fc(10).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(key, cfg):
+    k = jax.random.split(key, 4)
+    c1, c2 = cfg.conv_channels
+    K = cfg.kernel
+    flat = c2 * 4 * 4  # 28 -> 24 -> 12 -> 8 -> 4
+    he = lambda kk, shape, fan: jax.random.normal(kk, shape, jnp.float32) * jnp.sqrt(2.0 / fan)
+    return {
+        "conv1_w": he(k[0], (c1, 1, K, K), K * K),
+        "conv1_b": jnp.zeros((c1,), jnp.float32),
+        "conv2_w": he(k[1], (c2, c1, K, K), c1 * K * K),
+        "conv2_b": jnp.zeros((c2,), jnp.float32),
+        "fc1_w": he(k[2], (flat, cfg.fc_hidden), flat),
+        "fc1_b": jnp.zeros((cfg.fc_hidden,), jnp.float32),
+        "fc2_w": he(k[3], (cfg.fc_hidden, cfg.n_classes), cfg.fc_hidden),
+        "fc2_b": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+
+
+def _conv(x, w, b):
+    # x: (B, C, H, W); w: (O, C, K, K)
+    y = jax.lax.conv_general_dilated(x, w, (1, 1), "VALID",
+                                     dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b[None, :, None, None]
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def logits_fn(params, images):
+    """images: (B, 28, 28) -> logits (B, 10)."""
+    x = images[:, None]  # (B,1,28,28)
+    x = jax.nn.relu(_conv(x, params["conv1_w"], params["conv1_b"]))
+    x = _pool2(x)
+    x = jax.nn.relu(_conv(x, params["conv2_w"], params["conv2_b"]))
+    x = _pool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    return x @ params["fc2_w"] + params["fc2_b"]
+
+
+def loss_fn(params, images, labels):
+    logits = logits_fn(params, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(params, images, labels):
+    return jnp.mean(jnp.argmax(logits_fn(params, images), -1) == labels)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spot.
+
+``approx_channel.py`` — fused PHY pipeline (bitcast -> interleave -> Gray-QAM
+-> Rayleigh/AWGN via counter RNG -> closed-form ML demod -> bit clamp) with
+explicit BlockSpec VMEM tiling; ``ops.py`` jit'd wrappers; ``ref.py`` the
+pure-jnp oracle (bit-exact, shared tile math). Validated interpret=True on
+CPU; compiled pallas_call on real TPUs.
+"""
+
+from repro.kernels.ops import approx_channel, approx_channel_transmit

@@ -1,0 +1,225 @@
+"""Pure-jnp oracle for the fused approximate-channel kernel.
+
+Implements EXACTLY the same math as ``approx_channel.py`` — including the
+counter-based RNG (murmur3-finalizer hash + Box–Muller) — so kernel-vs-ref
+tests are bit-exact, not just statistically close. The reference materializes
+every intermediate (symbols, complex stream, noise) in HBM; the kernel fuses
+the whole pipeline in VMEM. Shared helpers live here and are imported by the
+kernel body (they are plain jnp and trace fine inside ``pallas_call``).
+
+Pipeline (paper Sec. IV, per tile of ``block_words`` float32 words):
+
+    bitcast -> MSB-first k-bit symbols -> block-local row/column interleave
+    -> Gray square-QAM modulate -> Rayleigh/AWGN channel (counter RNG)
+    -> coherent equalize -> closed-form ML demod -> de-interleave
+    -> reassemble words -> exponent-bit clamp -> bitcast back.
+
+Returns ``(x_hat, bit_errors)`` where bit_errors counts residual flipped
+bits vs. the transmitted words (post-clamp).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ref_approx_channel", "CHANNEL_STATIC_ARGS"]
+
+_U32 = jnp.uint32
+_TWO_PI = 6.283185307179586
+
+# Streams for the counter RNG (arbitrary odd constants).
+_STREAM_NOISE = 0x9E3779B9
+_STREAM_FADE = 0x7FEB352D
+_STREAM_PHASE = 0x68E31DA4
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """murmur3 finalizer — a well-mixed 32-bit hash."""
+    x = x.astype(_U32)
+    x = x ^ (x >> 16)
+    x = x * _U32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * _U32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_u32(seed: jax.Array, idx: jax.Array, stream: int) -> jax.Array:
+    return fmix32(seed.astype(_U32) ^ fmix32(idx.astype(_U32) * _U32(0x9E3779B9) + _U32(stream)))
+
+
+def uniform01(h: jax.Array) -> jax.Array:
+    """uint32 hash -> uniform float32 in (0, 1]."""
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / 16777216.0) + jnp.float32(2.0**-25)
+
+
+def gauss_pair(seed: jax.Array, idx: jax.Array, stream: int):
+    """Two iid N(0,1) float32 via Box-Muller on counter-RNG uniforms."""
+    u1 = uniform01(hash_u32(seed, idx, stream))
+    u2 = uniform01(hash_u32(seed, idx, stream ^ _STREAM_PHASE))
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    ang = jnp.float32(_TWO_PI) * u2
+    return r * jnp.cos(ang), r * jnp.sin(ang)
+
+
+def gray_encode(n):
+    n = n.astype(_U32)
+    return n ^ (n >> 1)
+
+
+def gray_decode(g):
+    g = g.astype(_U32)
+    for s in (1, 2, 4):
+        g = g ^ (g >> s)
+    return g
+
+
+def _popcount(x):
+    x = x.astype(_U32)
+    x = x - ((x >> 1) & _U32(0x55555555))
+    x = (x & _U32(0x33333333)) + ((x >> 2) & _U32(0x33333333))
+    x = (x + (x >> 4)) & _U32(0x0F0F0F0F)
+    return (x * _U32(0x01010101)) >> 24
+
+
+# Static (python-level) parameters shared by kernel and reference.
+CHANNEL_STATIC_ARGS = (
+    "bits_per_symbol",
+    "fading",
+    "fade_block",
+    "clamp_mask",
+    "block_words",
+)
+
+
+def channel_tile(
+    u: jax.Array,  # (BW,) uint32 words of one tile (low word_bits used)
+    seed: jax.Array,  # () uint32
+    base_sym: jax.Array,  # () uint32 — global index of this tile's 1st symbol
+    noise_power: jax.Array,  # () f32
+    large_scale_gain: jax.Array,  # () f32
+    *,
+    bits_per_symbol: int,
+    fading: str,
+    fade_block: int,
+    word_bits: int = 32,
+) -> jax.Array:
+    """Shared tile body: words -> noisy received words (pre-clamp).
+
+    ``word_bits=16`` implements the bf16 wire format (same exponent layout
+    as f32, so the clamp prior transfers; half the symbols per word)."""
+    k = bits_per_symbol
+    p = k // 2
+    L = 1 << p
+    bw = u.shape[0]
+    s_per_word = word_bits // k
+    amp = math.sqrt(3.0 / (2.0 * (L * L - 1)))
+
+    # words -> symbols, MSB-first: (BW, S)
+    shifts = _U32(word_bits - k * (jnp.arange(s_per_word, dtype=_U32) + 1))
+    sym = (u[:, None] >> shifts[None, :]) & _U32((1 << k) - 1)
+    # block-local row/column interleave -> transmit order (S, BW)
+    stream = jnp.transpose(sym)
+
+    # split to Gray axis bits (alternating I/Q allocation, MSB-first)
+    gi = jnp.zeros_like(stream)
+    gq = jnp.zeros_like(stream)
+    for j in range(p):
+        bi = (stream >> _U32(k - 1 - 2 * j)) & _U32(1)
+        bq = (stream >> _U32(k - 2 - 2 * j)) & _U32(1)
+        gi = gi | (bi << _U32(p - 1 - j))
+        gq = gq | (bq << _U32(p - 1 - j))
+    li = gray_decode(gi).astype(jnp.float32)
+    lq = gray_decode(gq).astype(jnp.float32)
+    s_re = (2.0 * li - (L - 1)) * jnp.float32(amp)
+    s_im = (2.0 * lq - (L - 1)) * jnp.float32(amp)
+
+    # global symbol index in transmit order
+    gidx = base_sym + jax.lax.broadcasted_iota(_U32, stream.shape, 0) * _U32(bw) \
+        + jax.lax.broadcasted_iota(_U32, stream.shape, 1)
+
+    # channel: r = c s + n ; receiver equalizes y = s + n/c
+    n_re, n_im = gauss_pair(seed, gidx, _STREAM_NOISE)
+    nscale = jnp.sqrt(noise_power * 0.5)
+    n_re = n_re * nscale
+    n_im = n_im * nscale
+    if fading == "awgn":
+        c_re = jnp.sqrt(large_scale_gain) * jnp.ones_like(s_re)
+        c_im = jnp.zeros_like(s_re)
+    else:
+        fidx = gidx // _U32(fade_block) if fading == "block_rayleigh" else gidx
+        h_re, h_im = gauss_pair(seed, fidx, _STREAM_FADE)
+        hs = jnp.sqrt(jnp.float32(0.5))
+        c_re = jnp.sqrt(large_scale_gain) * h_re * hs
+        c_im = jnp.sqrt(large_scale_gain) * h_im * hs
+    c2 = jnp.maximum(c_re * c_re + c_im * c_im, jnp.float32(1e-20))
+    # n / c = n * conj(c) / |c|^2
+    y_re = s_re + (n_re * c_re + n_im * c_im) / c2
+    y_im = s_im + (n_im * c_re - n_re * c_im) / c2
+
+    # closed-form ML demod per axis
+    inv = jnp.float32(1.0 / amp)
+
+    def axis_level(x):
+        lvl = jnp.round((x * inv + (L - 1)) * 0.5)
+        return jnp.clip(lvl, 0, L - 1).astype(_U32)
+
+    gi_hat = gray_encode(axis_level(y_re))
+    gq_hat = gray_encode(axis_level(y_im))
+    rx = jnp.zeros_like(stream)
+    for j in range(p):
+        bi = (gi_hat >> _U32(p - 1 - j)) & _U32(1)
+        bq = (gq_hat >> _U32(p - 1 - j)) & _U32(1)
+        rx = rx | (bi << _U32(k - 1 - 2 * j))
+        rx = rx | (bq << _U32(k - 2 - 2 * j))
+
+    # de-interleave, reassemble words
+    rx_sym = jnp.transpose(rx)  # (BW, S)
+    u_hat = jnp.sum(rx_sym << shifts[None, :], axis=-1, dtype=_U32)
+    return u_hat
+
+
+def ref_approx_channel(
+    x: jax.Array,
+    seed: jax.Array,
+    noise_power: jax.Array,
+    large_scale_gain: jax.Array,
+    *,
+    bits_per_symbol: int = 2,
+    fading: str = "rayleigh",
+    fade_block: int = 64,
+    clamp_mask: int = 0xBFFFFFFF,
+    block_words: int = 1024,
+    word_bits: int = 32,
+):
+    """Oracle for the fused kernel. x: (N,) f32 (or bf16 when word_bits=16),
+    N % block_words == 0."""
+    n = x.shape[0]
+    assert n % block_words == 0, (n, block_words)
+    s_per_word = word_bits // bits_per_symbol
+    if word_bits == 16:
+        u = jax.lax.bitcast_convert_type(x.astype(jnp.bfloat16), jnp.uint16).astype(_U32)
+    else:
+        u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), _U32)
+    tiles = u.reshape(-1, block_words)
+    base = (jnp.arange(tiles.shape[0], dtype=_U32) * _U32(block_words * s_per_word))
+
+    def per_tile(tile, b):
+        return channel_tile(
+            tile, seed.astype(_U32), b,
+            jnp.float32(noise_power), jnp.float32(large_scale_gain),
+            bits_per_symbol=bits_per_symbol, fading=fading, fade_block=fade_block,
+            word_bits=word_bits,
+        )
+
+    u_hat = jax.vmap(per_tile)(tiles, base).reshape(-1)
+    u_hat = u_hat & _U32(clamp_mask)
+    errs = jnp.sum(_popcount(u ^ u_hat), dtype=jnp.int32)
+    if word_bits == 16:
+        out = jax.lax.bitcast_convert_type(u_hat.astype(jnp.uint16), jnp.bfloat16)
+    else:
+        out = jax.lax.bitcast_convert_type(u_hat, jnp.float32)
+    return out, errs

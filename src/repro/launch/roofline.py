@@ -1,0 +1,170 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Terms (seconds per step, per chip):
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+    memory     = HLO_bytes / HBM_bw                (819 GB/s)
+    collective = collective_bytes / link_bw        (~50 GB/s/link ICI)
+
+``cost_analysis()`` counts ``while`` (scan) bodies once, so per-layer costs
+are recovered by *linear extrapolation over two unrolled reduced-depth
+compiles* (k1/k2 layers): delta = (c2 - c1)/(k2 - k1); total(L) = c1 +
+(L - k1) * delta. Collective bytes come from the HLO parser (while bodies
+weighted by trip count) and are extrapolated the same way.
+
+MODEL_FLOPS (the "useful compute" yardstick, per the brief):
+    train:  6 * N_active * tokens      decode/prefill: 2 * N_active * tokens
+The ratio MODEL_FLOPS / HLO_FLOPS catches remat/redundancy waste (remat is
+ON for training, so ~0.75 is the expected ceiling there).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def n_active_params(cfg) -> float:
+    """Active (per-token) parameter count, MoE-aware, incl. lm_head."""
+    from repro.models import registry as R
+
+    shapes = jax.eval_shape(lambda: R.init_params(jax.random.PRNGKey(0), cfg))
+    total = active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        pstr = jax.tree_util.keystr(path).lower()
+        n = 1.0
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "embed" in pstr and "pos" not in pstr:
+            continue  # gather, not matmul
+        if "moe" in pstr and "router" not in pstr and "shared" not in pstr:
+            # stacked (L, E, ...): only top_k of E experts fire per token
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return active, total
+
+
+def model_flops(cfg, shape) -> float:
+    act, _ = n_active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * act * tokens
+
+
+def load_artifacts(art_dir: str) -> dict:
+    recs = {}
+    for f in glob.glob(os.path.join(art_dir, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        key = (r["arch"], r["shape"], r["mesh"], r.get("reduced_layers", 0))
+        recs[key] = r
+    return recs
+
+
+def _body_counts(cfg, k: int):
+    """Layers contributing to the extrapolation at reduced depth k."""
+    nd = cfg.first_dense_layers
+    return k - nd if nd else k
+
+
+def extrapolate(cfg, r1, r2, full_layers: int):
+    """Linear extrapolation of per-device costs to the full depth."""
+    k1 = _body_counts(cfg, r1["reduced_layers"])
+    k2 = _body_counts(cfg, r2["reduced_layers"])
+    L = _body_counts(cfg, full_layers)
+    out = {}
+    for key in ("flops_per_device", "bytes_per_device"):
+        c1, c2 = r1[key], r2[key]
+        d = (c2 - c1) / (k2 - k1)
+        out[key] = c1 + (L - k1) * d
+    coll = {}
+    for kind in list(_COLL_KINDS) + ["_total"]:
+        c1 = r1["collective_bytes_per_device"].get(kind, 0.0)
+        c2 = r2["collective_bytes_per_device"].get(kind, 0.0)
+        d = (c2 - c1) / (k2 - k1)
+        coll[kind] = max(0.0, c1 + (L - k1) * d)
+    out["collective_bytes_per_device"] = coll
+    return out
+
+
+def analyze(art_dir: str, arch: str, shape_name: str) -> dict | None:
+    from repro.configs import INPUT_SHAPES, get_config
+
+    recs = load_artifacts(art_dir)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    full = recs.get((arch, shape_name, "single", 0))
+    if full is None or full.get("status") != "ok":
+        return None
+    # find the two reduced-depth cost compiles
+    reduced = sorted(
+        [r for (a, s, m, k), r in recs.items()
+         if a == arch and s == shape_name and m == "single" and k > 0
+         and r.get("status") == "ok"],
+        key=lambda r: r["reduced_layers"])
+    if len(reduced) >= 2:
+        est = extrapolate(cfg, reduced[0], reduced[-1], cfg.n_layers)
+    else:  # fall back to raw (underestimates scan bodies; flagged)
+        est = {k: full[k] for k in ("flops_per_device", "bytes_per_device")}
+        est["collective_bytes_per_device"] = full["collective_bytes_per_device"]
+        est["_fallback"] = True
+
+    t_comp = est["flops_per_device"] / PEAK_FLOPS
+    t_mem = est["bytes_per_device"] / HBM_BW
+    t_coll = est["collective_bytes_per_device"]["_total"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global = est["flops_per_device"] * full["n_chips"]
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "collective_breakdown": est["collective_bytes_per_device"],
+        "memory_bytes": full["memory"],
+        "extrapolated": "_fallback" not in est,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    from repro.configs import ARCH_IDS, INPUT_SHAPES
+
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            r = analyze(args.art, arch, shape)
+            if r:
+                rows.append(r)
+                print(f"{arch:24s} {shape:12s} comp {r['compute_s']*1e3:8.2f}ms "
+                      f"mem {r['memory_s']*1e3:8.2f}ms coll {r['collective_s']*1e3:8.2f}ms "
+                      f"-> {r['dominant']:10s} useful {r['useful_ratio']*100:5.1f}%")
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

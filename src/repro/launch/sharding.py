@@ -1,0 +1,184 @@
+"""Sharding rules: param/input/cache PartitionSpecs per architecture family.
+
+Rules are path-pattern based and *divisibility-checked*: if a dim is not
+divisible by the product of requested mesh axes, the axis is dropped for
+that dim (replication) — guaranteeing every (arch x shape x mesh) combo
+lowers. Strategy:
+
+* tensor parallelism over ``model`` on head/FFN/expert-inner dims;
+* FSDP (param + grad sharding) over the data axes on the other matmul dim,
+  enabled per-arch via ``fsdp`` (required for kimi-k2's 2 TB of weights;
+  disabled for the paper-faithful per-client uplink step, which needs
+  params replicated over the client axes);
+* MoE expert dim over the data axes (expert parallelism);
+* batch dims of inputs/caches over the data axes; KV-cache head dim over
+  ``model`` when divisible, else the sequence dim.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+Axis = Any  # str | tuple[str, ...] | None
+
+
+import re
+
+
+def normalize_path(keystr: str) -> str:
+    """"['layers']['attn']['wq']" / "['blocks'][0]['wq']" -> "layers/attn/wq"."""
+    return "/".join(re.findall(r"[A-Za-z_0-9]+", keystr)).lower()
+
+
+def leaf_name(path: str) -> str:
+    return path.rsplit("/", 1)[-1]
+
+
+def _fits(shape_dim: int, axes: Axis, mesh) -> bool:
+    if axes is None:
+        return True
+    ax = (axes,) if isinstance(axes, str) else axes
+    n = math.prod(mesh.shape[a] for a in ax)
+    return shape_dim % n == 0 and shape_dim >= n
+
+
+def checked_spec(shape, axes_per_dim, mesh) -> P:
+    """Drop axes on dims where divisibility fails."""
+    out = []
+    for dim, axes in zip(shape, axes_per_dim):
+        out.append(axes if _fits(dim, axes, mesh) else None)
+    return P(*out)
+
+
+def param_rules(path: str, shape, cfg, mesh, *, fsdp: bool) -> P:
+    d = data_axes(mesh)
+    F = d if fsdp else None  # FSDP axis group
+    low = normalize_path(path)
+
+    def spec(*axes_per_dim):
+        return checked_spec(shape, axes_per_dim, mesh)
+
+    # embeddings / heads. NOTE: the embedding table is fully REPLICATED.
+    # XLA's PartitionGather cost evaluation hard-crashes (Check failure in
+    # ExpandDeviceGroupsWithIota, spmd_partitioner_util.cc:504) for several
+    # of our (vocab, d_model) shapes when either operand dim is sharded —
+    # measured on yi-6b/chatglm3/deepseek train_4k; qwen2 happened to pass.
+    # Replicating costs <= 2.3 GB/device (kimi-k2) and sidesteps the bug;
+    # the lm_head projection (a matmul, not a gather) stays tensor-sharded.
+    if "pos_embed" in low:
+        return spec(None, None)
+    if "embed" in low:
+        return spec(None, None)
+    if "lm_head" in low or "vision_proj" in low:
+        return spec(F, "model")
+    # MoE
+    if "router" in low:
+        return spec(*([None] * (len(shape) - 2)), None, None)
+    if "shared" in low:  # shared-expert MLP, stacked (L, D, Fs)/(L, Fs, D)
+        if leaf_name(low) in ("wi", "wg"):
+            return spec(None, F, "model") if len(shape) == 3 else spec(F, "model")
+        return spec(None, "model", F) if len(shape) == 3 else spec("model", F)
+    if "moe" in low and leaf_name(low) in ("wi", "wg"):
+        # (L, E, D, F): experts over data axes (expert parallel), F over model
+        return spec(None, d, None, "model") if len(shape) == 4 else spec(d, None, "model")
+    if "moe" in low and leaf_name(low) == "wo":
+        return spec(None, d, "model", None) if len(shape) == 4 else spec(d, "model", None)
+    # attention & dense mlp (stacked (L, in, out) or flat (in, out))
+    two = {"wq", "wk", "wv", "wi", "wg", "w_x", "w_gate", "w_r", "w_i",
+           "in_proj", "dt_proj"}
+    back = {"wo", "w_out", "out_proj"}
+    leaf = leaf_name(low)
+    for name in two:
+        if name == leaf:
+            if len(shape) == 3:
+                return spec(None, F, "model")
+            return spec(F, "model")
+    for name in back:
+        if name == leaf:
+            if len(shape) == 3:
+                return spec(None, "model", F)
+            return spec("model", F)
+    if leaf == "x_proj":  # (L, Di, R+2N): Di is model-sharded upstream
+        if len(shape) == 3:
+            return spec(None, "model", None)
+        return spec("model", None)
+    if leaf in ("a_log", "d_skip"):
+        if len(shape) == 3:
+            return spec(None, "model", None)
+        return spec("model", None) if len(shape) == 2 else spec("model")
+    if leaf == "conv_w":
+        return spec(*([None] * (len(shape) - 1)), "model")
+    if leaf in ("bq", "bk", "bv", "bi", "bo", "conv_b", "dt_bias", "lam"):
+        if len(shape) == 2:
+            return spec(None, "model")
+        return spec("model") if _fits(shape[-1], "model", mesh) else P(None)
+    # norms, biases, everything else: replicated
+    return P(*([None] * len(shape)))
+
+
+def tree_shardings(tree, cfg, mesh, *, fsdp: bool):
+    """NamedSharding pytree for a param(-like) pytree or its ShapeDtype tree."""
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, param_rules(pstr, leaf.shape, cfg, mesh, fsdp=fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def spec_tree(shardings):
+    return jax.tree_util.tree_map(lambda s: s.spec, shardings)
+
+
+def batch_specs(cfg, shape_cfg, mesh) -> dict:
+    """PartitionSpecs for the input batch dict."""
+    d = data_axes(mesh)
+    B = shape_cfg.global_batch
+    bdim = d if _fits(B, d, mesh) else None
+    specs = {"tokens": P(bdim, None)}
+    if shape_cfg.kind == "train":
+        specs["labels"] = P(bdim, None)
+    if cfg.family == "vlm" and shape_cfg.kind in ("train", "prefill"):
+        specs["patch_embeds"] = P(bdim, None, None)
+    if cfg.family == "audio" and shape_cfg.kind in ("train", "prefill"):
+        specs["frames"] = P(bdim, None, None)
+    return specs
+
+
+def cache_specs(cfg, shape_cfg, mesh, cache_tree) -> Any:
+    """Shard KV caches: batch over data axes; heads over model if divisible,
+    else the sequence/window dim; SSM inner dim over model."""
+    d = data_axes(mesh)
+
+    def one(path, leaf):
+        pstr = normalize_path(jax.tree_util.keystr(path))
+        s = leaf.shape
+        if "conv" in pstr and cfg.family == "ssm":  # (L,B,K-1,Di)
+            return NamedSharding(mesh, checked_spec(s, (None, d, None, "model"), mesh))
+        if pstr.endswith("/h") and len(s) == 4:  # ssm state (L,B,Di,N)
+            return NamedSharding(mesh, checked_spec(s, (None, d, "model", None), mesh))
+        if pstr.endswith("/h") and len(s) == 3:  # rglru state (G,B,W)
+            return NamedSharding(mesh, checked_spec(s, (None, d, "model"), mesh))
+        if pstr.endswith("/h") and len(s) == 2:  # rglru tail state (B,W)
+            return NamedSharding(mesh, checked_spec(s, (d, "model"), mesh))
+        if "conv" in pstr and len(s) == 4:  # rglru conv (G,B,3,W)
+            return NamedSharding(mesh, checked_spec(s, (None, d, None, "model"), mesh))
+        if "conv" in pstr and len(s) == 3:  # rglru tail conv (B,3,W)
+            return NamedSharding(mesh, checked_spec(s, (d, None, "model"), mesh))
+        if len(s) == 5:  # (L,B,S,KVH,hd)
+            if _fits(s[3], "model", mesh):
+                return NamedSharding(mesh, checked_spec(s, (None, d, None, "model", None), mesh))
+            return NamedSharding(mesh, checked_spec(s, (None, d, "model", None, None), mesh))
+        if len(s) == 4:  # per-block (B,S,KVH,hd)
+            if _fits(s[2], "model", mesh):
+                return NamedSharding(mesh, checked_spec(s, (d, None, "model", None), mesh))
+            return NamedSharding(mesh, checked_spec(s, (d, "model", None, None), mesh))
+        return NamedSharding(mesh, P(*([None] * len(s))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

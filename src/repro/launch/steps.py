@@ -1,0 +1,139 @@
+"""Step builders: train / train-approx (per-client uplink) / serve / prefill.
+
+``make_train_step``        — plain pjit step (baseline; optional per-shard
+                             uplink corruption for arbitrarily-sharded
+                             params, e.g. kimi-k2's FSDP+expert-parallel).
+``make_train_step_approx`` — the paper's technique as a first-class runtime
+                             feature: partial-manual ``shard_map`` over the
+                             client (data/pod) axes; each shard computes its
+                             cohort gradient, corrupts it through the
+                             simulated PHY with an independent channel, and
+                             the PS aggregation is the ``psum``. The model
+                             axis stays auto (XLA SPMD tensor parallelism).
+``make_serve_step``        — one-token decode against a KV cache.
+``make_prefill_step``      — full-sequence forward (inference prefill).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import aggregation as agg_lib
+from repro.core import transport as transport_lib
+from repro.launch.mesh import data_axes
+from repro.models import registry as R
+
+
+def make_train_step(cfg, opt, *, transport_cfg=None, mesh=None):
+    """pjit train step. If ``transport_cfg`` is set, applies *per-shard*
+    uplink corruption: a fully-manual elementwise shard_map where every chip
+    corrupts the gradient values it owns under an independent channel
+    (semantics documented in DESIGN.md Sec. 4: chip = radio)."""
+
+    def step(params, opt_state, batch, key):
+        loss, grads = jax.value_and_grad(R.loss_fn)(params, batch, cfg)
+        if transport_cfg is not None:
+            grads = corrupt_per_shard(grads, key, transport_cfg, mesh)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step
+
+
+def corrupt_per_shard(grads, key, transport_cfg, mesh):
+    """Elementwise PHY corruption of each chip's gradient shard."""
+    from repro.launch import sharding as sh
+
+    shardings = sh.tree_shardings(grads, None, mesh, fsdp=True)
+    specs = jax.tree_util.tree_map(lambda s: s.spec, shardings)
+    axes = set(mesh.axis_names)
+
+    def local(key, *leaves):
+        idx = jnp.int32(0)
+        for ax in mesh.axis_names:
+            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        k = jax.random.fold_in(key, idx)
+        flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+        flat_hat, _ = transport_lib.transmit_flat(flat, k, transport_cfg)
+        out, off = [], 0
+        for l in leaves:
+            out.append(flat_hat[off : off + l.size].reshape(l.shape).astype(l.dtype))
+            off += l.size
+        return tuple(out)
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    spec_leaves = jax.tree_util.tree_leaves(specs)
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        axis_names=axes,
+        in_specs=(P(),) + tuple(spec_leaves),
+        out_specs=tuple(spec_leaves),
+        check_vma=False,
+    )
+    out = fn(key, *leaves)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_train_step_approx(cfg, opt, transport_cfg, mesh):
+    """Paper-faithful per-client uplink: manual over the data/pod axes."""
+    d = data_axes(mesh)
+
+    def local_step(params, opt_state, batch, key):
+        def local_loss(p):
+            return R.loss_fn(p, batch, cfg)
+
+        loss, grads = jax.value_and_grad(local_loss)(params)
+        # grads travel (and psum) in the wire dtype: bf16 wire halves both
+        # airtime and the all-reduce bytes (see TransportConfig.wire_dtype)
+        wire = (jnp.bfloat16 if transport_cfg.wire_dtype == "bfloat16"
+                else jnp.float32)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(wire), grads)
+        grads, stats = agg_lib.approx_allreduce(grads, key, transport_cfg, d)
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        loss = jax.lax.pmean(loss, d)
+        # stats are per-client: aggregate so the output is truly replicated
+        stats = jax.tree_util.tree_map(lambda s: jax.lax.pmean(s, d), stats)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss, stats
+
+    def in_batch_specs(batch):
+        return {
+            k: P(d, *([None] * (v.ndim - 1))) for k, v in batch.items()
+        }
+
+    def step(params, opt_state, batch, key):
+        fn = jax.shard_map(
+            local_step,
+            mesh=mesh,
+            axis_names=set(d),
+            in_specs=(P(), P(), in_batch_specs(batch), P()),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False,
+        )
+        return fn(params, opt_state, batch, key)
+
+    return step
+
+
+def make_serve_step(cfg, *, ring: bool = False):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = R.decode_step(params, cache, tokens, pos, cfg, ring=ring)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        logits, _ = R.forward(params, batch, cfg)
+        # return only the last-position logits (what a server samples from)
+        return logits[:, -1]
+
+    return prefill_step

@@ -1,0 +1,140 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Conventions:
+* params are nested dicts of jnp arrays; layer-stacked leaves have a leading
+  L dimension and are consumed by ``jax.lax.scan``.
+* compute dtype is bf16 (configurable), normalizations and softmax in f32.
+* initializers take explicit PRNG keys (no global state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.bfloat16):
+    """LeCun-normal in f32, cast to param dtype."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotary half-pairs actually rotated."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, fraction: float, theta: float):
+    """Rotary embedding on the leading ``fraction`` of the head dim.
+
+    x: (..., S, H, hd); positions: broadcastable to (..., S).
+    ``fraction < 1`` implements partial rotary (e.g. ChatGLM's 2D-RoPE uses
+    half the head dim; the rest passes through unrotated).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, fraction, theta)
+    rot = inv.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    # NOTE: reshape+slice, NOT xr[..., 0::2] — strided indexing lowers to a
+    # stablehlo.gather whose SPMD partitioning check-crashes XLA (see
+    # transformer._embed_tokens); the reshaped pair-slice lowers to plain
+    # slices and partitions cleanly.
+    xp = xr.reshape(*xr.shape[:-1], rot // 2, 2)
+    x1 = xp[..., 0]
+    x2 = xp[..., 1]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, wi)
+    g = jnp.einsum("...d,df->...f", x, wg)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h, wo)
+
+
+def gelu_mlp(x: jax.Array, wi: jax.Array, bi, wo: jax.Array, bo) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, wi) + bi
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, wo) + bo
+
+
+def sinusoidal_positions(max_len: int, dim: int) -> jax.Array:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / dim))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def unstack_tree(params: Params, idx: int) -> Params:
+    """Take layer ``idx`` from a stacked param tree (for unrolled loops)."""
+    return jax.tree_util.tree_map(lambda p: p[idx], params)
+
+
+def maybe_shard(x: jax.Array, *axes_per_dim) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op off-mesh.
+
+    Each entry is an axis name, tuple of names, or None. Axes absent from
+    the ambient abstract mesh, or not dividing the dim, are dropped — so
+    model code can carry sharding hints without knowing the launch config
+    (smoke tests run mesh-less and skip the constraint entirely).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    # usable axes: present AND not manual (inside shard_map, manual axes are
+    # already collapsed out of the local view)
+    usable = {
+        name for name, ty in zip(mesh.axis_names, mesh.axis_types)
+        if "Manual" not in str(ty)
+    }
+    spec = []
+    for dim, axes in zip(x.shape, axes_per_dim):
+        if axes is None:
+            spec.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax = tuple(a for a in ax if a in usable)
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        spec.append(ax if ax and dim % n == 0 and dim >= n else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,98 @@
+"""Family -> implementation dispatch + input specs for every shape."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import audio, ssm, transformer
+
+
+def family_module(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm", "hybrid"):
+        return transformer
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "audio":
+        return audio
+    raise ValueError(cfg.family)
+
+
+def init_params(key, cfg: ModelConfig):
+    return family_module(cfg).init_params(key, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    return family_module(cfg).loss_fn(params, batch, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    return family_module(cfg).forward(params, batch, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int):
+    return family_module(cfg).init_cache(cfg, batch_size, cache_len)
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig, *, ring=False):
+    return family_module(cfg).decode_step(params, cache, tokens, pos, cfg, ring=ring)
+
+
+def uses_ring_cache(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k decodes through ring (sliding-window) caches."""
+    return shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm")
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    if uses_ring_cache(cfg, shape):
+        return cfg.decode_window
+    if cfg.family == "hybrid":
+        return min(shape.seq_len, cfg.local_window)
+    return shape.seq_len
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not). The skip list documented in DESIGN.md."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return False, ("enc-dec full attention; decoder spec'd <=448 positions, "
+                           "500k-token transcript decode has no analogue (DESIGN.md Sec.4)")
+        return True, ""
+    if shape.kind == "decode" and cfg.family == "audio":
+        return True, ""  # decoder-with-cache exists
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": sd((B, S), i32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = sd((B, S), i32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = sd((B, cfg.n_patches, cfg.vision_dim), f32)
+        if cfg.family == "audio":
+            specs["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), f32)
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sd((B, 1), i32)}
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, key) -> dict:
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    specs = input_specs(cfg, shape)
+    ks = jax.random.split(key, len(specs))
+    out = {}
+    for (name, spec), k in zip(sorted(specs.items()), ks):
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, spec.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+    return out

@@ -1,0 +1,177 @@
+"""Mamba-1 selective SSM (falcon-mamba family) — attention-free decoder.
+
+Block: RMSNorm -> in_proj (D -> 2*Di) -> [x: causal depthwise conv(k=4) ->
+SiLU -> selective scan] * SiLU(z) -> out_proj (Di -> D).
+
+Selective scan (parallel form): per token t and channel c,
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t      (state N per channel)
+    y_t = C_t . h_t + D_skip * x_t
+computed with ``jax.lax.associative_scan`` over the sequence; decode keeps a
+constant-size state (B, Di, N) + conv window (B, K-1, Di) — O(1) per token,
+which is what makes ``long_500k`` native for this family.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_params(key, cfg):
+    dtype = L.dtype_of(cfg)
+    D = cfg.d_model
+    Di = cfg.expand * D
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+    K = cfg.ssm_conv
+
+    def layer(k):
+        ks = jax.random.split(k, 8)
+        A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (Di, 1))
+        return {
+            "ln": jnp.zeros((D,), dtype),
+            "in_proj": L.dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+            "conv_w": (jax.random.normal(ks[1], (K, Di), jnp.float32) * 0.1).astype(dtype),
+            "conv_b": jnp.zeros((Di,), dtype),
+            "x_proj": L.dense_init(ks[2], (Di, R + 2 * N), dtype=dtype),
+            "dt_proj": L.dense_init(ks[3], (R, Di), dtype=dtype),
+            "dt_bias": jnp.full((Di,), -4.0, jnp.float32),  # softplus ~ 0.018
+            "A_log": jnp.log(A),
+            "D_skip": jnp.ones((Di,), jnp.float32),
+            "out_proj": L.dense_init(ks[4], (Di, D), dtype=dtype),
+        }
+
+    ks = jax.random.split(key, 3)
+    lk = jax.random.split(ks[0], cfg.n_layers)
+    return {
+        "embed": L.embed_init(ks[1], (cfg.vocab_size, D), dtype),
+        "layers": jax.vmap(layer)(lk),
+        "final_norm": jnp.zeros((D,), dtype),
+        "lm_head": L.dense_init(ks[2], (D, cfg.vocab_size), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,Di); w: (K,Di)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, j : j + x.shape[1]].astype(jnp.float32) * w[j].astype(jnp.float32)
+              for j in range(K))
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_scan(xc, p, cfg, h0=None):
+    """Selective scan. xc: (B,S,Di) post-conv. Returns (y, h_last)."""
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+    proj = jnp.einsum("bsd,dr->bsr", xc, p["x_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", proj[..., :R], p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"]
+    )  # (B,S,Di)
+    Bm = proj[..., R : R + N]  # (B,S,N)
+    Cm = proj[..., R + N :]  # (B,S,N)
+    A = -jnp.exp(p["A_log"])  # (Di,N)
+    xf = xc.astype(jnp.float32)
+    a = jnp.exp(dt[..., None] * A)  # (B,S,Di,N)
+    b = (dt * xf)[..., None] * Bm[..., None, :]  # (B,S,Di,N)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(comb, (a, b), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cm) + p["D_skip"] * xf
+    return y.astype(xc.dtype), hs[:, -1]
+
+
+def _block(x, p, cfg):
+    h = L.rmsnorm(x, p["ln"])
+    Di = cfg.expand * cfg.d_model
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    xb, z = xz[..., :Di], xz[..., Di:]
+    xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+    xb = jax.nn.silu(xb.astype(jnp.float32)).astype(x.dtype)
+    y, _ = _ssm_scan(xb, p, cfg)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def forward(params, batch, cfg):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    x = L.maybe_shard(x, ("pod", "data"), None, None)  # see transformer._embed_tokens
+
+    def body(carry, pl):
+        return _block(carry, pl, cfg), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["layers"], unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg):
+    from repro.models.transformer import _gold_logit
+
+    logits, _ = forward(params, batch, cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(lse - _gold_logit(logits, labels))
+
+
+def init_cache(cfg, batch_size: int, cache_len: int = 0, dtype=None):
+    """Constant-size state: cache_len is ignored (kept for API parity)."""
+    dtype = dtype or L.dtype_of(cfg)
+    Di = cfg.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch_size, Di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch_size, cfg.ssm_conv - 1, Di), dtype),
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg, *, ring: bool = False):
+    x = params["embed"][tokens]  # (B,1,D)
+    x = L.maybe_shard(x, ("pod", "data"), None, None)
+    Di = cfg.expand * cfg.d_model
+    N = cfg.ssm_state
+    R = _dt_rank(cfg)
+
+    def body(carry, inp):
+        h = carry
+        pl, hstate, conv = inp
+        hh = L.rmsnorm(h, pl["ln"])
+        xz = jnp.einsum("btd,de->bte", hh, pl["in_proj"])[:, 0]
+        xb, z = xz[..., :Di], xz[..., Di:]
+        win = jnp.concatenate([conv, xb[:, None]], axis=1)  # (B,K,Di)
+        w = pl["conv_w"].astype(jnp.float32)
+        xc = (jnp.sum(win.astype(jnp.float32) * w[None], axis=1)
+              + pl["conv_b"].astype(jnp.float32))
+        xc = jax.nn.silu(xc)
+        proj = (xc @ pl["x_proj"].astype(jnp.float32))
+        dt = jax.nn.softplus(proj[..., :R] @ pl["dt_proj"].astype(jnp.float32) + pl["dt_bias"])
+        Bm = proj[..., R : R + N]
+        Cm = proj[..., R + N :]
+        A = -jnp.exp(pl["A_log"])
+        a = jnp.exp(dt[..., None] * A)  # (B,Di,N)
+        hnew = a * hstate + (dt * xc)[..., None] * Bm[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", hnew, Cm) + pl["D_skip"] * xc
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        out = jnp.einsum("be,ed->bd", y.astype(h.dtype), pl["out_proj"])
+        return h + out[:, None], (hnew, win[:, 1:])
+
+    x, (hs, convs) = jax.lax.scan(body, x, (params["layers"], cache["h"], cache["conv"]), unroll=cfg.scan_unroll)
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"]).astype(jnp.float32)
+    return logits, {"h": hs, "conv": convs}

@@ -1,0 +1,5 @@
+"""Optimizers (pytree-native, optax-style (init, update) pairs)."""
+
+from repro.optim.sgd import sgd, momentum_sgd
+from repro.optim.adam import adam
+from repro.optim.schedules import constant, cosine, warmup_cosine

@@ -1,0 +1,39 @@
+"""Adam (used by non-FL baselines; FedSGD itself is stateless SGD)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.sgd import Optimizer
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        eta = lr_fn(state["step"])
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: (
+                p.astype(jnp.float32) - eta * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            ).astype(p.dtype),
+            params, m, v)
+        return new, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (step -> lr, jnp-friendly)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    base = cosine(lr, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        w = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return w * base(jnp.maximum(step - warmup, 0))
+
+    return fn

@@ -1,0 +1,51 @@
+"""SGD — the paper's optimizer (FedSGD, eq. (6): w <- w - eta g)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        eta = lr_fn(state["step"])
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum_sgd(lr, beta: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        eta = lr_fn(state["step"])
+        mu = jax.tree_util.tree_map(
+            lambda m, g: beta * m + g.astype(jnp.float32), state["mu"], grads)
+        new = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - eta * m).astype(p.dtype), params, mu)
+        return new, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update)

@@ -1,0 +1,56 @@
+"""Gradient-bound certificates (paper Sec. III) vs brute-force gradients."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bounds as B
+
+
+def test_final_layer_delta_bound():
+    layers = [B.LayerSpec(8, "sigmoid"), B.LayerSpec(10, "softmax_xent")]
+    bs = B.gradient_bound(layers, input_bound=1.0)
+    assert all(b > 0 for b in bs)
+
+
+def test_relu_is_uncertified():
+    layers = [B.LayerSpec(8, "relu"), B.LayerSpec(10, "softmax_xent")]
+    assert B.certified_clamp_bound(layers) == 2.0  # falls back to paper default
+
+
+def test_certificate_dominates_empirical_gradient():
+    """Build the paper's setting (sigmoid hidden, softmax+xent out, |w|<1)
+    and check max|dC/dw| over random draws <= the Sec. III certificate."""
+    sizes = [6, 5, 4]  # input 6 -> hidden 5 -> classes 4
+    layers = [B.LayerSpec(5, "sigmoid", 1.0), B.LayerSpec(4, "softmax_xent", 1.0)]
+    cert = B.gradient_bound(layers, input_bound=1.0)
+
+    def loss(params, x, y):
+        w1, w2 = params
+        a1 = jax.nn.sigmoid(x @ w1)
+        logits = a1 @ w2
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * y, -1))
+
+    key = jax.random.PRNGKey(0)
+    worst = [0.0, 0.0]
+    for i in range(20):
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
+        w1 = jax.random.uniform(k1, (6, 5), minval=-1, maxval=1)
+        w2 = jax.random.uniform(k2, (5, 4), minval=-1, maxval=1)
+        x = jax.random.uniform(k3, (16, 6), minval=-1, maxval=1)
+        y = jax.nn.one_hot(jax.random.randint(k4, (16,), 0, 4), 4)
+        g1, g2 = jax.grad(loss)((w1, w2), x, y)
+        worst[0] = max(worst[0], float(jnp.abs(g1).max()))
+        worst[1] = max(worst[1], float(jnp.abs(g2).max()))
+    assert worst[0] <= cert[0]
+    assert worst[1] <= cert[1]
+    # and the empirical |g| is, as the paper observes, well below 1
+    assert max(worst) < 1.0
+
+
+def test_clamp_bound_power_of_two():
+    layers = [B.LayerSpec(4, "sigmoid"), B.LayerSpec(4, "softmax_xent")]
+    b = B.certified_clamp_bound(layers)
+    assert b <= 2.0 and math.log2(b) == int(math.log2(b))

@@ -1,0 +1,76 @@
+"""Property tests for the float <-> symbol codec (paper Sec. IV-A)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import float_codec as FC
+
+BITS_PER_SYMBOL = [2, 4, 8]
+
+finite_floats = st.lists(
+    st.floats(min_value=-1.9375, max_value=1.9375, allow_nan=False, width=32),
+    min_size=1, max_size=64,
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(finite_floats, st.sampled_from(BITS_PER_SYMBOL))
+def test_word_symbol_roundtrip(vals, k):
+    x = jnp.asarray(vals, jnp.float32)
+    u = FC.f32_to_bits(x)
+    sym = FC.words_to_symbols(u, k)
+    assert sym.shape == (len(vals), 32 // k)
+    assert int(sym.max()) < (1 << k)
+    back = FC.symbols_to_words(sym, k)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(u))
+
+
+@settings(max_examples=30, deadline=None)
+@given(finite_floats, st.sampled_from(BITS_PER_SYMBOL))
+def test_interleaver_is_bijective(vals, k):
+    x = jnp.asarray(vals, jnp.float32)
+    sym = FC.words_to_symbols(FC.f32_to_bits(x), k)
+    stream = FC.interleave(sym)
+    assert stream.shape == (sym.size,)
+    back = FC.deinterleave(stream, sym.shape[0], sym.shape[1])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(sym))
+    # column-major property: consecutive stream symbols come from
+    # consecutive *words* (burst spreading), not the same word
+    if sym.shape[0] > 1:
+        assert int(stream[0]) == int(sym[0, 0]) and int(stream[1]) == int(sym[1, 0])
+
+
+def test_bit30_clamp_bounds_everything():
+    # every possible exponent pattern, incl. NaN/Inf encodings
+    u = jnp.arange(0, 2**16, dtype=jnp.uint32) << 16
+    clamped = FC.bits_to_f32(FC.clamp_exponent_bits(u, 2.0))
+    assert bool(jnp.isfinite(clamped).all())
+    assert float(jnp.abs(clamped).max()) < 2.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-1.9375, max_value=1.9375, allow_nan=False, width=32))
+def test_clamp_is_identity_on_valid_gradients(v):
+    """Values already in (-2, 2) pass through the receiver clamp unchanged."""
+    u = FC.f32_to_bits(jnp.asarray([v], jnp.float32))
+    out = FC.bits_to_f32(FC.clamp_exponent_bits(u, 2.0))
+    assert float(out[0]) == pytest.approx(v, abs=0.0)
+
+
+def test_clamp_idempotent():
+    u = jnp.arange(0, 1 << 14, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
+    once = FC.clamp_exponent_bits(u, 2.0)
+    twice = FC.clamp_exponent_bits(once, 2.0)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@pytest.mark.parametrize("bound,cleared", [(2.0, 1), (1.0, 1), (2.0**-64, 2),
+                                           (2.0**-126, 7)])
+def test_exponent_mask_tightens_with_bound(bound, cleared):
+    mask = FC.exponent_clamp_mask(bound)
+    n_cleared = sum(1 for b in range(23, 31) if not (mask >> b) & 1)
+    assert n_cleared == cleared
+    assert (mask >> 31) & 1 == 1  # sign bit never cleared

@@ -1,0 +1,145 @@
+"""Launch-layer unit tests that need no devices: sharding rules, input
+specs for all 40 (arch x shape) combos, the HLO collective parser, the
+latency model, attention variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core import transport as T
+from repro.core.latency import PhyTimings, round_airtime
+from repro.models import registry as R
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_and_caches_build(arch, shape_name):
+    """eval_shape-level coverage of every (arch x shape) pair — cheap proof
+    that params/inputs/caches are constructible for all 40 combos."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = R.supports_shape(cfg, shape)
+    if not ok:
+        pytest.skip(reason)
+    specs = R.input_specs(cfg, shape)
+    assert "tokens" in specs
+    if shape.kind == "train":
+        assert specs["labels"].shape == specs["tokens"].shape
+    if shape.kind == "decode":
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        clen = R.cache_len_for(cfg, shape)
+        if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+            assert clen == cfg.decode_window  # ring cache, not 500k
+        cache = jax.eval_shape(lambda: R.init_cache(cfg, shape.global_batch, clen))
+        assert len(jax.tree_util.tree_leaves(cache)) > 0
+    # params build abstractly for the FULL config (no allocation)
+    params = jax.eval_shape(lambda: R.init_params(jax.random.PRNGKey(0), cfg))
+    n = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+    assert n > 1e6
+
+
+def test_param_scale_sanity():
+    """Full-config param counts are in the advertised ballpark."""
+    expect = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.3e12),
+        "yi-6b": (5e9, 7.5e9),
+        "deepseek-coder-33b": (30e9, 37e9),
+        "qwen2-1.5b": (1.2e9, 2.0e9),
+        "falcon-mamba-7b": (6e9, 8.5e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = get_config(arch)
+        params = jax.eval_shape(lambda c=cfg: R.init_params(jax.random.PRNGKey(0), c))
+        n = float(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params)))
+        assert lo < n < hi, (arch, n)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+
+    hlo = """
+HloModule jit_step
+
+%region_0.2 (arg: f32[8]) -> f32[8] {
+  %x = f32[16,128]{1,0} all-gather(%p), dimensions={0}
+  %y = f32[128]{0} all-reduce(%q), to_apply=%add
+}
+
+%region_1.3 (arg: s32[]) -> pred[] {
+  %c = s32[] constant(28)
+  %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p: f32[2]) -> f32[2] {
+  %w = (s32[], f32[8]) while(%t), condition=%region_1.3, body=%region_0.2
+  %z = f32[64,64]{1,0} all-to-all(%r), dimensions={1}
+}
+"""
+    out = parse_collectives(hlo, default_trip=99)
+    ag = 16 * 128 * 4 * 28  # all-gather in body x trip count 28
+    ar = 2 * 128 * 4 * 28  # all-reduce counts 2x (ring)
+    a2a = 64 * 64 * 4  # entry: once
+    assert out["all-gather"] == ag
+    assert out["all-reduce"] == ar
+    assert out["all-to-all"] == a2a
+    assert out["_total"] == ag + ar + a2a
+
+
+def test_sharding_rules_divisibility():
+    """Every param of every arch gets a spec whose axes divide the dims."""
+    import math
+
+    from repro.launch import sharding as sh
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    mesh = FakeMesh()
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        params = jax.eval_shape(lambda c=cfg: R.init_params(jax.random.PRNGKey(0), c))
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        for path, leaf in flat:
+            spec = sh.param_rules(jax.tree_util.keystr(path), leaf.shape, cfg,
+                                  mesh, fsdp=True)
+            for dim, axes in zip(leaf.shape, tuple(spec)):
+                if axes is None:
+                    continue
+                ax = (axes,) if isinstance(axes, str) else axes
+                n = math.prod(mesh.shape[a] for a in ax)
+                assert dim % n == 0, (arch, jax.tree_util.keystr(path), spec)
+
+
+def test_latency_model_orderings():
+    t = PhyTimings()
+    n_bits = 32 * 100_000
+    approx = T.TxStats(*map(jnp.float32, (n_bits / 2, 1, 123, n_bits)))
+    ecrt = T.TxStats(*map(jnp.float32, (2 * n_bits / 2 * 1.2, 1.2, 0, n_bits)))
+    ta = float(round_airtime(approx, t, "approx"))
+    te = float(round_airtime(ecrt, t, "ecrt"))
+    assert te > 2.0 * ta  # rate-1/2 + retx + FEC stall
+    # higher-order modulation shrinks airtime
+    approx256 = T.TxStats(*map(jnp.float32, (n_bits / 8, 1, 123, n_bits)))
+    assert float(round_airtime(approx256, t, "approx")) < ta
+
+
+def test_blockwise_attention_grad_matches():
+    """Gradients (not just outputs) agree between attention impls."""
+    from repro.models import attention as A
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 256, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 16))
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) ** 2)
+
+    g1 = jax.grad(loss(lambda *a: A.attend_train(*a, causal=True)))(q, k, v)
+    g2 = jax.grad(loss(lambda *a: A.attend_train_blockwise(
+        *a, causal=True, block_q=64, block_kv=64)))(q, k, v)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)

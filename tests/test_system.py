@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's three headline behaviours, at test scale:
+  1. naive erroneous transmission collapses FL to chance accuracy;
+  2. the proposed approximate scheme learns (close to error-free);
+  3. ECRT reaches the same accuracy but pays >= 2x airtime.
+Plus: the e2e train/serve drivers run.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.data import synth_mnist
+from repro.fl import partition
+from repro.fl.loop import run_fl
+
+
+@pytest.fixture(scope="module")
+def fl_world():
+    (img, lab), (ti, tl) = synth_mnist.train_test(120, 25, seed=1)
+    parts = partition.non_iid_partition(img, lab, n_clients=10)
+    cx, cy = partition.stack_clients(parts, per_client=96)
+    return cx, cy, ti, tl
+
+
+@pytest.mark.slow
+def test_paper_headline_ordering(fl_world):
+    cx, cy, ti, tl = fl_world
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+
+    def run(mode, snr=10.0):
+        tcfg = T.TransportConfig(mode=mode, channel=CH.ChannelConfig(snr_db=snr),
+                                 simulate_fec=False, ecrt_expected_tx=1.1)
+        return run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=60,
+                      batch_per_round=32, eval_every=59)
+
+    perfect = run("perfect")
+    naive = run("naive")
+    approx = run("approx")
+    ecrt = run("ecrt")
+
+    assert perfect.final_accuracy > 0.45
+    assert naive.final_accuracy < 0.25  # collapse (paper Fig. 3)
+    assert approx.final_accuracy > naive.final_accuracy + 0.2
+    assert approx.final_accuracy > 0.5 * perfect.final_accuracy
+    # same rounds, ECRT bits exact but slower air
+    assert ecrt.final_accuracy >= approx.final_accuracy - 0.15
+    assert ecrt.airtime_s[-1] > 2.0 * approx.airtime_s[-1]
+
+
+@pytest.mark.slow
+def test_train_driver_e2e():
+    env = {**os.environ, "PYTHONPATH": "src",
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+         "--reduced", "--mesh-shape", "2,2", "--steps", "8", "--batch", "4",
+         "--seq", "64", "--mode", "approx", "--snr-db", "20"],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    lines = [l for l in out.stdout.splitlines() if l.startswith("step")]
+    first = float(lines[0].split("loss")[1].split()[0])
+    last = float(lines[-1].split("loss")[1].split()[0])
+    assert last < first, out.stdout
+
+
+@pytest.mark.slow
+def test_serve_driver_e2e():
+    env = {**os.environ, "PYTHONPATH": "src"}
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "falcon-mamba-7b",
+         "--batch", "2", "--prompt-len", "8", "--gen", "4"],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "tok/s" in out.stdout

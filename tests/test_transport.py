@@ -1,0 +1,123 @@
+"""Transport pipeline: mode semantics, stats, chunking, ECRT exactness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as CH
+from repro.core import transport as T
+
+
+def _cfg(**kw):
+    ch = kw.pop("channel", CH.ChannelConfig(snr_db=10.0))
+    return T.TransportConfig(channel=ch, **kw)
+
+
+@pytest.fixture(scope="module")
+def payload():
+    return jax.random.uniform(jax.random.PRNGKey(0), (4096,), minval=-0.99, maxval=0.99)
+
+
+def test_perfect_is_identity(payload):
+    out, st = T.transmit_flat(payload, jax.random.PRNGKey(1), _cfg(mode="perfect"))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(payload))
+    assert float(st.ber) == 0.0
+
+
+def test_naive_produces_unbounded_garbage(payload):
+    """The paper's collapse baseline: raw bit errors give NaN/huge values."""
+    out, st = T.transmit_flat(payload, jax.random.PRNGKey(1), _cfg(mode="naive"))
+    assert float(st.ber) > 0.01
+    assert (~jnp.isfinite(out)).any() or float(jnp.abs(out).max()) > 2.0
+
+
+def test_approx_is_bounded_and_finite(payload):
+    """Fig. 1: with bit-30 forced to 0 the received gradient is always a
+    finite float with |g| < 2 — no NaN/Inf can be decoded."""
+    for snr in (0.0, 10.0, 20.0):
+        cfg = _cfg(mode="approx", channel=CH.ChannelConfig(snr_db=snr))
+        out, st = T.transmit_flat(payload, jax.random.PRNGKey(2), cfg)
+        assert bool(jnp.isfinite(out).all())
+        assert float(jnp.abs(out).max()) < 2.0
+
+
+def test_approx_error_shrinks_with_snr(payload):
+    errs = []
+    for snr in (5.0, 15.0, 25.0):
+        cfg = _cfg(mode="approx", channel=CH.ChannelConfig(snr_db=snr))
+        out, _ = T.transmit_flat(payload, jax.random.PRNGKey(3), cfg)
+        errs.append(float(jnp.mean(jnp.abs(out - payload))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_chunked_matches_unchunked_semantics(payload):
+    """Chunking changes RNG stream (per-chunk keys) but must preserve the
+    distributional contract: same BER scale, bounded outputs, exact stats
+    bookkeeping."""
+    cfg = _cfg(mode="approx", chunk_elems=1024)
+    out, st = T.transmit_flat(payload, jax.random.PRNGKey(4), cfg)
+    assert out.shape == payload.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(jnp.abs(out).max()) < 2.0
+    cfg0 = _cfg(mode="approx")
+    out0, st0 = T.transmit_flat(payload, jax.random.PRNGKey(4), cfg0)
+    assert float(st.n_bits) == float(st0.n_bits)
+    assert float(st.data_symbols) == float(st0.data_symbols)
+    assert float(st.ber) == pytest.approx(float(st0.ber), rel=0.2)
+
+
+def test_pytree_roundtrip_structure():
+    tree = {"a": jnp.ones((3, 5)), "b": [jnp.zeros((7,)), jnp.full((2, 2), 0.5)]}
+    out, st = T.transmit_pytree(tree, jax.random.PRNGKey(5), _cfg(mode="perfect"))
+    assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_ecrt_real_chain_is_exact():
+    """Rate-1/2 LDPC + retransmission delivers exact bits (paper: 'all the
+    bits are received correctly by the PS')."""
+    x = jax.random.uniform(jax.random.PRNGKey(6), (512,), minval=-1, maxval=1)
+    cfg = _cfg(mode="ecrt", channel=CH.ChannelConfig(snr_db=12.0), max_tx=6)
+    out, st = T.transmit_flat(x, jax.random.PRNGKey(7), cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    assert float(st.ber) == 0.0
+    assert float(st.transmissions) >= 1.0
+
+
+def test_ecrt_analytic_model(payload):
+    cfg = _cfg(mode="ecrt", simulate_fec=False, ecrt_expected_tx=1.25)
+    out, st = T.transmit_flat(payload, jax.random.PRNGKey(8), cfg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(payload))
+    # rate 1/2 => 2x symbols, times E[tx]
+    k = cfg.scheme.bits_per_symbol
+    assert float(st.data_symbols) == pytest.approx(
+        2 * payload.size * 32 / k * 1.25)
+
+
+def test_bf16_wire_halves_airtime_and_stays_bounded(payload):
+    """Beyond-paper 16-bit uplink: bf16 shares f32's exponent layout, so the
+    bit-clamp applies verbatim at half the symbols."""
+    f32 = _cfg(mode="approx")
+    b16 = _cfg(mode="approx", wire_dtype="bfloat16")
+    out32, st32 = T.transmit_flat(payload, jax.random.PRNGKey(9), f32)
+    out16, st16 = T.transmit_flat(payload, jax.random.PRNGKey(9), b16)
+    assert float(st16.data_symbols) == pytest.approx(float(st32.data_symbols) / 2)
+    assert bool(jnp.isfinite(out16).all())
+    assert float(jnp.abs(out16).max()) < 2.0
+    # error scale comparable (clamp works identically on the bf16 exponent)
+    assert float(jnp.abs(out16 - payload).mean()) < 3 * max(
+        float(jnp.abs(out32 - payload).mean()), 1e-3)
+
+
+def test_bf16_wire_noiseless_is_pure_quantization(payload):
+    cfg = _cfg(mode="approx", wire_dtype="bfloat16",
+               channel=CH.ChannelConfig(snr_db=80.0, fading="awgn"))
+    out, st = T.transmit_flat(payload, jax.random.PRNGKey(10), cfg)
+    want = payload.astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
