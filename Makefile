@@ -1,0 +1,21 @@
+# Developer entry points. Everything runs from the repo root with no install
+# step; src/ goes on PYTHONPATH.
+
+PY := python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke docs-check
+
+# Tier-1 verify (same command the CI driver runs).
+test:
+	$(PY) -m pytest -x -q
+
+# Quick pass over the benchmark suites that exercise the hot paths
+# (single-client kernel, batched multi-client engine) — minutes, not hours.
+bench-smoke:
+	$(PY) -m benchmarks.run --only kernel,scaling
+
+# Fails if a public module (or public function) under src/repro/core/ lacks
+# a docstring.
+docs-check:
+	$(PY) tools/docs_check.py

@@ -1,0 +1,120 @@
+"""Multi-client uplink scaling: batched engine vs per-client Python loop.
+
+The production question behind ``transport.transmit_batch``: serving M
+clients per round, does one fused (vmapped / 2-D-grid) computation beat M
+sequential single-client pipelines? We sweep the cohort size 1 -> 1024 and
+report floats/sec through the approx mode.
+
+Two regimes, both reported:
+
+* **dispatch-bound** (small per-client payloads, the serving sweet spot —
+  e.g. per-layer or quantized updates): the loop pays per-call dispatch +
+  key-fold + stack overhead M times; the batch pays it once. This is where
+  the headline >= 5x at batch 64 comes from.
+* **compute-bound** (64k-float payloads): on CPU both spend their time in
+  the channel RNG, so the ratio approaches 1x; on TPU this regime belongs
+  to the fused batched Pallas kernel (one launch, full VPU occupancy — see
+  ``benchmarks/kernel_throughput.py`` for the structural HBM argument).
+
+Also verifies the engine contract at scale: 64 clients x 64k floats in ONE
+jitted call, received bits identical to a 64-iteration ``transmit_flat``
+loop under the same fold_in key schedule (so mean BER matches exactly, well
+within any statistical tolerance).
+
+The loop baseline is the *best possible* loop: the single-client transmit is
+jitted once and replayed, so the gap is overhead + lost cross-client
+parallelism, not tracing time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import channel as CH
+from repro.core import transport as T
+
+HEADLINE_BATCH = 64
+N_SMALL = 64  # dispatch-bound per-client payload (floats)
+
+
+def _cfg():
+    return T.TransportConfig(mode="approx", channel=CH.ChannelConfig(snr_db=10.0))
+
+
+def _loop_fn(single, key, m):
+    def loop_all(xb):
+        outs = []
+        for i in range(m):
+            outs.append(single(xb[i], jax.random.fold_in(key, i))[0])
+        return jnp.stack(outs)
+
+    return loop_all
+
+
+def run(quick: bool = True):
+    cfg = _cfg()
+    key = jax.random.PRNGKey(0)
+    single = jax.jit(lambda xc, kc: T.transmit_flat(xc, kc, cfg))
+    batched = jax.jit(lambda xb, k: T.transmit_batch(xb, k, cfg))
+
+    # --- cohort-size sweep, dispatch-bound regime -------------------------
+    cohorts = (1, 4, 16, 64) if quick else (1, 4, 16, 64, 256, 1024)
+    ratio64 = None
+    for m in cohorts:
+        xb = jax.random.uniform(
+            jax.random.PRNGKey(1), (m, N_SMALL), minval=-0.99, maxval=0.99)
+        us_batch = timeit(batched, xb, key, iters=3)
+        emit(f"scaling/batch_{m}", us_batch,
+             f"{m * N_SMALL / (us_batch / 1e6):.3e} floats/s "
+             f"({m} clients x {N_SMALL} floats fused)")
+        if m == HEADLINE_BATCH:
+            us_loop = timeit(_loop_fn(single, key, m), xb, iters=3)
+            ratio64 = us_loop / us_batch
+            emit(f"scaling/loop_{m}", us_loop,
+                 f"{m * N_SMALL / (us_loop / 1e6):.3e} floats/s "
+                 f"({m} jitted single-client calls)")
+            emit(f"scaling/speedup_{m}", 0.0,
+                 f"batched {ratio64:.1f}x faster than looped at {m} clients "
+                 f"x {N_SMALL} floats (dispatch-bound)")
+
+    # --- heterogeneous links cost nothing extra ---------------------------
+    m = HEADLINE_BATCH
+    xb = jax.random.uniform(
+        jax.random.PRNGKey(1), (m, N_SMALL), minval=-0.99, maxval=0.99)
+    snr = jnp.linspace(0.0, 30.0, m)
+    het = jax.jit(lambda xb, k: T.transmit_batch(xb, k, cfg, snr_db=snr))
+    us_het = timeit(het, xb, key, iters=3)
+    emit(f"scaling/heterogeneous_{m}", us_het,
+         f"per-client SNR 0..30 dB, {m * N_SMALL / (us_het / 1e6):.3e} floats/s")
+
+    # --- contract at scale: 64 x 64k in one jitted call == 64-iter loop ---
+    # (each side runs twice total: one compile/warm pass, one timed pass
+    # whose outputs are reused for the equivalence check)
+    import time
+
+    n_big = 1 << 16
+    xb = jax.random.uniform(
+        jax.random.PRNGKey(2), (m, n_big), minval=-0.99, maxval=0.99)
+    jax.block_until_ready(batched(xb, key))  # compile
+    t0 = time.perf_counter()
+    out_b, st_b = jax.block_until_ready(batched(xb, key))
+    us_big = (time.perf_counter() - t0) * 1e6
+    emit(f"scaling/batch_{m}x{n_big}", us_big,
+         f"{m * n_big / (us_big / 1e6):.3e} floats/s (compute-bound, one jit call)")
+    loop_all = _loop_fn(single, key, m)
+    jax.block_until_ready(loop_all(xb))  # compile
+    t0 = time.perf_counter()
+    loop_out = jax.block_until_ready(loop_all(xb))
+    us_loop_big = (time.perf_counter() - t0) * 1e6
+    emit(f"scaling/loop_{m}x{n_big}", us_loop_big,
+         f"{m * n_big / (us_loop_big / 1e6):.3e} floats/s "
+         f"(compute-bound: CPU channel-RNG limited; TPU kernel regime)")
+    ber_b = float(jnp.mean(st_b.ber))
+    identical = bool((np.asarray(out_b) == np.asarray(loop_out)).all())
+    emit(f"scaling/equivalence_{m}x{n_big}", 0.0,
+         f"mean BER {ber_b:.5f}; batch == loop bit-for-bit: {identical}")
+    assert identical, "batched uplink diverged from the per-client loop"
+    return ratio64

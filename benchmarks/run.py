@@ -17,6 +17,7 @@ SUITES = {
     "table1": ("benchmarks.msb_protection", "Gray 16-QAM MSB protection (Table I)"),
     "ecrt": ("benchmarks.ecrt_overhead", "LDPC E[tx] + airtime model"),
     "kernel": ("benchmarks.kernel_throughput", "fused kernel vs jnp reference"),
+    "scaling": ("benchmarks.clients_scaling", "batched multi-client uplink scaling"),
     "fig3": ("benchmarks.accuracy_vs_time", "accuracy vs comm-time (Fig. 3)"),
     "fig4": ("benchmarks.same_snr_same_ber", "same-SNR / same-BER (Fig. 4)"),
     "fedavg": ("benchmarks.fedavg_ablation", "FedAvg + adaptive scaling ablation"),

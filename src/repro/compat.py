@@ -1,0 +1,197 @@
+"""Forward-compatibility shims: the jax >= 0.7 sharding surface on jax 0.4.x.
+
+The codebase is written against the modern API —
+
+* ``jax.shard_map(f, mesh=..., axis_names=..., in_specs=..., out_specs=...,
+  check_vma=...)`` (partial-manual by default, ambient mesh when ``mesh`` is
+  omitted),
+* ``jax.set_mesh(mesh)`` as a context manager,
+* ``jax.sharding.get_abstract_mesh()`` with per-axis ``axis_types`` that mark
+  axes ``Manual`` inside ``shard_map``,
+* ``jax.lax.axis_size(name)``.
+
+Older jax (the 0.4.x line pinned in some CI images) spells these
+``jax.experimental.shard_map.shard_map(..., check_rep=..., auto=...)`` and has
+no ambient-mesh notion at all. :func:`install` bridges the gap by *adding*
+the missing attributes — it never overwrites an attribute the running jax
+already provides, so on a modern jax it is a no-op and the native
+implementations win.
+
+Ambient state (the mesh set by ``set_mesh``, the manual axes of the
+innermost ``shard_map``) is tracked in a thread-local here and consumed by
+``get_abstract_mesh`` — which is exactly how ``models.layers.maybe_shard``
+decides which sharding hints are applicable.
+
+Imported for its side effect from ``repro/__init__.py``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+
+_state = threading.local()  # .mesh: ambient Mesh | None; .manual: frozenset
+
+# True when the running jax predates the modern sharding API (i.e. the shims
+# below are live). Feature-gates code paths whose lowering the legacy XLA
+# cannot handle (e.g. tiled all_to_all inside partial-manual shard_map, which
+# hard-crashes spmd_partitioner.cc's IsManualSubgroup check).
+LEGACY_JAX = not hasattr(jax, "shard_map")
+
+
+def _ambient_mesh():
+    return getattr(_state, "mesh", None)
+
+
+def _manual_axes() -> frozenset:
+    return getattr(_state, "manual", frozenset())
+
+
+class _AbstractMeshView:
+    """Duck-type of the modern AbstractMesh: axis_names / shape / axis_types.
+
+    ``axis_types`` entries stringify to 'Manual' for axes collapsed by the
+    innermost shard_map and 'Auto' otherwise — the only property callers
+    inspect (``"Manual" in str(ty)``).
+    """
+
+    def __init__(self, mesh, manual: frozenset):
+        self.axis_names = tuple(mesh.axis_names)
+        self.shape = dict(mesh.shape)
+        self.axis_types = tuple(
+            "Manual" if a in manual else "Auto" for a in self.axis_names
+        )
+
+
+def _get_abstract_mesh():
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return None  # callers guard with `mesh is None or not mesh.axis_names`
+    manual = _manual_axes()
+    if manual:
+        # Inside a shard_map body on legacy jax/XLA, a sharding constraint on
+        # the remaining auto axes trips the SPMD partitioner's manual-subgroup
+        # check (spmd_partitioner.cc "IsManualSubgroup" CHECK). Advertise every
+        # axis as Manual so sharding *hints* (models.layers.maybe_shard) are
+        # skipped wholesale — hints are optimizations, never semantics.
+        manual = frozenset(mesh.axis_names)
+    return _AbstractMeshView(mesh, manual)
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    """``with jax.set_mesh(mesh):`` — ambient mesh for shard_map/constraints."""
+    prev = _ambient_mesh()
+    _state.mesh = mesh
+    try:
+        with mesh:  # legacy Mesh context: axis-resource lookups inside pjit
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _shard_map(f=None, *, mesh=None, in_specs=None, out_specs=None,
+               axis_names=None, check_vma: bool = True, **kw):
+    """Modern ``jax.shard_map`` in terms of the legacy experimental one.
+
+    ``axis_names`` are the *manual* axes (legacy ``auto`` is the complement);
+    ``check_vma`` maps to legacy ``check_rep``. ``mesh=None`` uses the
+    ambient mesh installed by :func:`_set_mesh`.
+
+    Partial-manual bodies additionally get an ``axis_index`` workaround: the
+    legacy SPMD partitioner rejects the PartitionId instruction that
+    ``jax.lax.axis_index`` lowers to when auto axes remain, so each manual
+    axis's coordinate is smuggled in as a hidden sharded-iota argument and
+    served from a thread-local by the patched ``jax.lax.axis_index``.
+    """
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if f is None:  # support functools.partial(jax.shard_map, ...) usage
+        return lambda g: _shard_map(
+            g, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma, **kw)
+
+    use_mesh = mesh if mesh is not None else _ambient_mesh()
+    if use_mesh is None:
+        raise ValueError("jax.shard_map: no mesh given and no ambient "
+                         "jax.set_mesh(...) is active")
+    manual = (frozenset(axis_names) if axis_names is not None
+              else frozenset(use_mesh.axis_names))
+    auto = frozenset(use_mesh.axis_names) - manual
+    # hidden per-axis coordinate inputs, only needed in partial-manual mode
+    idx_axes = [a for a in use_mesh.axis_names if a in manual] if auto else []
+
+    def call(*args):
+        def traced(*inner):
+            if idx_axes:
+                args_in = inner[: -len(idx_axes)]
+                coords = {a: v[0] for a, v in zip(idx_axes, inner[-len(idx_axes):])}
+            else:
+                args_in, coords = inner, {}
+            prev = (_manual_axes(), _ambient_mesh(),
+                    getattr(_state, "axis_coords", None))
+            _state.manual = prev[0] | manual
+            _state.mesh = use_mesh
+            _state.axis_coords = coords or None
+            try:
+                return f(*args_in)
+            finally:
+                _state.manual, _state.mesh, _state.axis_coords = prev
+
+        specs_in = in_specs
+        extra = ()
+        if idx_axes:
+            # P is a tuple subclass: a bare P prefix means "same spec for
+            # every argument" — expand it before appending the hidden inputs.
+            if isinstance(specs_in, P) or not isinstance(specs_in, (tuple, list)):
+                specs_in = (specs_in,) * len(args)
+            specs_in = tuple(specs_in) + tuple(P(a) for a in idx_axes)
+            extra = tuple(
+                jnp.arange(use_mesh.shape[a], dtype=jnp.int32) for a in idx_axes)
+
+        return legacy_shard_map(
+            traced, use_mesh, in_specs=specs_in, out_specs=out_specs,
+            check_rep=check_vma, auto=auto)(*args, *extra)
+
+    return call
+
+
+_orig_axis_index = jax.lax.axis_index
+
+
+def _axis_index(name):
+    """``jax.lax.axis_index`` that consults the compat shard_map's smuggled
+    coordinates (partial-manual bodies), else defers to the real primitive."""
+    coords = getattr(_state, "axis_coords", None)
+    if coords is not None and name in coords:
+        return coords[name]
+    return _orig_axis_index(name)
+
+
+def _axis_size(name) -> Any:
+    """Static size from the ambient mesh when known, else a psum fallback."""
+    mesh = _ambient_mesh()
+    if mesh is not None and name in mesh.shape:
+        return mesh.shape[name]
+    return jax.lax.psum(1, name)
+
+
+def install() -> None:
+    """Add any missing modern-jax attributes (no-op where they exist)."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map
+        jax.lax.axis_index = _axis_index  # PartitionId workaround, see above
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size
+
+
+install()

@@ -1,6 +1,6 @@
 """Core: the paper's approximate-wireless-communication contribution."""
 
-from repro.core.channel import ChannelConfig, transmit, equalize
+from repro.core.channel import ChannelConfig, transmit, equalize, per_client_snr_db
 from repro.core.float_codec import (
     f32_to_bits,
     bits_to_f32,
@@ -8,7 +8,15 @@ from repro.core.float_codec import (
     exponent_clamp_mask,
 )
 from repro.core.modulation import MOD_SCHEMES, ModScheme, modulate, demod_hard, demod_ml
-from repro.core.transport import TransportConfig, TxStats, transmit_flat, transmit_pytree
+from repro.core.transport import (
+    TransportConfig,
+    TxStats,
+    client_keys,
+    transmit_batch,
+    transmit_flat,
+    transmit_pytree,
+    transmit_pytree_batch,
+)
 from repro.core.aggregation import fedsgd_aggregate, approx_allreduce
 from repro.core.latency import PhyTimings, round_airtime, calibrate_ecrt
 from repro.core.bounds import LayerSpec, gradient_bound, certified_clamp_bound

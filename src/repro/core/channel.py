@@ -10,21 +10,46 @@ gives the configured average SNR at the receiver, matching the paper's
 
 ``block_len`` > 1 models block fading: the fading coefficient is constant
 over runs of symbols — this is what makes the symbol interleaver matter.
+
+Heterogeneous links (multi-client uplink): ``snr_db`` may be a per-client
+sequence/array instead of a scalar — ``transport.transmit_batch`` resolves it
+to one scalar per client and threads it through the ``snr_db`` override of
+:func:`transmit` / :func:`noise_var_post_eq`, so each client sees an
+independent fading realization *and* its own average link quality.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import numbers
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["ChannelConfig", "transmit", "equalize", "noise_var_post_eq"]
+__all__ = [
+    "ChannelConfig",
+    "transmit",
+    "equalize",
+    "noise_var_post_eq",
+    "noise_power_for",
+    "per_client_snr_db",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class ChannelConfig:
-    snr_db: float = 10.0
+    """Uplink parameters. All powers are linear (not dB) except ``snr_db``.
+
+    ``snr_db`` is either a scalar (every client sees the same average SNR, the
+    paper's setup) or a per-client sequence/array (heterogeneous link quality;
+    prefer a tuple so the config stays hashable). Per-client values are only
+    consumed by the batched transport path — the scalar helpers below
+    (``noise_power``) require a scalar.
+    """
+
+    snr_db: Any = 10.0  # float, or per-client tuple/array of floats
     fading: str = "rayleigh"  # "rayleigh" | "awgn" | "block_rayleigh"
     block_len: int = 64  # symbols per fading block (block_rayleigh only)
     tx_power: float = 1.0
@@ -37,7 +62,60 @@ class ChannelConfig:
 
     @property
     def noise_power(self) -> float:
-        return self.large_scale_gain / (10.0 ** (self.snr_db / 10.0))
+        """Scalar receiver noise power sigma^2 = p d^-alpha / snr_lin.
+
+        Raises if ``snr_db`` is per-client — use :func:`noise_power_for` with
+        an explicit per-client SNR in that case.
+        """
+        if not _is_scalar_snr(self.snr_db):
+            raise TypeError(
+                "ChannelConfig.noise_power needs a scalar snr_db; per-client "
+                "arrays go through transport.transmit_batch / noise_power_for()"
+            )
+        return self.large_scale_gain / (10.0 ** (float(self.snr_db) / 10.0))
+
+
+def _is_scalar_snr(snr_db) -> bool:
+    """True for Python/numpy real scalars (incl. 0-d arrays), False for
+    per-client sequences/arrays."""
+    if isinstance(snr_db, numbers.Real):
+        return True
+    return getattr(snr_db, "ndim", None) == 0
+
+
+def noise_power_for(cfg: ChannelConfig, snr_db) -> jax.Array:
+    """Noise power for an explicit (possibly traced, possibly (C,)) SNR in dB."""
+    snr = jnp.asarray(snr_db, jnp.float32)
+    return cfg.large_scale_gain / (10.0 ** (snr / 10.0))
+
+
+def snr_db_vector(snr_db, num_clients: int) -> jax.Array:
+    """Broadcast/validate an explicit per-client SNR to ``(num_clients,)``.
+
+    Accepts a scalar, single-element, or length-``num_clients`` value (static
+    or traced); anything else raises ValueError. The single shared rule for
+    both the config path and the ``snr_db=`` call override.
+    """
+    arr = jnp.asarray(snr_db, jnp.float32).reshape(-1)
+    if arr.shape[0] == 1:
+        return jnp.broadcast_to(arr, (num_clients,))
+    if arr.shape[0] != num_clients:
+        raise ValueError(
+            f"snr_db has {arr.shape[0]} entries but batch has {num_clients} clients"
+        )
+    return arr
+
+
+def per_client_snr_db(cfg: ChannelConfig, num_clients: int):
+    """Resolve ``cfg.snr_db`` to a per-client view for the batched uplink.
+
+    Returns ``None`` when ``snr_db`` is a scalar (callers then use the exact
+    scalar code path, which is bit-identical to ``transmit_flat``), else a
+    ``(num_clients,)`` float32 array (broadcast if a single-element sequence).
+    """
+    if _is_scalar_snr(cfg.snr_db):
+        return None
+    return snr_db_vector(np.asarray(cfg.snr_db, np.float32), num_clients)
 
 
 def _cn(key: jax.Array, shape, var) -> jax.Array:
@@ -50,10 +128,20 @@ def _cn(key: jax.Array, shape, var) -> jax.Array:
     )
 
 
-def transmit(symbols: jax.Array, key: jax.Array, cfg: ChannelConfig):
-    """Pass unit-energy symbols through the uplink. Returns (r, c).
+def transmit(symbols: jax.Array, key: jax.Array, cfg: ChannelConfig, *,
+             snr_db=None):
+    """Pass unit-energy symbols through the uplink.
 
-    ``c`` is the composite channel gain known at the PS.
+    Args:
+      symbols: ``(n_sym,)`` complex64 unit-average-energy constellation points.
+      key: PRNG key consumed for the fading and noise draws.
+      cfg: channel parameters.
+      snr_db: optional scalar override of ``cfg.snr_db`` (may be traced) —
+        the per-client hook used by ``transport.transmit_batch``.
+
+    Returns:
+      ``(r, c)``: received symbols ``(n_sym,)`` complex64 and the composite
+      channel gain ``c`` ``(n_sym,)`` complex64 known at the PS.
     """
     (n_sym,) = symbols.shape
     k_h, k_n = jax.random.split(key)
@@ -69,7 +157,8 @@ def transmit(symbols: jax.Array, key: jax.Array, cfg: ChannelConfig):
     else:
         raise ValueError(f"unknown fading {cfg.fading!r}")
     c = amp * h
-    n = _cn(k_n, (n_sym,), cfg.noise_power)
+    npow = cfg.noise_power if snr_db is None else noise_power_for(cfg, snr_db)
+    n = _cn(k_n, (n_sym,), npow)
     return c * symbols + n, c
 
 
@@ -78,6 +167,11 @@ def equalize(r: jax.Array, c: jax.Array) -> jax.Array:
     return r / c
 
 
-def noise_var_post_eq(c: jax.Array, cfg: ChannelConfig) -> jax.Array:
-    """Per-symbol noise variance after equalization (for soft LLRs)."""
-    return cfg.noise_power / jnp.maximum(jnp.abs(c) ** 2, 1e-20)
+def noise_var_post_eq(c: jax.Array, cfg: ChannelConfig, *, snr_db=None) -> jax.Array:
+    """Per-symbol noise variance after equalization (for soft LLRs).
+
+    ``c``: ``(n_sym,)`` composite gains. ``snr_db`` overrides ``cfg.snr_db``
+    (same contract as :func:`transmit`). Returns ``(n_sym,)`` float32.
+    """
+    npow = cfg.noise_power if snr_db is None else noise_power_for(cfg, snr_db)
+    return npow / jnp.maximum(jnp.abs(c) ** 2, 1e-20)

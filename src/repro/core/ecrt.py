@@ -108,6 +108,7 @@ def _build_matrices(n: int, z: int, seed: int):
 
 
 def make_code(**kw) -> LdpcCode:
+    """Build an :class:`LdpcCode` (convenience constructor; same kwargs)."""
     return LdpcCode(**kw)
 
 

@@ -58,6 +58,7 @@ def bf16_to_bits(x: jax.Array) -> jax.Array:
 
 
 def bits_to_bf16(u: jax.Array) -> jax.Array:
+    """Bitcast uint16 -> bfloat16 (same shape; inverse of bf16_to_bits)."""
     return jax.lax.bitcast_convert_type(u.astype(jnp.uint16), jnp.bfloat16)
 
 
@@ -111,6 +112,9 @@ def exponent_clamp_mask16(bound: float) -> int:
 
 
 def clamp_exponent_bits16(u: jax.Array, bound: float = 2.0) -> jax.Array:
+    """bf16 receiver clamp: force provably-zero exponent bits to 0.
+
+    ``u``: (...,) uint16 received words; returns the same shape/dtype."""
     return (u.astype(jnp.uint32) & jnp.uint32(exponent_clamp_mask16(bound))).astype(jnp.uint16)
 
 

@@ -79,6 +79,7 @@ MOD_SCHEMES = {
 
 
 def scheme_for_bits(k: int) -> ModScheme:
+    """The registered square-QAM scheme with ``bits_per_symbol == k``."""
     for s in MOD_SCHEMES.values():
         if s.bits_per_symbol == k:
             return s

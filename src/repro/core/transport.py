@@ -16,12 +16,25 @@ Modes
 
 The entry points operate on flat float32 vectors or whole pytrees and return
 ``(values_hat, TxStats)``; ``TxStats`` carries what the latency model needs.
+
+Single-client vs batched
+------------------------
+``transmit_flat`` carries one client's payload. ``transmit_batch`` carries a
+``(num_clients, payload)`` matrix through per-client *independent* fading
+channels in one fused computation (vmap in the jnp paths, a 2-D grid in the
+Pallas kernel path) and returns per-client ``TxStats`` with ``(num_clients,)``
+fields. The key schedule is ``fold_in``-based (:func:`client_keys`): client
+``i`` uses ``jax.random.fold_in(key, client_offset + i)``, so a batched call
+is bit-identical to a Python loop of ``transmit_flat`` calls over the same
+schedule, and a sharded batch (``launch.sharding.shard_transmit_batch``)
+reproduces the unsharded batch exactly. Heterogeneous link quality is
+expressed either via a per-client ``ChannelConfig.snr_db`` sequence or the
+``snr_db`` override argument.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -32,7 +45,15 @@ from repro.core import ecrt as ecrt_lib
 from repro.core import float_codec as fc
 from repro.core import modulation as mod_lib
 
-__all__ = ["TransportConfig", "TxStats", "transmit_flat", "transmit_pytree"]
+__all__ = [
+    "TransportConfig",
+    "TxStats",
+    "client_keys",
+    "transmit_flat",
+    "transmit_pytree",
+    "transmit_batch",
+    "transmit_pytree_batch",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,7 +88,28 @@ class TransportConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TxStats:
-    """Per-call transmission statistics (all jnp scalars)."""
+    """Per-uplink transmission statistics.
+
+    Unit conventions (the single source of truth — ``latency.round_airtime``
+    and every benchmark consume these):
+
+    * ``data_symbols`` — **complex modulation symbols** put on the air,
+      including every ECRT retransmission and FEC parity. Airtime is
+      ``data_symbols / symbol_rate``; this is *not* a bit count.
+    * ``transmissions`` — PHY transmissions (preamble+ACK overheads paid).
+      Exactly 1 for perfect/naive/approx; mean transmissions per codeword
+      for ECRT (can be fractional for the analytic model).
+    * ``bit_errors`` — residual flipped **payload bits** after the full
+      receiver pipeline (post-clamp for approx); 0 for perfect/ECRT.
+    * ``n_bits`` — **payload bits offered**, i.e. ``n_floats * wire_bits``
+      (32 for float32 wire, 16 for bfloat16). FEC parity and retransmitted
+      copies are *not* counted here — they show up in ``data_symbols`` only,
+      so ``ber = bit_errors / n_bits`` is the end-to-end payload BER.
+
+    Fields are float32 jnp scalars for a single uplink (``transmit_flat``),
+    or ``(num_clients,)`` arrays for a batched one (``transmit_batch``) —
+    every formula above applies elementwise.
+    """
 
     data_symbols: jax.Array  # symbols of payload actually sent (incl. retx)
     transmissions: jax.Array  # number of PHY transmissions (1 unless ECRT)
@@ -84,14 +126,16 @@ def _stats(data_symbols, transmissions, bit_errors, n_bits) -> TxStats:
     return TxStats(f(data_symbols), f(transmissions), f(bit_errors), f(n_bits))
 
 
-def _through_channel(sym_stream: jax.Array, key: jax.Array, cfg: TransportConfig):
+def _through_channel(sym_stream: jax.Array, key: jax.Array, cfg: TransportConfig,
+                     snr_db=None):
     tx = mod_lib.modulate(sym_stream, cfg.scheme)
-    r, c = channel_lib.transmit(tx, key, cfg.channel)
+    r, c = channel_lib.transmit(tx, key, cfg.channel, snr_db=snr_db)
     y = channel_lib.equalize(r, c)
     return y, c
 
 
-def _uncoded(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: bool):
+def _uncoded(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: bool,
+             snr_db=None):
     """Shared path for naive/approx: bits -> QAM -> channel -> bits."""
     k = cfg.scheme.bits_per_symbol
     n = x.shape[0]
@@ -100,7 +144,7 @@ def _uncoded(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: bool):
     u = fc.bf16_to_bits(x) if wb == 16 else fc.f32_to_bits(x)
     sym = fc.words_to_symbols(u, k, wb)  # (N, S)
     stream = fc.interleave(sym) if cfg.interleave else sym.reshape(-1)
-    y, _ = _through_channel(stream, key, cfg)
+    y, _ = _through_channel(stream, key, cfg, snr_db)
     rx_stream = mod_lib.demod_hard(y, cfg.scheme)
     rx = (
         fc.deinterleave(rx_stream, n, s_per_word)
@@ -118,7 +162,7 @@ def _uncoded(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: bool):
     return out, _stats(n * s_per_word, 1, bit_errors, n * wb)
 
 
-def _ecrt_real(x: jax.Array, key: jax.Array, cfg: TransportConfig):
+def _ecrt_real(x: jax.Array, key: jax.Array, cfg: TransportConfig, snr_db=None):
     """Real LDPC + retransmission loop (fixed max_tx rounds, masked)."""
     code = cfg.ldpc
     k_info = code.k
@@ -142,8 +186,8 @@ def _ecrt_real(x: jax.Array, key: jax.Array, cfg: TransportConfig):
         b = cw.reshape(n_cw, sym_per_cw, k_mod)
         weights = jnp.uint32(1) << jnp.uint32(k_mod - 1 - jnp.arange(k_mod))
         sym = jnp.sum(b * weights, axis=-1, dtype=jnp.uint32).reshape(-1)
-        y, c = _through_channel(sym, kr, cfg)
-        nv = channel_lib.noise_var_post_eq(c, cfg.channel)
+        y, c = _through_channel(sym, kr, cfg, snr_db)
+        nv = channel_lib.noise_var_post_eq(c, cfg.channel, snr_db=snr_db)
         llr = mod_lib.bit_llrs(y, nv, cfg.scheme).reshape(n_cw, n_code)
         hard, ok_new = ecrt_lib.decode(llr, code)
         take = (~ok) & ok_new
@@ -176,7 +220,13 @@ def _ecrt_real(x: jax.Array, key: jax.Array, cfg: TransportConfig):
 
 
 def _ecrt_analytic(x: jax.Array, cfg: TransportConfig):
-    """Calibrated ECRT model: exact bits, measured expected transmissions."""
+    """Calibrated ECRT model: exact bits, measured expected transmissions.
+
+    Note: the model is SNR-blind by construction — ``ecrt_expected_tx`` is a
+    single constant calibrated for one link quality, so per-client ``snr_db``
+    does not vary these stats. Heterogeneous-SNR ECRT airtime needs the real
+    chain (``simulate_fec=True``) or per-client calibration upstream.
+    """
     n_words = x.shape[0]
     n_bits = n_words * 32
     k_mod = cfg.scheme.bits_per_symbol
@@ -185,7 +235,8 @@ def _ecrt_analytic(x: jax.Array, cfg: TransportConfig):
     return x, _stats(sym, cfg.ecrt_expected_tx, 0, n_bits)
 
 
-def _uncoded_chunked(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: bool):
+def _uncoded_chunked(x: jax.Array, key: jax.Array, cfg: TransportConfig,
+                     clamp: bool, snr_db=None):
     """lax.map over fixed-size chunks: bounds the 36 B/float live set."""
     n = x.shape[0]
     chunk = cfg.chunk_elems
@@ -196,20 +247,39 @@ def _uncoded_chunked(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: 
 
     def one(args):
         xc, kc = args
-        return _uncoded(xc, kc, cfg, clamp=clamp)
+        return _uncoded(xc, kc, cfg, clamp=clamp, snr_db=snr_db)
 
     x_hat, stats = jax.lax.map(one, (xp, keys))
-    x_hat = x_hat.reshape(-1)[:n]
-    # padding words are zeros: they never contribute bit errors post-clamp
+    x_hat = x_hat.reshape(-1)
+    # The chunk pipeline counts errors over the padding too; the transmitted
+    # pad words are exactly 0, so every set bit in a received pad word is a
+    # counted error — subtract them so stats cover only the true payload.
+    wb = 16 if cfg.wire_dtype == "bfloat16" else 32
+    pad_bits = (fc.bf16_to_bits(x_hat[n:]).astype(jnp.uint32) if wb == 16
+                else fc.f32_to_bits(x_hat[n:]))
+    pad_errs = jnp.sum(mod_lib.popcount(pad_bits))
     k = cfg.scheme.bits_per_symbol
-    return x_hat, _stats(
-        n * (32 // k), 1, jnp.sum(stats.bit_errors), n * 32
+    return x_hat[:n], _stats(
+        n * (wb // k), 1, jnp.sum(stats.bit_errors) - pad_errs, n * wb
     )
 
 
-def transmit_flat(x: jax.Array, key: jax.Array, cfg: TransportConfig):
-    """Transmit a flat float vector (f32 interface; wire format per config).
-    Returns (x_hat (float32), TxStats)."""
+def transmit_flat(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
+                  snr_db=None):
+    """Transmit one client's flat float vector.
+
+    Args:
+      x: ``(N,)`` payload (cast to float32; wire format per ``cfg.wire_dtype``).
+      key: PRNG key for this uplink's fading + noise realization.
+      cfg: transport configuration (mode, modulation, channel, ...).
+      snr_db: optional scalar override of ``cfg.channel.snr_db`` (may be a
+        traced scalar — this is the per-client hook ``transmit_batch`` vmaps
+        over).
+
+    Returns:
+      ``(x_hat, stats)``: the received ``(N,)`` float32 payload and scalar
+      :class:`TxStats`.
+    """
     x = x.astype(jnp.float32)
     n = x.shape[0]
     wb = 16 if cfg.wire_dtype == "bfloat16" else 32
@@ -219,18 +289,89 @@ def transmit_flat(x: jax.Array, key: jax.Array, cfg: TransportConfig):
     if cfg.mode in ("naive", "approx") and cfg.use_kernel:
         from repro.kernels import ops as kernel_ops
 
-        return kernel_ops.approx_channel_transmit(x, key, cfg)
+        return kernel_ops.approx_channel_transmit(x, key, cfg, snr_db=snr_db)
     if cfg.mode in ("naive", "approx") and cfg.chunk_elems and n > cfg.chunk_elems:
-        return _uncoded_chunked(x, key, cfg, clamp=cfg.mode == "approx")
+        return _uncoded_chunked(x, key, cfg, clamp=cfg.mode == "approx",
+                                snr_db=snr_db)
     if cfg.mode == "naive":
-        return _uncoded(x, key, cfg, clamp=False)
+        return _uncoded(x, key, cfg, clamp=False, snr_db=snr_db)
     if cfg.mode == "approx":
-        return _uncoded(x, key, cfg, clamp=True)
+        return _uncoded(x, key, cfg, clamp=True, snr_db=snr_db)
     if cfg.mode == "ecrt":
         if cfg.simulate_fec:
-            return _ecrt_real(x, key, cfg)
+            return _ecrt_real(x, key, cfg, snr_db=snr_db)
         return _ecrt_analytic(x, cfg)
     raise ValueError(f"unknown transport mode {cfg.mode!r}")
+
+
+def client_keys(key: jax.Array, num_clients: int, offset=0) -> jax.Array:
+    """The batched uplink's key schedule: ``key_i = fold_in(key, offset + i)``.
+
+    ``offset`` may be a traced int — ``shard_transmit_batch`` passes each
+    shard's global client offset so sharded and unsharded batches agree.
+    Returns ``(num_clients, key_size)`` keys.
+    """
+    idx = jnp.arange(num_clients) + offset
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+
+def _resolve_batch_snr(cfg: TransportConfig, num_clients: int, snr_db):
+    """Per-client SNR column for a batch: explicit override > config > None.
+
+    ``None`` means "homogeneous, use the config scalar" — that path is kept
+    distinct so it stays bit-identical to ``transmit_flat`` (no dB->linear
+    recomputation under trace).
+    """
+    if snr_db is not None:
+        return channel_lib.snr_db_vector(snr_db, num_clients)
+    return channel_lib.per_client_snr_db(cfg.channel, num_clients)
+
+
+def transmit_batch(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
+                   snr_db=None, client_offset=0):
+    """Transmit ``num_clients`` payloads through independent fading uplinks.
+
+    One fused computation (single jittable call): the uncoded/ECRT paths vmap
+    the per-client pipeline; the kernel path (``cfg.use_kernel``) lowers to a
+    2-D ``(clients, tiles)`` Pallas grid.
+
+    Args:
+      x: ``(num_clients, N)`` payload matrix (cast to float32).
+      key: base PRNG key; client ``i`` uses
+        ``fold_in(key, client_offset + i)`` (see :func:`client_keys`), so the
+        result is bit-identical to looping ``transmit_flat`` over that
+        schedule.
+      cfg: transport configuration. ``cfg.channel.snr_db`` may be a
+        per-client sequence (heterogeneous links).
+      snr_db: optional per-client SNR override — scalar or ``(num_clients,)``;
+        takes precedence over the config. Varies the channel realization for
+        every mode except the SNR-blind analytic ECRT model
+        (``mode='ecrt', simulate_fec=False`` — see ``_ecrt_analytic``).
+      client_offset: global index of row 0 (used by the sharded dispatch).
+
+    Returns:
+      ``(x_hat, stats)``: ``(num_clients, N)`` float32 received payloads and
+      :class:`TxStats` with ``(num_clients,)`` fields.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"transmit_batch wants (num_clients, N); got {x.shape}")
+    num_clients = x.shape[0]
+    snr_vec = _resolve_batch_snr(cfg, num_clients, snr_db)
+    keys = client_keys(key, num_clients, client_offset)
+
+    if cfg.mode in ("naive", "approx") and cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.approx_channel_transmit_batch(x, keys, cfg, snr_vec)
+
+    # All jnp paths (perfect/naive/approx/ecrt, chunked or not) are one vmap
+    # over the single-client pipeline — batch semantics == loop semantics by
+    # construction (vmap broadcasts the constant stats of perfect/analytic).
+    if snr_vec is None:
+        return jax.vmap(lambda xc, kc: transmit_flat(xc, kc, cfg))(x, keys)
+    return jax.vmap(lambda xc, kc, s: transmit_flat(xc, kc, cfg, snr_db=s))(
+        x, keys, snr_vec)
 
 
 def transmit_pytree(tree: Any, key: jax.Array, cfg: TransportConfig):
@@ -242,5 +383,35 @@ def transmit_pytree(tree: Any, key: jax.Array, cfg: TransportConfig):
     out, off = [], 0
     for leaf, size in zip(leaves, sizes):
         out.append(flat_hat[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out), stats
+
+
+def transmit_pytree_batch(tree: Any, key: jax.Array, cfg: TransportConfig, *,
+                          snr_db=None):
+    """Batched :func:`transmit_pytree`: every leaf has a leading client dim.
+
+    Args:
+      tree: pytree whose leaves are ``(num_clients, ...)`` — e.g. the output
+        of ``jax.vmap(client_grad)``. Each client's leaves are flattened into
+        one ``(num_clients, D)`` payload matrix.
+      key / cfg / snr_db: as in :func:`transmit_batch`.
+
+    Returns:
+      ``(tree_hat, stats)`` with the input structure/shapes/dtypes restored
+      and per-client :class:`TxStats` (``(num_clients,)`` fields).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    num_clients = leaves[0].shape[0]
+    sizes = [l.size // num_clients for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(num_clients, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+    flat_hat, stats = transmit_batch(flat, key, cfg, snr_db=snr_db)
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(
+            flat_hat[:, off : off + size].reshape(leaf.shape).astype(leaf.dtype)
+        )
         off += size
     return jax.tree_util.tree_unflatten(treedef, out), stats

@@ -53,9 +53,10 @@ def run_fedavg(
     grad_fn = jax.grad(cnn.loss_fn)
 
     if transport_cfg.mode == "ecrt" and transport_cfg.simulate_fec:
+        # mean SNR for heterogeneous cohorts (see loop.py)
+        snr_cal = float(np.mean(np.asarray(transport_cfg.channel.snr_db)))
         e_tx = latency_lib.calibrate_ecrt(
-            transport_cfg.channel.snr_db, transport_cfg.modulation,
-            n_codewords=64, max_tx=6)
+            snr_cal, transport_cfg.modulation, n_codewords=64, max_tx=6)
         transport_cfg = dataclasses.replace(
             transport_cfg, simulate_fec=False, ecrt_expected_tx=float(e_tx))
 
@@ -73,18 +74,29 @@ def run_fedavg(
             return jax.tree_util.tree_map(lambda a, b: a - b, local, params)
 
         deltas = jax.vmap(client_update)(xb, yb)  # leaves (M, ...)
-        keys = jax.random.split(key, M)
 
-        def corrupt(d, k):
-            if scale_mode == "max_abs":
-                flat = jnp.concatenate([l.reshape(-1) for l in jax.tree_util.tree_leaves(d)])
-                scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-8) / 0.9
-                d = jax.tree_util.tree_map(lambda l: l / scale, d)
-                out, stats = transport_lib.transmit_pytree(d, k, transport_cfg)
-                return jax.tree_util.tree_map(lambda l: l * scale, out), stats
-            return transport_lib.transmit_pytree(d, k, transport_cfg)
+        if scale_mode == "max_abs":
+            # Per-client adaptive scale: one scalar per client travels on the
+            # (error-free) control channel; the whole cohort then rides the
+            # batched uplink in a single fused computation.
+            flat = jnp.concatenate(
+                [l.reshape(M, -1) for l in jax.tree_util.tree_leaves(deltas)],
+                axis=1)
+            scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
 
-        deltas_hat, stats = jax.vmap(corrupt)(deltas, keys)
+            def expand(s, like):
+                return s.reshape((M,) + (1,) * (like.ndim - 1))
+
+            scaled = jax.tree_util.tree_map(
+                lambda l: l / expand(scale, l), deltas)
+            out, stats = transport_lib.transmit_pytree_batch(
+                scaled, key, transport_cfg)
+            deltas_hat = jax.tree_util.tree_map(
+                lambda l: l * expand(scale, l), out)
+        else:
+            deltas_hat, stats = transport_lib.transmit_pytree_batch(
+                deltas, key, transport_cfg)
+
         agg = jax.tree_util.tree_map(lambda d: jnp.mean(d, axis=0), deltas_hat)
         new_params = jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
         return new_params, stats

@@ -7,4 +7,9 @@ pure-jnp oracle (bit-exact, shared tile math). Validated interpret=True on
 CPU; compiled pallas_call on real TPUs.
 """
 
-from repro.kernels.ops import approx_channel, approx_channel_transmit
+from repro.kernels.ops import (
+    approx_channel,
+    approx_channel_batch,
+    approx_channel_transmit,
+    approx_channel_transmit_batch,
+)

@@ -16,12 +16,18 @@ randomness is streamed from HBM. On real TPUs ``pltpu.prng_random_bits``
 could replace the hash; we keep the hash so interpret-mode CPU validation is
 bit-exact against the oracle.
 
-Tiling: 1-D grid over tiles of ``block_words`` float32 words (default 1024 =
-8 sublanes x 128 lanes of f32). Each tile expands to (32/k, block_words)
+Tiling: a ``(clients, tiles)`` grid, each tile ``block_words`` float32 words
+(default 1024 = 8 sublanes x 128 lanes of f32); the single-client entry point
+is the C=1 view. Each tile expands to (32/k, block_words)
 symbols in VMEM — at QPSK that is 16 x 1024 x 4 B x ~6 live arrays ~ 400 KiB,
 comfortably inside the ~16 MiB v5e VMEM budget; the MXU is not used (this is
 a VPU/bit-op kernel). The symbol interleaver is block-local (row/column
 within the tile), matching one PHY frame per tile.
+
+The multi-client uplink (``approx_channel_batch_pallas``) runs a 2-D
+``(clients, tiles)`` grid over a ``(C, N)`` payload matrix with per-client
+seed/noise/gain scalars — one fused launch for the whole cohort, each row
+bit-identical to the single-client kernel with that client's seed.
 """
 
 from __future__ import annotations
@@ -34,12 +40,48 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
 
-__all__ = ["approx_channel_pallas"]
+__all__ = ["approx_channel_pallas", "approx_channel_batch_pallas"]
 
 _U32 = jnp.uint32
 
 
-def _kernel(
+def approx_channel_pallas(
+    x: jax.Array,
+    seed: jax.Array,
+    noise_power: jax.Array,
+    large_scale_gain: jax.Array,
+    *,
+    bits_per_symbol: int = 2,
+    fading: str = "rayleigh",
+    fade_block: int = 64,
+    clamp_mask: int = 0xBFFFFFFF,
+    block_words: int = 1024,
+    word_bits: int = 32,
+    interpret: bool = True,
+):
+    """Fused PHY pipeline. x: (N,) f32 (or bf16 with word_bits=16),
+    N % block_words == 0. Returns (x_hat (N,), bit_errors () int32).
+
+    One-client view of the batched kernel: the batch body restarts the
+    symbol counter per client, so a C=1 grid is the single-client program.
+    """
+    x_hat, errs = approx_channel_batch_pallas(
+        x[None, :],
+        jnp.reshape(seed, (1,)),
+        jnp.reshape(noise_power, (1,)),
+        jnp.reshape(large_scale_gain, (1,)),
+        bits_per_symbol=bits_per_symbol,
+        fading=fading,
+        fade_block=fade_block,
+        clamp_mask=clamp_mask,
+        block_words=block_words,
+        word_bits=word_bits,
+        interpret=interpret,
+    )
+    return x_hat[0], errs[0]
+
+
+def _batch_kernel(
     seed_ref,
     noise_ref,
     gain_ref,
@@ -54,11 +96,14 @@ def _kernel(
     block_words: int,
     word_bits: int,
 ):
-    pid = pl.program_id(0)
+    """Per-(client, tile) body. The symbol counter restarts per client and the
+    RNG is keyed by the client's own seed, so each grid row reproduces the
+    single-client kernel's stream bit-for-bit."""
+    tile = pl.program_id(1)
     s_per_word = word_bits // bits_per_symbol
-    base_sym = (pid.astype(_U32)) * _U32(block_words * s_per_word)
+    base_sym = tile.astype(_U32) * _U32(block_words * s_per_word)
 
-    x = x_ref[...]
+    x = x_ref[0]
     if word_bits == 16:
         u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(_U32)
     else:
@@ -76,11 +121,11 @@ def _kernel(
     )
     u_hat = u_hat & _U32(clamp_mask)
     if word_bits == 16:
-        out_ref[...] = jax.lax.bitcast_convert_type(
+        out_ref[0] = jax.lax.bitcast_convert_type(
             u_hat.astype(jnp.uint16), jnp.bfloat16)
     else:
-        out_ref[...] = jax.lax.bitcast_convert_type(u_hat, jnp.float32)
-    err_ref[0] = jnp.sum(_ref._popcount(u ^ u_hat)).astype(jnp.int32)
+        out_ref[0] = jax.lax.bitcast_convert_type(u_hat, jnp.float32)
+    err_ref[0, 0] = jnp.sum(_ref._popcount(u ^ u_hat)).astype(jnp.int32)
 
 
 @functools.partial(
@@ -95,11 +140,11 @@ def _kernel(
         "interpret",
     ),
 )
-def approx_channel_pallas(
+def approx_channel_batch_pallas(
     x: jax.Array,
-    seed: jax.Array,
-    noise_power: jax.Array,
-    large_scale_gain: jax.Array,
+    seeds: jax.Array,
+    noise_powers: jax.Array,
+    large_scale_gains: jax.Array,
     *,
     bits_per_symbol: int = 2,
     fading: str = "rayleigh",
@@ -109,15 +154,25 @@ def approx_channel_pallas(
     word_bits: int = 32,
     interpret: bool = True,
 ):
-    """Fused PHY pipeline. x: (N,) f32 (or bf16 with word_bits=16),
-    N % block_words == 0. Returns (x_hat (N,), bit_errors () int32)."""
-    n = x.shape[0]
+    """Batched fused PHY pipeline over a 2-D ``(clients, tiles)`` grid.
+
+    Args:
+      x: ``(C, N)`` f32 (or bf16 with ``word_bits=16``), ``N % block_words == 0``.
+      seeds: ``(C,)`` uint32 — one independent RNG stream per client.
+      noise_powers / large_scale_gains: ``(C,)`` f32 per-client link params
+        (heterogeneous SNR = varying ``noise_powers``).
+
+    Returns:
+      ``(x_hat (C, N), bit_errors (C,) int32)``. Row ``i`` is bit-identical
+      to ``approx_channel_pallas(x[i], seeds[i], ...)``.
+    """
+    c, n = x.shape
     if n % block_words != 0:
         raise ValueError(f"N={n} must be a multiple of block_words={block_words}")
-    grid = n // block_words
+    tiles = n // block_words
 
     kernel = functools.partial(
-        _kernel,
+        _batch_kernel,
         bits_per_symbol=bits_per_symbol,
         fading=fading,
         fade_block=fade_block,
@@ -126,29 +181,29 @@ def approx_channel_pallas(
         word_bits=word_bits,
     )
     wire = jnp.bfloat16 if word_bits == 16 else jnp.float32
-    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    client_scalar = pl.BlockSpec((1,), lambda ci, ti: (ci,))
     x_hat, errs = pl.pallas_call(
         kernel,
-        grid=(grid,),
+        grid=(c, tiles),
         in_specs=[
-            scalar_spec,  # seed
-            scalar_spec,  # noise power
-            scalar_spec,  # large-scale gain
-            pl.BlockSpec((block_words,), lambda i: (i,)),
+            client_scalar,  # seed
+            client_scalar,  # noise power
+            client_scalar,  # large-scale gain
+            pl.BlockSpec((1, block_words), lambda ci, ti: (ci, ti)),
         ],
         out_specs=[
-            pl.BlockSpec((block_words,), lambda i: (i,)),
-            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, block_words), lambda ci, ti: (ci, ti)),
+            pl.BlockSpec((1, 1), lambda ci, ti: (ci, ti)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n,), wire),
-            jax.ShapeDtypeStruct((grid,), jnp.int32),
+            jax.ShapeDtypeStruct((c, n), wire),
+            jax.ShapeDtypeStruct((c, tiles), jnp.int32),
         ],
         interpret=interpret,
     )(
-        seed.reshape(1).astype(_U32),
-        noise_power.reshape(1).astype(jnp.float32),
-        large_scale_gain.reshape(1).astype(jnp.float32),
+        seeds.reshape(c).astype(_U32),
+        noise_powers.reshape(c).astype(jnp.float32),
+        large_scale_gains.reshape(c).astype(jnp.float32),
         x.astype(wire),
     )
-    return x_hat, jnp.sum(errs)
+    return x_hat, jnp.sum(errs, axis=1)

@@ -4,6 +4,9 @@
 the Pallas kernel (interpret-mode on CPU, compiled on TPU).
 ``approx_channel_transmit`` adapts it to the ``TransportConfig`` interface so
 ``transport.transmit_flat(..., use_kernel=True)`` routes through the kernel.
+``approx_channel_batch`` / ``approx_channel_transmit_batch`` are the
+multi-client variants backing ``transport.transmit_batch``: a ``(C, N)``
+payload matrix through the 2-D-grid kernel in one launch.
 """
 
 from __future__ import annotations
@@ -13,9 +16,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.approx_channel import approx_channel_pallas
+from repro.kernels.approx_channel import (
+    approx_channel_batch_pallas,
+    approx_channel_pallas,
+)
 
-__all__ = ["approx_channel", "approx_channel_transmit", "default_interpret"]
+__all__ = [
+    "approx_channel",
+    "approx_channel_batch",
+    "approx_channel_transmit",
+    "approx_channel_transmit_batch",
+    "default_interpret",
+]
 
 
 def default_interpret() -> bool:
@@ -45,10 +57,10 @@ def approx_channel(
 ):
     """Arbitrary-length wrapper: pads with zeros to a tile multiple.
 
-    Padding words are 0.0 floats; errors counted on them are subtracted by
-    masking the tail before the error count — we simply exclude them by
-    transmitting them too and correcting the count is unnecessary because
-    stats use the true length only for BER normalization upstream.
+    The kernel counts bit errors over the whole tile, padding included; since
+    the transmitted pad words are exactly 0, every set bit in a *received*
+    pad word is a counted error — we subtract them here so ``bit_errors``
+    covers only the true payload.
     """
     n = x.shape[0]
     pad = (-n) % block_words
@@ -67,18 +79,25 @@ def approx_channel(
         word_bits=word_bits,
         interpret=interpret,
     )
+    errs = errs - _padding_errors(x_hat[n:], word_bits)
     return x_hat[:n], errs
 
 
-def approx_channel_transmit(x: jax.Array, key: jax.Array, cfg):
-    """TransportConfig adapter (mode='approx'|'naive' with use_kernel)."""
-    from repro.core import float_codec as fc
-    from repro.core import transport as transport_lib
+def _padding_errors(pad_hat: jax.Array, word_bits: int) -> jax.Array:
+    """Bit errors the kernel counted on zero pad words (= received popcount)."""
+    from repro.kernels import ref as _ref
 
-    ch = cfg.channel
-    seed = jax.random.randint(
-        key, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
-    ).astype(jnp.uint32)
+    if word_bits == 16:
+        u = jax.lax.bitcast_convert_type(pad_hat, jnp.uint16).astype(jnp.uint32)
+    else:
+        u = jax.lax.bitcast_convert_type(pad_hat, jnp.uint32)
+    return jnp.sum(_ref._popcount(u), dtype=jnp.int32)
+
+
+def _transport_kernel_params(cfg):
+    """(wire_bits, clamp_mask, bits_per_symbol) for a TransportConfig."""
+    from repro.core import float_codec as fc
+
     wb = 16 if cfg.wire_dtype == "bfloat16" else 32
     if cfg.mode != "approx":
         clamp_mask = 0xFFFFFFFF
@@ -86,11 +105,32 @@ def approx_channel_transmit(x: jax.Array, key: jax.Array, cfg):
         clamp_mask = fc.exponent_clamp_mask16(cfg.clamp_bound)
     else:
         clamp_mask = fc.exponent_clamp_mask(cfg.clamp_bound)
-    k = cfg.scheme.bits_per_symbol
+    return wb, clamp_mask, cfg.scheme.bits_per_symbol
+
+
+def _seed_from_key(key: jax.Array) -> jax.Array:
+    return jax.random.randint(
+        key, (), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    ).astype(jnp.uint32)
+
+
+def approx_channel_transmit(x: jax.Array, key: jax.Array, cfg, *, snr_db=None):
+    """TransportConfig adapter (mode='approx'|'naive' with use_kernel).
+
+    ``snr_db`` optionally overrides ``cfg.channel.snr_db`` (traced scalar ok).
+    """
+    from repro.core import channel as channel_lib
+    from repro.core import transport as transport_lib
+
+    ch = cfg.channel
+    seed = _seed_from_key(key)
+    wb, clamp_mask, k = _transport_kernel_params(cfg)
+    npow = (ch.noise_power if snr_db is None
+            else channel_lib.noise_power_for(ch, snr_db))
     x_hat, errs = approx_channel(
         x,
         seed,
-        ch.noise_power,
+        npow,
         ch.large_scale_gain,
         bits_per_symbol=k,
         fading=ch.fading,
@@ -101,4 +141,95 @@ def approx_channel_transmit(x: jax.Array, key: jax.Array, cfg):
     )
     n = x.shape[0]
     stats = transport_lib._stats(n * (wb // k), 1, errs, n * wb)
+    return x_hat.astype(jnp.float32), stats
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bits_per_symbol", "fading", "fade_block", "clamp_mask",
+        "block_words", "word_bits", "interpret",
+    ),
+)
+def approx_channel_batch(
+    x: jax.Array,
+    seeds: jax.Array,
+    noise_powers,
+    large_scale_gains,
+    *,
+    bits_per_symbol: int = 2,
+    fading: str = "rayleigh",
+    fade_block: int = 64,
+    clamp_mask: int = 0xBFFFFFFF,
+    block_words: int = 1024,
+    word_bits: int = 32,
+    interpret: bool = True,
+):
+    """Batched arbitrary-length wrapper: pads ``(C, N)`` payloads along the
+    payload dim to a tile multiple, one fused kernel launch for all clients.
+    Returns ``(x_hat (C, N), bit_errors (C,) int32)``; errors counted on the
+    zero padding are subtracted per client (see ``approx_channel``)."""
+    c, n = x.shape
+    pad = (-n) % block_words
+    wire = jnp.bfloat16 if word_bits == 16 else jnp.float32
+    xp = jnp.pad(x.astype(wire), ((0, 0), (0, pad)))
+    x_hat, errs = approx_channel_batch_pallas(
+        xp,
+        jnp.asarray(seeds),
+        jnp.asarray(noise_powers, jnp.float32),
+        jnp.asarray(large_scale_gains, jnp.float32),
+        bits_per_symbol=bits_per_symbol,
+        fading=fading,
+        fade_block=fade_block,
+        clamp_mask=clamp_mask,
+        block_words=block_words,
+        word_bits=word_bits,
+        interpret=interpret,
+    )
+    errs = errs - jax.vmap(lambda row: _padding_errors(row[n:], word_bits))(x_hat)
+    return x_hat[:, :n], errs
+
+
+def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg, snr_db=None):
+    """Batched TransportConfig adapter behind ``transport.transmit_batch``.
+
+    Args:
+      x: ``(C, N)`` float32 payload matrix.
+      keys: ``(C, key_size)`` per-client keys (the fold_in schedule built by
+        ``transport.client_keys`` — each row seeds that client's kernel RNG
+        exactly as ``approx_channel_transmit`` would).
+      cfg: TransportConfig with mode 'approx'|'naive'.
+      snr_db: optional ``(C,)`` per-client SNR; ``None`` = config scalar.
+
+    Returns ``(x_hat (C, N) float32, TxStats with (C,) fields)``.
+    """
+    from repro.core import channel as channel_lib
+    from repro.core import transport as transport_lib
+
+    ch = cfg.channel
+    c, n = x.shape
+    seeds = jax.vmap(_seed_from_key)(keys)
+    wb, clamp_mask, k = _transport_kernel_params(cfg)
+    if snr_db is None:
+        npow = jnp.full((c,), ch.noise_power, jnp.float32)
+    else:
+        npow = channel_lib.noise_power_for(ch, snr_db)
+    gains = jnp.full((c,), ch.large_scale_gain, jnp.float32)
+    x_hat, errs = approx_channel_batch(
+        x,
+        seeds,
+        npow,
+        gains,
+        bits_per_symbol=k,
+        fading=ch.fading,
+        fade_block=ch.block_len,
+        clamp_mask=clamp_mask,
+        word_bits=wb,
+        interpret=default_interpret(),
+    )
+    ones = jnp.ones((c,), jnp.float32)
+    stats = transport_lib.TxStats(
+        ones * (n * (wb // k)), ones, errs.astype(jnp.float32),
+        ones * (n * wb),
+    )
     return x_hat.astype(jnp.float32), stats

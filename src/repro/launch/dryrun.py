@@ -246,6 +246,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, uplink: str,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         coll = parse_collectives(hlo, cfg.n_layers)
 

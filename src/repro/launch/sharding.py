@@ -1,4 +1,11 @@
-"""Sharding rules: param/input/cache PartitionSpecs per architecture family.
+"""Sharding rules + the sharded multi-client uplink dispatch.
+
+``shard_transmit_batch`` scales ``transport.transmit_batch`` across a device
+mesh: the client dim is sharded over the data axes, each shard runs the fused
+batched PHY on its cohort with *globally indexed* fold_in keys, so the result
+is bit-identical to the unsharded batch regardless of mesh shape.
+
+Param/input/cache PartitionSpecs per architecture family.
 
 Rules are path-pattern based and *divisibility-checked*: if a dim is not
 divisible by the product of requested mesh axes, the axis is dropped for
@@ -21,11 +28,78 @@ import math
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import data_axes
 
 Axis = Any  # str | tuple[str, ...] | None
+
+
+def shard_transmit_batch(x, key, cfg, mesh, *, axis_names=None, snr_db=None):
+    """Run the batched uplink with the client dim sharded over ``axis_names``.
+
+    Args:
+      x: ``(num_clients, N)`` payload matrix; ``num_clients`` must divide
+        evenly over the product of the mesh's ``axis_names`` sizes.
+      key: base PRNG key. Client ``i`` (global index) uses
+        ``fold_in(key, i)`` — each shard offsets by its cohort start, so
+        sharded == unsharded bit-for-bit.
+      cfg: ``transport.TransportConfig``.
+      mesh: a ``jax.sharding.Mesh``; ``axis_names`` defaults to every axis
+        except ``model`` (see :func:`repro.launch.mesh.data_axes`).
+      snr_db: optional per-client ``(num_clients,)`` SNR array (sharded along
+        with the clients) or scalar.
+
+    Returns:
+      ``(x_hat, stats)`` exactly as ``transport.transmit_batch`` — global
+      ``(num_clients, N)`` outputs and per-client ``TxStats``.
+    """
+    from repro.core import transport as transport_lib
+
+    axes = tuple(axis_names) if axis_names is not None else data_axes(mesh)
+    if not axes:  # e.g. a pure tensor-parallel mesh: nothing to shard over
+        return transport_lib.transmit_batch(x, key, cfg, snr_db=snr_db)
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    num_clients = x.shape[0]
+    if num_clients % n_shards != 0:
+        raise ValueError(
+            f"{num_clients} clients do not shard evenly over {n_shards} devices"
+        )
+    local_clients = num_clients // n_shards
+    ax_spec = axes if len(axes) > 1 else axes[0]
+
+    snr_vec = transport_lib._resolve_batch_snr(cfg, num_clients, snr_db)
+
+    def shard_index():
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    if snr_vec is None:
+
+        def local(xl):
+            offset = shard_index() * local_clients
+            return transport_lib.transmit_batch(
+                xl, key, cfg, client_offset=offset)
+
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=P(ax_spec, None),
+            out_specs=(P(ax_spec, None), P(ax_spec)),
+        )(x)
+
+    def local(xl, sl):
+        offset = shard_index() * local_clients
+        return transport_lib.transmit_batch(
+            xl, key, cfg, snr_db=sl, client_offset=offset)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(ax_spec, None), P(ax_spec)),
+        out_specs=(P(ax_spec, None), P(ax_spec)),
+    )(x, snr_vec)
 
 
 import re

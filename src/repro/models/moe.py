@@ -168,9 +168,17 @@ def moe_ffn_shardmap(x: jax.Array, p, cfg):
     """Expert-parallel MoE: (B, S, D) -> (out, aux). Falls back to the dense
     dispatch when no auto data axes exist (e.g. inside the per-client
     uplink shard_map, where experts are replicated per client cohort)."""
+    from repro.compat import LEGACY_JAX
+
     axes, nd = _usable_data_axes(cfg)
     E = cfg.n_experts
     if not axes or nd == 1 or E % nd != 0 or x.ndim != 3 or x.shape[0] % nd != 0:
+        return moe_ffn(x, p, cfg)
+    if LEGACY_JAX:
+        # Legacy XLA crashes on tiled all_to_all inside a partial-manual
+        # shard_map (spmd_partitioner IsManualSubgroup CHECK); use the dense
+        # dispatch there — numerically identical, just without the
+        # expert-parallel communication schedule.
         return moe_ffn(x, p, cfg)
     from jax.sharding import PartitionSpec as P
 

@@ -1,0 +1,49 @@
+"""Documentation gate for the core package (``make docs-check``).
+
+Fails (exit 1) when a public module under ``src/repro/core/`` lacks a module
+docstring, or a public (non-underscore) top-level function in one of those
+modules lacks a function docstring. Kept dependency-free: pure ``ast``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+CORE = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+
+
+def check_module(path: pathlib.Path) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    problems = []
+    if ast.get_docstring(tree) is None:
+        problems.append(f"{path}: missing module docstring")
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name.startswith("_"):
+                continue
+            if ast.get_docstring(node) is None:
+                problems.append(
+                    f"{path}:{node.lineno}: public function "
+                    f"`{node.name}` missing docstring")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for path in sorted(CORE.glob("*.py")):
+        if path.name.startswith("_") and path.name != "__init__.py":
+            continue
+        problems.extend(check_module(path))
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"docs-check: {len(problems)} problem(s)")
+        return 1
+    print(f"docs-check: OK ({len(list(CORE.glob('*.py')))} modules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
