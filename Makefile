@@ -4,7 +4,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke docs-check
+.PHONY: test bench-smoke bench-link docs-check
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -14,6 +14,12 @@ test:
 # (single-client kernel, batched multi-client engine) — minutes, not hours.
 bench-smoke:
 	$(PY) -m benchmarks.run --only kernel,scaling
+
+# Link-adaptation smoke: adaptive policy vs fixed transports at reduced
+# scale (quick profile: one scenario, 24 clients) + the 64-client
+# mixed-mode single-trace check.
+bench-link:
+	$(PY) -m benchmarks.run --only link
 
 # Fails if a public module (or public function) under src/repro/core/ lacks
 # a docstring.

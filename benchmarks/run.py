@@ -22,6 +22,8 @@ SUITES = {
     "fig4": ("benchmarks.same_snr_same_ber", "same-SNR / same-BER (Fig. 4)"),
     "fedavg": ("benchmarks.fedavg_ablation", "FedAvg + adaptive scaling ablation"),
     "roofline": ("benchmarks.roofline_report", "dry-run roofline summary"),
+    "link": ("benchmarks.link_adaptation",
+             "adaptive mode policy vs fixed transports across scenarios"),
 }
 
 
@@ -31,6 +33,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     picks = [s.strip() for s in args.only.split(",") if s.strip()] or list(SUITES)
+    unknown = [p for p in picks if p not in SUITES]
+    if unknown:
+        print(f"unknown suite(s): {', '.join(unknown)}", file=sys.stderr)
+        print(f"valid suites: {', '.join(SUITES)}", file=sys.stderr)
+        raise SystemExit(2)
 
     print("name,us_per_call,derived")
     for name in picks:

@@ -35,6 +35,7 @@ __all__ = [
     "noise_var_post_eq",
     "noise_power_for",
     "per_client_snr_db",
+    "snr_db_vector",
 ]
 
 
@@ -74,6 +75,17 @@ class ChannelConfig:
             )
         return self.large_scale_gain / (10.0 ** (float(self.snr_db) / 10.0))
 
+    def with_snr(self, snr_db) -> "ChannelConfig":
+        """Copy of this config at a different average SNR.
+
+        The static (rebuild-the-config) counterpart of the traced per-round
+        ``snr_db=`` override that :func:`transmit` and the batched transport
+        accept — scenario code uses the override for per-round trajectories
+        and ``with_snr`` when it wants a distinct static operating point
+        (e.g. fixed-mode baseline arms of a link-adaptation sweep).
+        """
+        return dataclasses.replace(self, snr_db=snr_db)
+
 
 def _is_scalar_snr(snr_db) -> bool:
     """True for Python/numpy real scalars (incl. 0-d arrays), False for
@@ -94,9 +106,18 @@ def snr_db_vector(snr_db, num_clients: int) -> jax.Array:
 
     Accepts a scalar, single-element, or length-``num_clients`` value (static
     or traced); anything else raises ValueError. The single shared rule for
-    both the config path and the ``snr_db=`` call override.
+    both the config path and the ``snr_db=`` call override. Arrays with more
+    than one dimension are rejected rather than flattened — a silently
+    flattened ``(2, C/2)`` grid would pass the length check while scrambling
+    the client <-> SNR pairing.
     """
-    arr = jnp.asarray(snr_db, jnp.float32).reshape(-1)
+    arr = jnp.asarray(snr_db, jnp.float32)
+    if arr.ndim > 1:
+        raise ValueError(
+            f"snr_db must be a scalar or 1-D per-client vector; got shape "
+            f"{arr.shape}"
+        )
+    arr = arr.reshape(-1)
     if arr.shape[0] == 1:
         return jnp.broadcast_to(arr, (num_clients,))
     if arr.shape[0] != num_clients:

@@ -31,7 +31,8 @@ from repro.core import ecrt as ecrt_lib
 from repro.core import modulation as mod_lib
 from repro.core import transport as transport_lib
 
-__all__ = ["PhyTimings", "round_airtime", "calibrate_ecrt"]
+__all__ = ["PhyTimings", "round_airtime", "round_airtime_adaptive",
+           "calibrate_ecrt"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,29 @@ def round_airtime(stats: transport_lib.TxStats, timings: PhyTimings, mode: str):
     if mode == "ecrt":
         t_data = t_data * (1.0 + timings.fec_encode_overhead)
     return t_data + t_ovh
+
+
+def round_airtime_adaptive(stats: transport_lib.TxStats, timings: PhyTimings,
+                           cfgs):
+    """Per-client airtime of a mixed-mode round (link-adaptation dispatch).
+
+    ``stats`` must come from ``transport.transmit_batch_adaptive`` (its
+    ``mode_idx`` selects each client's row of the ``cfgs`` table); ECRT
+    clients pay the FEC-processing stall, everyone else does not — the
+    per-client generalization of :func:`round_airtime`'s static ``mode``
+    argument. Returns ``(num_clients,)`` seconds.
+    """
+    if stats.mode_idx is None:
+        raise ValueError(
+            "round_airtime_adaptive needs TxStats.mode_idx (from "
+            "transmit_batch_adaptive); for single-mode stats use round_airtime"
+        )
+    fec_stall = jnp.asarray(
+        [timings.fec_encode_overhead if c.mode == "ecrt" else 0.0 for c in cfgs],
+        jnp.float32,
+    )[stats.mode_idx]
+    t_data = stats.data_symbols / timings.symbol_rate * (1.0 + fec_stall)
+    return t_data + stats.transmissions * timings.t_overhead
 
 
 @functools.lru_cache(maxsize=64)

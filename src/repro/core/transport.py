@@ -39,6 +39,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import channel as channel_lib
 from repro.core import ecrt as ecrt_lib
@@ -53,6 +54,8 @@ __all__ = [
     "transmit_pytree",
     "transmit_batch",
     "transmit_pytree_batch",
+    "transmit_batch_adaptive",
+    "transmit_pytree_batch_adaptive",
 ]
 
 
@@ -109,12 +112,19 @@ class TxStats:
     Fields are float32 jnp scalars for a single uplink (``transmit_flat``),
     or ``(num_clients,)`` arrays for a batched one (``transmit_batch``) —
     every formula above applies elementwise.
+
+    ``mode_idx`` is the link-adaptation extension: ``None`` for single-mode
+    calls, or the ``(num_clients,)`` int32 vector of per-client mode choices
+    for :func:`transmit_batch_adaptive` — indices into the config table the
+    caller dispatched over, so ``latency.round_airtime_adaptive`` can price
+    each client's airtime under its own mode.
     """
 
     data_symbols: jax.Array  # symbols of payload actually sent (incl. retx)
     transmissions: jax.Array  # number of PHY transmissions (1 unless ECRT)
     bit_errors: jax.Array  # residual bit errors after the receiver pipeline
     n_bits: jax.Array
+    mode_idx: Any = None  # (num_clients,) int32 for adaptive batches
 
     @property
     def ber(self) -> jax.Array:
@@ -320,7 +330,10 @@ def _resolve_batch_snr(cfg: TransportConfig, num_clients: int, snr_db):
 
     ``None`` means "homogeneous, use the config scalar" — that path is kept
     distinct so it stays bit-identical to ``transmit_flat`` (no dB->linear
-    recomputation under trace).
+    recomputation under trace). Shape validation happens up front in
+    ``channel.snr_db_vector`` (the single shared rule): anything that is not
+    a scalar, a single element, or exactly ``(num_clients,)`` raises
+    ValueError naming both sizes.
     """
     if snr_db is not None:
         return channel_lib.snr_db_vector(snr_db, num_clients)
@@ -374,6 +387,101 @@ def transmit_batch(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
         x, keys, snr_vec)
 
 
+def _same_channel(a: channel_lib.ChannelConfig,
+                  b: channel_lib.ChannelConfig) -> bool:
+    """ChannelConfig equality that tolerates array-valued ``snr_db``.
+
+    Plain dataclass ``==`` on two distinct configs with per-client snr_db
+    arrays evaluates an ambiguous-truth array comparison; compare the scalar
+    fields and the snr_db values separately instead.
+    """
+    if a is b:
+        return True
+    if dataclasses.replace(a, snr_db=0.0) != dataclasses.replace(b, snr_db=0.0):
+        return False
+    return np.array_equal(np.asarray(a.snr_db, np.float32),
+                          np.asarray(b.snr_db, np.float32))
+
+
+def transmit_batch_adaptive(x: jax.Array, key: jax.Array,
+                            cfgs, mode_idx, *, snr_db=None, client_offset=0):
+    """Mixed-mode batched uplink: client ``i`` uses ``cfgs[mode_idx[i]]``.
+
+    The link-adaptation dispatch (paper Sec. I: deliver gradients with errors
+    "when the channel quality is satisfactory", protect otherwise): a policy
+    upstream picks a transport config per client per round, and the whole
+    cohort still runs as **one fused XLA program** — the per-client pipeline
+    is a ``lax.switch`` over the config table, vmapped over clients, so a
+    mixed approx/ECRT/high-order-QAM round costs one jit trace and no
+    per-client Python loop. Under vmap the switch lowers to a select over
+    all branches, so the FLOP cost is ~``len(cfgs)`` single-mode batches —
+    keep the table small (3-5 modes) and use the analytic ECRT model
+    (``simulate_fec=False``) inside FL loops.
+
+    Args:
+      x: ``(num_clients, N)`` payload matrix.
+      key: base PRNG key; the :func:`client_keys` fold_in schedule is shared
+        with :func:`transmit_batch`, so row ``i`` is bit-identical to
+        ``transmit_flat(x[i], fold_in(key, client_offset + i), cfgs[m_i])``.
+      cfgs: sequence of :class:`TransportConfig` — the mode table. All
+        entries must share one ``ChannelConfig`` (the physical link does not
+        depend on the chosen transport) and must not use the Pallas kernel
+        path (``use_kernel`` does not lower inside a vmapped switch).
+      mode_idx: ``(num_clients,)`` integer vector of table indices.
+      snr_db: optional per-client SNR override (scalar or ``(num_clients,)``),
+        resolved against the shared channel config.
+      client_offset: global index of row 0 (as in :func:`transmit_batch`).
+
+    Returns:
+      ``(x_hat, stats)`` as :func:`transmit_batch`; ``stats.mode_idx`` holds
+      the per-client mode vector.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"transmit_batch_adaptive wants (num_clients, N); got {x.shape}")
+    cfgs = tuple(cfgs)
+    if not cfgs:
+        raise ValueError("transmit_batch_adaptive needs a non-empty config table")
+    for cfg in cfgs:
+        if cfg.use_kernel:
+            raise ValueError(
+                "use_kernel configs cannot be dispatched per client; the "
+                "Pallas path does not lower inside a vmapped lax.switch"
+            )
+        if not _same_channel(cfg.channel, cfgs[0].channel):
+            raise ValueError(
+                "all adaptive mode configs must share one ChannelConfig; "
+                f"got {cfg.channel} vs {cfgs[0].channel}"
+            )
+    num_clients = x.shape[0]
+    mode_idx = jnp.asarray(mode_idx, jnp.int32)
+    if mode_idx.shape != (num_clients,):
+        raise ValueError(
+            f"mode_idx must be ({num_clients},) to match the batch; got "
+            f"{mode_idx.shape}"
+        )
+    snr_vec = _resolve_batch_snr(cfgs[0], num_clients, snr_db)
+    keys = client_keys(key, num_clients, client_offset)
+
+    if snr_vec is None:
+        branches = [
+            lambda xc, kc, cfg=cfg: transmit_flat(xc, kc, cfg) for cfg in cfgs
+        ]
+        x_hat, stats = jax.vmap(
+            lambda xc, kc, m: jax.lax.switch(m, branches, xc, kc)
+        )(x, keys, mode_idx)
+    else:
+        branches = [
+            lambda xc, kc, s, cfg=cfg: transmit_flat(xc, kc, cfg, snr_db=s)
+            for cfg in cfgs
+        ]
+        x_hat, stats = jax.vmap(
+            lambda xc, kc, s, m: jax.lax.switch(m, branches, xc, kc, s)
+        )(x, keys, snr_vec, mode_idx)
+    stats.mode_idx = mode_idx
+    return x_hat, stats
+
+
 def transmit_pytree(tree: Any, key: jax.Array, cfg: TransportConfig):
     """Transmit every leaf of a pytree as one flat uplink payload."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -385,6 +493,28 @@ def transmit_pytree(tree: Any, key: jax.Array, cfg: TransportConfig):
         out.append(flat_hat[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
         off += size
     return jax.tree_util.tree_unflatten(treedef, out), stats
+
+
+def _flatten_client_tree(tree: Any):
+    """Stack a ``(num_clients, ...)``-leaved pytree into one (C, D) matrix."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    num_clients = leaves[0].shape[0]
+    sizes = [l.size // num_clients for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(num_clients, -1).astype(jnp.float32) for l in leaves], axis=1
+    )
+    return flat, (leaves, treedef, sizes)
+
+
+def _unflatten_client_tree(flat_hat: jax.Array, spec) -> Any:
+    leaves, treedef, sizes = spec
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(
+            flat_hat[:, off : off + size].reshape(leaf.shape).astype(leaf.dtype)
+        )
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def transmit_pytree_batch(tree: Any, key: jax.Array, cfg: TransportConfig, *,
@@ -401,17 +531,20 @@ def transmit_pytree_batch(tree: Any, key: jax.Array, cfg: TransportConfig, *,
       ``(tree_hat, stats)`` with the input structure/shapes/dtypes restored
       and per-client :class:`TxStats` (``(num_clients,)`` fields).
     """
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    num_clients = leaves[0].shape[0]
-    sizes = [l.size // num_clients for l in leaves]
-    flat = jnp.concatenate(
-        [l.reshape(num_clients, -1).astype(jnp.float32) for l in leaves], axis=1
-    )
+    flat, spec = _flatten_client_tree(tree)
     flat_hat, stats = transmit_batch(flat, key, cfg, snr_db=snr_db)
-    out, off = [], 0
-    for leaf, size in zip(leaves, sizes):
-        out.append(
-            flat_hat[:, off : off + size].reshape(leaf.shape).astype(leaf.dtype)
-        )
-        off += size
-    return jax.tree_util.tree_unflatten(treedef, out), stats
+    return _unflatten_client_tree(flat_hat, spec), stats
+
+
+def transmit_pytree_batch_adaptive(tree: Any, key: jax.Array, cfgs, mode_idx,
+                                   *, snr_db=None):
+    """Pytree front-end of :func:`transmit_batch_adaptive`.
+
+    Same flatten/transmit/unflatten contract as :func:`transmit_pytree_batch`
+    with a per-client mode table dispatch — the entry point the
+    scenario-driven FL loops feed each round's gradients through.
+    """
+    flat, spec = _flatten_client_tree(tree)
+    flat_hat, stats = transmit_batch_adaptive(
+        flat, key, cfgs, mode_idx, snr_db=snr_db)
+    return _unflatten_client_tree(flat_hat, spec), stats

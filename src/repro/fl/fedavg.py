@@ -26,7 +26,12 @@ import numpy as np
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import cnn
-from repro.fl.loop import FLResult
+from repro.fl.loop import (
+    FLResult,
+    dropout_weighted_mean,
+    record_link_round,
+    resolve_scenario,
+)
 from repro.optim.sgd import sgd as make_sgd
 
 
@@ -44,6 +49,7 @@ def run_fedavg(
     seed: int = 0,
     eval_every: int = 2,
     timings: latency_lib.PhyTimings | None = None,
+    scenario=None,
 ) -> FLResult:
     timings = timings or latency_lib.PhyTimings()
     M = client_x.shape[0]
@@ -51,8 +57,10 @@ def run_fedavg(
     key, pk = jax.random.split(key)
     params = cnn.init_params(pk, cfg)
     grad_fn = jax.grad(cnn.loss_fn)
+    driver = resolve_scenario(scenario, transport_cfg)
 
-    if transport_cfg.mode == "ecrt" and transport_cfg.simulate_fec:
+    if (driver is None and transport_cfg.mode == "ecrt"
+            and transport_cfg.simulate_fec):
         # mean SNR for heterogeneous cohorts (see loop.py)
         snr_cal = float(np.mean(np.asarray(transport_cfg.channel.snr_db)))
         e_tx = latency_lib.calibrate_ecrt(
@@ -60,9 +68,8 @@ def run_fedavg(
         transport_cfg = dataclasses.replace(
             transport_cfg, simulate_fec=False, ecrt_expected_tx=float(e_tx))
 
-    @jax.jit
-    def round_step(params, xb, yb, key):
-        # xb: (M, local_steps, batch, 28, 28)
+    def client_deltas(params, xb, yb):
+        # xb: (M, local_steps, batch, 28, 28) -> weight deltas, leaves (M, ...)
         def client_update(x, y):
             def body(p, inp):
                 xi, yi = inp
@@ -73,37 +80,58 @@ def run_fedavg(
             local, _ = jax.lax.scan(body, params, (x, y))
             return jax.tree_util.tree_map(lambda a, b: a - b, local, params)
 
-        deltas = jax.vmap(client_update)(xb, yb)  # leaves (M, ...)
+        return jax.vmap(client_update)(xb, yb)
 
-        if scale_mode == "max_abs":
-            # Per-client adaptive scale: one scalar per client travels on the
-            # (error-free) control channel; the whole cohort then rides the
-            # batched uplink in a single fused computation.
-            flat = jnp.concatenate(
-                [l.reshape(M, -1) for l in jax.tree_util.tree_leaves(deltas)],
-                axis=1)
-            scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
+    def scaled_uplink(deltas, transmit):
+        # Per-client adaptive scale (scale_mode == "max_abs"): one scalar per
+        # client travels on the (error-free) control channel; the cohort then
+        # rides the batched uplink in a single fused computation.
+        if scale_mode != "max_abs":
+            return transmit(deltas)
+        flat = jnp.concatenate(
+            [l.reshape(M, -1) for l in jax.tree_util.tree_leaves(deltas)],
+            axis=1)
+        scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
 
-            def expand(s, like):
-                return s.reshape((M,) + (1,) * (like.ndim - 1))
+        def expand(s, like):
+            return s.reshape((M,) + (1,) * (like.ndim - 1))
 
-            scaled = jax.tree_util.tree_map(
-                lambda l: l / expand(scale, l), deltas)
-            out, stats = transport_lib.transmit_pytree_batch(
-                scaled, key, transport_cfg)
-            deltas_hat = jax.tree_util.tree_map(
-                lambda l: l * expand(scale, l), out)
-        else:
-            deltas_hat, stats = transport_lib.transmit_pytree_batch(
-                deltas, key, transport_cfg)
+        scaled = jax.tree_util.tree_map(lambda l: l / expand(scale, l), deltas)
+        out, stats = transmit(scaled)
+        return jax.tree_util.tree_map(lambda l: l * expand(scale, l), out), stats
 
+    @jax.jit
+    def round_step(params, xb, yb, key):
+        deltas = client_deltas(params, xb, yb)
+        deltas_hat, stats = scaled_uplink(
+            deltas,
+            lambda t: transport_lib.transmit_pytree_batch(t, key, transport_cfg))
         agg = jax.tree_util.tree_map(lambda d: jnp.mean(d, axis=0), deltas_hat)
         new_params = jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
         return new_params, stats
 
     @jax.jit
+    def round_step_link(params, xb, yb, key, lstate, prev_mode, prev_est):
+        # Scenario-driven round: link pipeline + mixed-mode uplink +
+        # dropout-weighted FedAvg aggregate (see loop.run_fl).
+        k_link, k_tx = jax.random.split(key)
+        lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
+        deltas = client_deltas(params, xb, yb)
+        deltas_hat, stats = scaled_uplink(
+            deltas,
+            lambda t: transport_lib.transmit_pytree_batch_adaptive(
+                t, k_tx, driver.mode_cfgs, rnd.mode, snr_db=rnd.snr_db))
+        agg = dropout_weighted_mean(deltas_hat, rnd.active)
+        new_params = jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
+        return new_params, stats, lstate, rnd
+
+    @jax.jit
     def eval_acc(params):
         return cnn.accuracy(params, jnp.asarray(test_x), jnp.asarray(test_y))
+
+    if driver is not None:
+        key, lk = jax.random.split(key)
+        lstate, prev_mode, prev_est = driver.init(lk, M)
 
     rng = np.random.default_rng(seed)
     res = FLResult([], [], [], 0.0, 0.0)
@@ -118,8 +146,14 @@ def run_fedavg(
         yb = jnp.asarray(np.take_along_axis(
             client_y, take.reshape(M, -1), axis=1
         ).reshape(M, local_steps, batch_per_step))
-        params, stats = round_step(params, xb, yb, rk)
-        air = latency_lib.round_airtime(stats, timings, transport_cfg.mode)
+        if driver is None:
+            params, stats = round_step(params, xb, yb, rk)
+            air = latency_lib.round_airtime(stats, timings, transport_cfg.mode)
+        else:
+            params, stats, lstate, rnd = round_step_link(
+                params, xb, yb, rk, lstate, prev_mode, prev_est)
+            prev_mode, prev_est = rnd.mode, rnd.est_db
+            air = record_link_round(res, r, driver, stats, rnd, timings)
         cum_air += float(jnp.sum(air))
         if r % eval_every == 0 or r == n_rounds - 1:
             res.rounds.append(r)

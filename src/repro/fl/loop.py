@@ -11,6 +11,14 @@ One round (paper Sec. II):
 
 One XLA program per round regardless of M; per-client TxStats feed the
 latency model directly.
+
+Scenario-driven rounds (``scenario=``): instead of one static transport
+mode and SNR, each round runs the link-adaptation pipeline inside the same
+jitted step — ``repro.link`` dynamics evolve per-client SNR, the estimator
+produces noisy CSI, the policy picks each client's mode, the mixed-mode
+batched uplink delivers (``transmit_pytree_batch_adaptive``), and dropped
+clients are excluded from the weighted aggregate. Per-round link telemetry
+lands in ``FLResult.link``.
 """
 
 from __future__ import annotations
@@ -36,6 +44,63 @@ class FLResult:
     airtime_s: list  # cumulative uplink airtime (TDMA sum over clients)
     wall_s: float
     final_accuracy: float
+    # Per-round link telemetry (scenario-driven runs only; [] otherwise).
+    # Each entry: {round, mean_snr_db, mean_est_db, mode_counts, n_active,
+    # n_stragglers, airtime_s} — mode_counts indexes the driver's mode table.
+    link: list = dataclasses.field(default_factory=list)
+
+
+def resolve_scenario(scenario, transport_cfg):
+    """``scenario=`` argument -> a bound ``ScenarioDriver`` (or ``None``).
+
+    Accepts a registered scenario name, a ``Scenario``, or an already-built
+    ``ScenarioDriver``; shared by ``run_fl`` and ``fedavg.run_fedavg``.
+    """
+    if scenario is None:
+        return None
+    from repro.link import scenario as scenario_lib
+
+    if isinstance(scenario, scenario_lib.ScenarioDriver):
+        return scenario
+    if isinstance(scenario, str):
+        scenario = scenario_lib.get_scenario(scenario)
+    return scenario_lib.ScenarioDriver(scenario, transport_cfg)
+
+
+def dropout_weighted_mean(tree, active):
+    """Mean of ``(M, ...)`` leaves over active clients only.
+
+    ``active`` is the 0/1 ``(M,)`` availability vector; an all-dropped round
+    yields zeros (the global model simply does not move). Jit-safe — the
+    shared aggregation rule of both scenario-driven FL loops.
+    """
+    denom = jnp.maximum(jnp.sum(active), 1.0)
+    return jax.tree_util.tree_map(
+        lambda g: jnp.tensordot(active, g, axes=(0, 0)) / denom, tree)
+
+
+def record_link_round(res: "FLResult", r: int, driver, stats, rnd,
+                      timings) -> jax.Array:
+    """Per-round scenario bookkeeping shared by the FL loops: price the
+    round's per-client airtime and append the telemetry record. Returns the
+    ``(M,)`` airtime vector."""
+    air = driver.airtime(stats, rnd, timings)
+    res.link.append(link_telemetry(r, rnd, air, len(driver.mode_cfgs)))
+    return air
+
+
+def link_telemetry(r: int, rnd, per_client_air, n_modes: int) -> dict:
+    """One ``FLResult.link`` record from a round's ``LinkRound`` + airtime."""
+    mode = np.asarray(rnd.mode)
+    return {
+        "round": r,
+        "mean_snr_db": float(np.mean(np.asarray(rnd.snr_db))),
+        "mean_est_db": float(np.mean(np.asarray(rnd.est_db))),
+        "mode_counts": np.bincount(mode, minlength=n_modes).tolist(),
+        "n_active": int(np.asarray(rnd.active).sum()),
+        "n_stragglers": int(np.asarray(rnd.straggler).sum()),
+        "airtime_s": float(np.asarray(per_client_air).sum()),
+    }
 
 
 def run_fl(
@@ -50,6 +115,7 @@ def run_fl(
     seed: int = 0,
     eval_every: int = 2,
     timings: latency_lib.PhyTimings | None = None,
+    scenario=None,
 ) -> FLResult:
     timings = timings or latency_lib.PhyTimings()
     M = client_x.shape[0]
@@ -58,12 +124,14 @@ def run_fl(
     params = cnn.init_params(pk, cfg)
     opt = make_sgd(cfg.lr)
     opt_state = opt.init(params)
+    driver = resolve_scenario(scenario, transport_cfg)
 
     # ECRT inside a vmapped per-round loop uses the calibrated analytic model
     # (the real decoder is exercised in tests/benchmarks; see DESIGN.md).
     # Heterogeneous cohorts calibrate at the mean SNR (E[tx] is a round-level
     # airtime constant here, not a per-client quantity).
-    if transport_cfg.mode == "ecrt" and transport_cfg.simulate_fec:
+    if (driver is None and transport_cfg.mode == "ecrt"
+            and transport_cfg.simulate_fec):
         snr_cal = float(np.mean(np.asarray(transport_cfg.channel.snr_db)))
         e_tx = latency_lib.calibrate_ecrt(
             snr_cal, transport_cfg.modulation, n_codewords=96, max_tx=6)
@@ -87,8 +155,30 @@ def run_fl(
         return new_params, new_state, stats
 
     @jax.jit
+    def round_step_link(params, opt_state, xb, yb, key, lstate, prev_mode,
+                        prev_est):
+        # One fused program: dynamics -> noisy CSI -> mode policy ->
+        # mixed-mode batched uplink -> dropout-weighted aggregation.
+        k_link, k_tx = jax.random.split(key)
+        lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
+
+        def client_grad(x, y):
+            return grad_fn(params, x, y)
+
+        grads = jax.vmap(client_grad)(xb, yb)
+        grads_hat, stats = transport_lib.transmit_pytree_batch_adaptive(
+            grads, k_tx, driver.mode_cfgs, rnd.mode, snr_db=rnd.snr_db)
+        agg = dropout_weighted_mean(grads_hat, rnd.active)
+        new_params, new_state = opt.update(agg, opt_state, params)
+        return new_params, new_state, stats, lstate, rnd
+
+    @jax.jit
     def eval_acc(params):
         return cnn.accuracy(params, jnp.asarray(test_x), jnp.asarray(test_y))
+
+    if driver is not None:
+        key, lk = jax.random.split(key)
+        lstate, prev_mode, prev_est = driver.init(lk, M)
 
     rng = np.random.default_rng(seed)
     res = FLResult([], [], [], 0.0, 0.0)
@@ -99,9 +189,17 @@ def run_fl(
         take = rng.integers(0, client_x.shape[1], (M, batch_per_round))
         xb = jnp.asarray(np.take_along_axis(client_x, take[:, :, None, None], axis=1))
         yb = jnp.asarray(np.take_along_axis(client_y, take, axis=1))
-        params, opt_state, stats = round_step(params, opt_state, xb, yb, rk)
-        # TDMA uplink: total airtime is the sum over clients ((M,) stats)
-        per_client_air = latency_lib.round_airtime(stats, timings, transport_cfg.mode)
+        if driver is None:
+            params, opt_state, stats = round_step(params, opt_state, xb, yb, rk)
+            # TDMA uplink: total airtime is the sum over clients ((M,) stats)
+            per_client_air = latency_lib.round_airtime(
+                stats, timings, transport_cfg.mode)
+        else:
+            params, opt_state, stats, lstate, rnd = round_step_link(
+                params, opt_state, xb, yb, rk, lstate, prev_mode, prev_est)
+            prev_mode, prev_est = rnd.mode, rnd.est_db
+            per_client_air = record_link_round(
+                res, r, driver, stats, rnd, timings)
         cum_air += float(jnp.sum(per_client_air))
         if r % eval_every == 0 or r == n_rounds - 1:
             acc = float(eval_acc(params))

@@ -1,0 +1,27 @@
+"""Link adaptation: time-varying channels, noisy CSI, per-client mode policy.
+
+The subsystem that turns the repro from "one channel, one mode" into the
+paper's conditional system — channel state evolves per round
+(:mod:`repro.link.dynamics`), the PS estimates it from pilots
+(:mod:`repro.link.estimator`), a hysteresis policy picks each client's
+transport mode (:mod:`repro.link.policy`), and named end-to-end scenarios
+drive the FL loops (:mod:`repro.link.scenario`).
+"""
+
+from repro.link.dynamics import (
+    DYNAMICS_PRESETS,
+    LinkDynamicsConfig,
+    LinkState,
+    jakes_rho,
+)
+from repro.link.estimator import EstimatorConfig, estimate_snr_db
+from repro.link.policy import PolicyConfig, build_mode_cfgs, choose_mode, fixed_policy
+from repro.link.scenario import (
+    SCENARIOS,
+    LinkRound,
+    Scenario,
+    ScenarioDriver,
+    get_scenario,
+    list_scenarios,
+    register_scenario,
+)

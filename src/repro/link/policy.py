@@ -1,0 +1,136 @@
+"""Per-client transmission-mode policy: the paper's conditional mechanism.
+
+The paper's scheme "simply delivers gradients with errors when the channel
+quality is satisfactory" and falls back to protection otherwise — this
+module is that decision, made explicit, per client, per round:
+
+* a **mode table** orders link modes from most protected to most aggressive
+  (default: ECRT -> approx/QPSK -> approx/16-QAM -> approx/256-QAM — the
+  last three being adaptive modulation-order selection over the paper's
+  MSB-protected Gray-QAM transport; 64-QAM is excluded because 6 bits per
+  symbol cannot pack 32-bit wire words, see ``build_mode_cfgs``);
+* ``choose_mode`` maps estimated SNR to a table index by thresholds, with
+  **hysteresis**: a link must clear a threshold by ``+h/2`` to move up and
+  fall ``h/2`` below it to move down, so CSI jitter near a boundary does not
+  flap modes (flapping is costly: every ECRT-to-approx flip changes airtime
+  and error statistics round to round);
+* ``build_mode_cfgs`` materializes the table as ``TransportConfig`` rows for
+  ``transport.transmit_batch_adaptive``.
+
+All decision functions are pure jnp (vmap/scan/jit-friendly): a mixed-mode
+64-client round — dynamics, estimation, policy, uplink — compiles to one
+XLA program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import modulation as mod_lib
+from repro.core import transport as transport_lib
+
+__all__ = [
+    "PolicyConfig",
+    "fixed_policy",
+    "initial_mode",
+    "choose_mode",
+    "build_mode_cfgs",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    """Threshold policy over an ordered mode table.
+
+    ``modes[i]`` is a ``(transport_mode, modulation)`` pair; ``modes[0]`` is
+    the protected fallback. ``thresholds_db[i]`` is the estimated-SNR level
+    above which mode ``i+1`` becomes eligible (``len(thresholds_db) ==
+    len(modes) - 1``, ascending). Defaults: below 6 dB the link is not
+    "satisfactory" and gets ECRT; uncoded QPSK to 16 dB (the paper's 10 dB
+    operating point sits here); Gray 16-QAM to 26 dB; Gray 256-QAM above.
+    (Approx modulations must divide the 32-bit float wire word: QPSK /
+    16-QAM / 256-QAM. 64-QAM's k=6 cannot pack float32 words MSB-first —
+    ``build_mode_cfgs`` rejects it up front.)
+    """
+
+    modes: tuple = (
+        ("ecrt", "qpsk"),
+        ("approx", "qpsk"),
+        ("approx", "16qam"),
+        ("approx", "256qam"),
+    )
+    thresholds_db: tuple = (6.0, 16.0, 26.0)
+    hysteresis_db: float = 2.0
+
+    def __post_init__(self):
+        if len(self.thresholds_db) != len(self.modes) - 1:
+            raise ValueError(
+                f"need len(modes)-1 = {len(self.modes) - 1} thresholds, got "
+                f"{len(self.thresholds_db)}"
+            )
+        if list(self.thresholds_db) != sorted(self.thresholds_db):
+            raise ValueError(f"thresholds must ascend: {self.thresholds_db}")
+
+
+def fixed_policy(mode: str, modulation: str = "qpsk") -> PolicyConfig:
+    """A degenerate single-mode policy — the fixed-transport baseline arms
+    of a link-adaptation comparison ride the same scenario machinery."""
+    return PolicyConfig(modes=((mode, modulation),), thresholds_db=())
+
+
+def initial_mode(snr_est_db: jax.Array, cfg: PolicyConfig) -> jax.Array:
+    """Hysteresis-free threshold mapping (used to seed round 0)."""
+    thr = jnp.asarray(cfg.thresholds_db, jnp.float32)
+    snr = jnp.asarray(snr_est_db, jnp.float32)
+    return jnp.sum(snr[..., None] >= thr, axis=-1).astype(jnp.int32)
+
+
+def choose_mode(snr_est_db: jax.Array, prev_mode: jax.Array,
+                cfg: PolicyConfig) -> jax.Array:
+    """Per-client mode for this round given noisy CSI and the previous mode.
+
+    With half-window ``h = hysteresis_db / 2``: ``up`` counts thresholds
+    cleared by ``+h`` (the highest mode the link may *rise* to), ``down``
+    counts thresholds cleared by ``-h`` (the highest mode it may *hold*).
+    ``up <= down`` always, and ``clip(prev, up, down)`` is exactly
+    "move only when the margin is decisive, else keep the current mode".
+    Pure jnp — broadcasts over any leading shape.
+    """
+    thr = jnp.asarray(cfg.thresholds_db, jnp.float32)
+    snr = jnp.asarray(snr_est_db, jnp.float32)[..., None]
+    h = cfg.hysteresis_db / 2.0
+    up = jnp.sum(snr >= thr + h, axis=-1).astype(jnp.int32)
+    down = jnp.sum(snr >= thr - h, axis=-1).astype(jnp.int32)
+    return jnp.clip(jnp.asarray(prev_mode, jnp.int32), up, down)
+
+
+def build_mode_cfgs(base: transport_lib.TransportConfig, cfg: PolicyConfig,
+                    *, ecrt_expected_tx: float = 2.2):
+    """Materialize the mode table as ``TransportConfig`` rows.
+
+    Every row inherits ``base`` (channel, interleaving, wire dtype, clamp
+    bound) and overrides mode/modulation. ECRT rows use the calibrated
+    analytic model (``simulate_fec=False`` with ``ecrt_expected_tx``) — the
+    real decoder inside a vmapped ``lax.switch`` would run for every client
+    whatever their mode; calibrate E[tx] once at the protected regime's SNR
+    instead (see ``latency.calibrate_ecrt``). ``use_kernel`` is force-cleared
+    (the Pallas path cannot be switched per client).
+    """
+    rows = []
+    wire_bits = 16 if base.wire_dtype == "bfloat16" else 32
+    for mode, modulation in cfg.modes:
+        k = mod_lib.MOD_SCHEMES[modulation].bits_per_symbol
+        if mode in ("approx", "naive") and wire_bits % k != 0:
+            raise ValueError(
+                f"{modulation} ({k} bits/symbol) cannot carry the "
+                f"{wire_bits}-bit wire words MSB-first; pick a modulation "
+                f"whose bits_per_symbol divides {wire_bits}"
+            )
+        rows.append(dataclasses.replace(
+            base, mode=mode, modulation=modulation, use_kernel=False,
+            simulate_fec=False,
+            ecrt_expected_tx=ecrt_expected_tx if mode == "ecrt" else 1.0,
+        ))
+    return tuple(rows)

@@ -1,0 +1,196 @@
+"""End-to-end link scenarios: dynamics + CSI + policy + client availability.
+
+A :class:`Scenario` bundles everything the FL loops need to run the paper's
+adaptive system under a named mobility/availability profile: how per-client
+SNR evolves round to round (``link.dynamics``), how noisily the PS observes
+it (``link.estimator``), how the mode policy reacts (``link.policy``), and
+which clients drop out or straggle. ``SCENARIOS`` is the registry
+(``get_scenario``/``register_scenario``/``list_scenarios``);
+:class:`ScenarioDriver` compiles a scenario against a base transport config
+into pure per-round functions that live *inside* the jitted FL round step —
+one XLA program per round, link adaptation included.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import latency as latency_lib
+from repro.core import transport as transport_lib
+from repro.link import dynamics as dynamics_lib
+from repro.link import estimator as estimator_lib
+from repro.link import policy as policy_lib
+
+__all__ = [
+    "Scenario",
+    "LinkRound",
+    "ScenarioDriver",
+    "SCENARIOS",
+    "get_scenario",
+    "register_scenario",
+    "list_scenarios",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A named, fully specified link environment for an FL run.
+
+    ``dropout_prob`` is the per-round probability a client is silently
+    absent (no uplink, no airtime, excluded from aggregation);
+    ``straggler_prob``/``straggler_slowdown`` model clients whose uplink
+    takes ``slowdown``x the modeled airtime (contention, duty cycling).
+    ``ecrt_expected_tx = None`` means "calibrate with the real LDPC chain at
+    the protected regime's SNR" (cached); a float skips calibration —
+    tests and quick sweeps set it explicitly.
+    """
+
+    name: str
+    dynamics: dynamics_lib.LinkDynamicsConfig
+    estimator: estimator_lib.EstimatorConfig = estimator_lib.EstimatorConfig()
+    policy: policy_lib.PolicyConfig = policy_lib.PolicyConfig()
+    dropout_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 3.0
+    ecrt_expected_tx: float | None = None
+    description: str = ""
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LinkRound:
+    """One round's link telemetry; every field is ``(num_clients,)``.
+
+    ``snr_db`` is ground truth (drives the channel), ``est_db`` is what the
+    policy saw, ``mode`` indexes the driver's mode table, ``active`` and
+    ``straggler`` are 0/1 floats.
+    """
+
+    snr_db: jax.Array
+    est_db: jax.Array
+    mode: jax.Array
+    active: jax.Array
+    straggler: jax.Array
+
+
+class ScenarioDriver:
+    """A scenario bound to a transport config: the FL loops' link engine.
+
+    Construction resolves the mode table (calibrating ECRT's E[tx] if the
+    scenario asks for it); ``init``/``round`` are pure jax and safe to call
+    inside jit — ``round`` advances dynamics, estimates CSI, runs the
+    policy, and draws availability, returning the carry for the next round
+    plus the :class:`LinkRound` record the uplink and telemetry consume.
+    """
+
+    def __init__(self, scenario: Scenario,
+                 base_cfg: transport_lib.TransportConfig,
+                 *, calib_codewords: int = 48, calib_max_tx: int = 6):
+        self.scenario = scenario
+        e_tx = scenario.ecrt_expected_tx
+        if e_tx is None and any(m == "ecrt" for m, _ in scenario.policy.modes):
+            # Calibrate where ECRT actually operates: the protected regime
+            # below the first threshold (or the fleet mean for a fixed-ECRT
+            # policy table).
+            thr = scenario.policy.thresholds_db
+            snr_cal = float(thr[0]) if thr else scenario.dynamics.mean_snr_db
+            ecrt_mod = next(
+                mod for m, mod in scenario.policy.modes if m == "ecrt")
+            e_tx = latency_lib.calibrate_ecrt(
+                snr_cal, ecrt_mod, n_codewords=calib_codewords,
+                max_tx=calib_max_tx)
+        self.mode_cfgs = policy_lib.build_mode_cfgs(
+            base_cfg, scenario.policy,
+            ecrt_expected_tx=float(e_tx if e_tx is not None else 1.0))
+
+    def init(self, key: jax.Array, num_clients: int
+             ) -> tuple[dynamics_lib.LinkState, jax.Array, jax.Array]:
+        """Stationary link state, round-0 modes, and round-0 CSI.
+
+        Modes are the hysteresis-free mapping of each client's static
+        operating point (mean SNR + frozen offset); that operating point is
+        also returned as the initial "previous estimate" the first
+        :meth:`round` call's staleness logic falls back on — callers thread
+        both through as ``prev_mode`` / ``prev_est_db``.
+        """
+        state = dynamics_lib.init_state(key, num_clients,
+                                        self.scenario.dynamics)
+        op_point = self.scenario.dynamics.mean_snr_db + state.offset_db
+        mode0 = policy_lib.initial_mode(op_point, self.scenario.policy)
+        return state, mode0, op_point
+
+    def round(self, state: dynamics_lib.LinkState, prev_mode: jax.Array,
+              prev_est_db: jax.Array, key: jax.Array
+              ) -> tuple[dynamics_lib.LinkState, LinkRound]:
+        """One link round: dynamics -> estimator -> policy -> availability."""
+        scen = self.scenario
+        k_dyn, k_est, k_drop, k_strag = jax.random.split(key, 4)
+        state, snr = dynamics_lib.step(state, k_dyn, scen.dynamics)
+        est = estimator_lib.step_estimate(snr, prev_est_db, k_est,
+                                          scen.estimator)
+        mode = policy_lib.choose_mode(est, prev_mode, scen.policy)
+        shape = snr.shape
+        active = jax.random.bernoulli(
+            k_drop, 1.0 - scen.dropout_prob, shape).astype(jnp.float32)
+        straggler = jax.random.bernoulli(
+            k_strag, scen.straggler_prob, shape).astype(jnp.float32)
+        return state, LinkRound(snr, est, mode, active, straggler)
+
+    def airtime(self, stats: transport_lib.TxStats, rnd: LinkRound,
+                timings: latency_lib.PhyTimings) -> jax.Array:
+        """Per-client airtime of the round: mode-priced, straggler-scaled,
+        zero for dropped clients. ``(num_clients,)`` seconds."""
+        air = latency_lib.round_airtime_adaptive(stats, timings,
+                                                 self.mode_cfgs)
+        slowdown = 1.0 + (self.scenario.straggler_slowdown - 1.0) * rnd.straggler
+        return air * slowdown * rnd.active
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario) -> Scenario:
+    """Add (or replace) a scenario in the registry; returns it."""
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    """Look up a registered scenario; unknown names list what exists."""
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; registered: "
+            f"{', '.join(sorted(SCENARIOS))}"
+        ) from None
+
+
+def list_scenarios() -> list[str]:
+    """Registered scenario names, sorted."""
+    return sorted(SCENARIOS)
+
+
+def _preset(name: str, **kw) -> Scenario:
+    return register_scenario(Scenario(
+        name=name, dynamics=dynamics_lib.DYNAMICS_PRESETS[kw.pop("dyn", name)],
+        **kw))
+
+
+_preset("static",
+        description="the paper's setup: one SNR, all clients, whole run")
+_preset("pedestrian",
+        description="walking users: slow fading drift + moderate shadowing")
+_preset("vehicular",
+        description="driving users: fast fading, wide per-client spread")
+_preset("shadowed-urban",
+        description="urban canyon: slowly-decorrelating deep shadowing")
+_preset("bursty",
+        description="IoT links: good on average with Markov blockage spells")
+_preset("iot-flaky", dyn="bursty",
+        estimator=estimator_lib.EstimatorConfig(n_pilots=16, stale_prob=0.2),
+        dropout_prob=0.1, straggler_prob=0.1, straggler_slowdown=3.0,
+        description="bursty links + few pilots, stale CSI, dropout, stragglers")

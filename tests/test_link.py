@@ -1,0 +1,291 @@
+"""Link-adaptation subsystem: channel dynamics, noisy CSI, mode policy,
+scenario registry/driver, mode-priced airtime, and the scenario-driven FL
+loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as CH
+from repro.core import latency as LAT
+from repro.core import transport as T
+from repro.link import dynamics as D
+from repro.link import estimator as E
+from repro.link import policy as P
+from repro.link import scenario as S
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------- dynamics
+
+
+def test_trajectory_shape_and_determinism():
+    cfg = D.DYNAMICS_PRESETS["vehicular"]
+    a = D.trajectory(KEY, cfg, 16, 25)
+    b = D.trajectory(KEY, cfg, 16, 25)
+    assert a.shape == (25, 16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_static_preset_is_constant_per_client():
+    tr = D.trajectory(KEY, D.DYNAMICS_PRESETS["static"], 8, 12)
+    assert float(jnp.std(tr, axis=0).max()) == 0.0
+
+
+def test_trajectory_respects_floor_and_ceiling():
+    cfg = D.DYNAMICS_PRESETS["vehicular"]
+    tr = np.asarray(D.trajectory(KEY, cfg, 32, 60))
+    assert tr.min() >= cfg.snr_floor_db and tr.max() <= cfg.snr_ceil_db
+
+
+def test_faster_mobility_means_bigger_round_to_round_swings():
+    """Vehicular (rho=0.35) must decorrelate faster than pedestrian
+    (rho=0.9): mean |SNR_t - SNR_{t-1}| strictly larger."""
+    ped = np.asarray(D.trajectory(KEY, D.DYNAMICS_PRESETS["pedestrian"], 32, 50))
+    veh = np.asarray(D.trajectory(KEY, D.DYNAMICS_PRESETS["vehicular"], 32, 50))
+    assert np.abs(np.diff(veh, axis=0)).mean() > np.abs(np.diff(ped, axis=0)).mean()
+
+
+def test_blockage_pulls_snr_down():
+    """p_block=1, p_recover=0: every client is blocked from round 1 on and
+    sits off_penalty_db below the unblocked process."""
+    base = dataclasses.replace(
+        D.DYNAMICS_PRESETS["static"], mean_snr_db=20.0)
+    blocked = dataclasses.replace(
+        base, onoff=True, p_block=1.0, p_recover=0.0, off_penalty_db=15.0)
+    tr_base = np.asarray(D.trajectory(KEY, base, 8, 10))
+    tr_blk = np.asarray(D.trajectory(KEY, blocked, 8, 10))
+    np.testing.assert_allclose(tr_blk[1:], tr_base[1:] - 15.0, atol=1e-5)
+
+
+def test_jakes_rho_limits_and_monotonicity():
+    assert D.jakes_rho(0.0, 1.0) == 1.0
+    small = [D.jakes_rho(f, 0.01) for f in (1.0, 5.0, 15.0, 30.0)]
+    assert all(1.0 >= a > b >= 0.0 for a, b in zip(small, small[1:]))
+    assert 0.0 <= D.jakes_rho(100.0, 1.0) <= 1.0
+
+
+# ---------------------------------------------------------------- estimator
+
+
+def test_oracle_csi_passthrough():
+    snr = jnp.linspace(0.0, 30.0, 7)
+    est = E.estimate_snr_db(snr, KEY, E.EstimatorConfig(n_pilots=0))
+    np.testing.assert_array_equal(np.asarray(est), np.asarray(snr))
+
+
+def test_more_pilots_tighter_estimates():
+    snr = jnp.full((4096,), 12.0)
+    stds = []
+    for n in (4, 32, 256):
+        est = E.estimate_snr_db(snr, KEY, E.EstimatorConfig(n_pilots=n))
+        stds.append(float(jnp.std(est)))
+    assert stds[0] > stds[1] > stds[2]
+    assert stds[2] < 1.0  # 256 pilots: well under 1 dB
+
+
+def test_estimator_bias_applied():
+    snr = jnp.full((5,), 10.0)
+    est = E.estimate_snr_db(snr, KEY, E.EstimatorConfig(n_pilots=0, bias_db=3.0))
+    np.testing.assert_allclose(np.asarray(est), 13.0)
+
+
+def test_stale_csi_reuses_previous_estimate():
+    cfg = E.EstimatorConfig(n_pilots=8, stale_prob=1.0)
+    prev = jnp.linspace(-3.0, 3.0, 6)
+    est = E.step_estimate(jnp.full((6,), 25.0), prev, KEY, cfg)
+    np.testing.assert_array_equal(np.asarray(est), np.asarray(prev))
+
+
+# ------------------------------------------------------------------- policy
+
+
+def test_initial_mode_threshold_mapping():
+    pc = P.PolicyConfig()  # thresholds (6, 16, 26)
+    m = P.initial_mode(jnp.array([0.0, 6.0, 15.9, 16.0, 25.9, 26.0, 40.0]), pc)
+    np.testing.assert_array_equal(np.asarray(m), [0, 1, 1, 2, 2, 3, 3])
+
+
+def test_hysteresis_holds_mode_inside_window():
+    """CSI jitter of +-h/2 around a threshold must not flap the mode."""
+    pc = P.PolicyConfig(hysteresis_db=2.0)  # window 6 +- 1
+    prev_hi = jnp.array([1], dtype=jnp.int32)
+    prev_lo = jnp.array([0], dtype=jnp.int32)
+    for snr in (5.1, 5.9, 6.5, 6.9):
+        s = jnp.array([snr])
+        assert int(P.choose_mode(s, prev_hi, pc)[0]) == 1
+        assert int(P.choose_mode(s, prev_lo, pc)[0]) == 0
+    # decisive margins do switch
+    assert int(P.choose_mode(jnp.array([7.1]), prev_lo, pc)[0]) == 1
+    assert int(P.choose_mode(jnp.array([4.9]), prev_hi, pc)[0]) == 0
+
+
+def test_policy_can_jump_multiple_modes():
+    pc = P.PolicyConfig()
+    m = P.choose_mode(jnp.array([35.0]), jnp.array([0], jnp.int32), pc)
+    assert int(m[0]) == 3
+    m = P.choose_mode(jnp.array([0.0]), jnp.array([3], jnp.int32), pc)
+    assert int(m[0]) == 0
+
+
+def test_fixed_policy_is_degenerate():
+    pc = P.fixed_policy("approx", "qpsk")
+    m = P.choose_mode(jnp.linspace(0, 40, 9), jnp.zeros((9,), jnp.int32), pc)
+    np.testing.assert_array_equal(np.asarray(m), np.zeros(9))
+
+
+def test_policy_config_validation():
+    with pytest.raises(ValueError, match="thresholds"):
+        P.PolicyConfig(modes=(("ecrt", "qpsk"), ("approx", "qpsk")),
+                       thresholds_db=(1.0, 2.0))
+    with pytest.raises(ValueError, match="ascend"):
+        P.PolicyConfig(thresholds_db=(16.0, 6.0, 26.0))
+
+
+def test_build_mode_cfgs_rejects_non_dividing_modulation():
+    with pytest.raises(ValueError, match="64qam"):
+        P.build_mode_cfgs(
+            T.TransportConfig(),
+            P.PolicyConfig(modes=(("approx", "64qam"),), thresholds_db=()))
+
+
+def test_build_mode_cfgs_rows():
+    base = T.TransportConfig(channel=CH.ChannelConfig(snr_db=9.0),
+                             use_kernel=True)
+    cfgs = P.build_mode_cfgs(base, P.PolicyConfig(), ecrt_expected_tx=2.5)
+    assert [c.mode for c in cfgs] == ["ecrt", "approx", "approx", "approx"]
+    assert [c.modulation for c in cfgs] == ["qpsk", "qpsk", "16qam", "256qam"]
+    assert all(not c.use_kernel for c in cfgs)  # kernel path force-cleared
+    assert cfgs[0].ecrt_expected_tx == 2.5 and not cfgs[0].simulate_fec
+    assert all(c.channel == base.channel for c in cfgs)
+
+
+# ----------------------------------------------------------------- scenario
+
+
+def test_scenario_registry():
+    names = S.list_scenarios()
+    for expected in ("static", "pedestrian", "vehicular", "shadowed-urban",
+                     "bursty", "iot-flaky"):
+        assert expected in names
+        assert S.get_scenario(expected).name == expected
+    with pytest.raises(KeyError, match="registered"):
+        S.get_scenario("warp-drive")
+    custom = S.register_scenario(dataclasses.replace(
+        S.get_scenario("static"), name="test-custom"))
+    assert S.get_scenario("test-custom") is custom
+    del S.SCENARIOS["test-custom"]
+
+
+def _driver(scen_name="vehicular", **scen_kw):
+    scen = dataclasses.replace(S.get_scenario(scen_name),
+                               ecrt_expected_tx=2.0, **scen_kw)
+    base = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    return S.ScenarioDriver(scen, base)
+
+
+def test_driver_round_inside_jit():
+    drv = _driver(dropout_prob=0.25, straggler_prob=0.25)
+    M = 16
+    state, mode0, prev_est = drv.init(KEY, M)
+    assert mode0.shape == prev_est.shape == (M,)
+
+    @jax.jit
+    def one(state, mode, est, key):
+        return drv.round(state, mode, est, key)
+
+    state, rnd = one(state, mode0, prev_est, jax.random.fold_in(KEY, 1))
+    for field in (rnd.snr_db, rnd.est_db, rnd.mode, rnd.active, rnd.straggler):
+        assert field.shape == (M,)
+    assert rnd.mode.dtype == jnp.int32
+    assert set(np.unique(np.asarray(rnd.active))) <= {0.0, 1.0}
+
+
+def test_driver_airtime_prices_modes_and_availability():
+    drv = _driver(dropout_prob=0.0, straggler_prob=0.0)
+    M, N = 8, 512
+    x = jax.random.uniform(KEY, (M, N), minval=-0.9, maxval=0.9)
+    mode = jnp.array([0, 0, 1, 1, 2, 2, 3, 3])
+    _, stats = T.transmit_batch_adaptive(
+        x, KEY, drv.mode_cfgs, mode, snr_db=jnp.full((M,), 12.0))
+    rnd = S.LinkRound(
+        snr_db=jnp.full((M,), 12.0), est_db=jnp.full((M,), 12.0), mode=mode,
+        active=jnp.array([1, 1, 1, 1, 1, 1, 1, 0], jnp.float32),
+        straggler=jnp.array([0, 0, 0, 1, 0, 0, 0, 0], jnp.float32))
+    air = np.asarray(drv.airtime(stats, rnd, LAT.PhyTimings()))
+    # ECRT (2x coded symbols x E[tx]=2) slowest, higher QAM faster
+    assert air[0] > air[2] > air[4] > air[6]
+    # straggler pays slowdown x its mode's airtime
+    assert air[3] == pytest.approx(air[2] * drv.scenario.straggler_slowdown)
+    # dropped client transmits nothing
+    assert air[7] == 0.0
+
+
+def test_driver_calibrates_ecrt_when_unset():
+    scen = dataclasses.replace(S.get_scenario("static"),
+                               ecrt_expected_tx=None)
+    drv = S.ScenarioDriver(
+        scen, T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0)),
+        calib_codewords=16, calib_max_tx=4)
+    assert drv.mode_cfgs[0].mode == "ecrt"
+    assert drv.mode_cfgs[0].ecrt_expected_tx >= 1.0
+
+
+# ------------------------------------------------------- FL loop integration
+
+
+@pytest.mark.slow
+def test_run_fl_scenario_smoke():
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.data import synth_mnist
+    from repro.fl import partition
+    from repro.fl.loop import run_fl
+
+    (img, lab), (ti, tl) = synth_mnist.train_test(120, 30)
+    parts = partition.non_iid_partition(img, lab, n_clients=6)
+    cx, cy = partition.stack_clients(parts, per_client=32)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05)
+    tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(S.get_scenario("vehicular"),
+                               ecrt_expected_tx=2.0, dropout_prob=0.1)
+    res = run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=4, batch_per_round=8,
+                 eval_every=2, scenario=scen)
+    assert len(res.link) == 4
+    n_modes = len(scen.policy.modes)
+    for t in res.link:
+        assert len(t["mode_counts"]) == n_modes
+        assert sum(t["mode_counts"]) == 6
+        assert 0 <= t["n_active"] <= 6
+        assert t["airtime_s"] >= 0.0
+    assert res.airtime_s[-1] > 0.0
+    assert np.isfinite(res.final_accuracy)
+
+
+@pytest.mark.slow
+def test_run_fedavg_scenario_smoke():
+    """The FedAvg link path (scaled_uplink over the adaptive transport +
+    dropout-weighted delta aggregation) mirrors run_fl's coverage."""
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.data import synth_mnist
+    from repro.fl import partition
+    from repro.fl.fedavg import run_fedavg
+
+    (img, lab), (ti, tl) = synth_mnist.train_test(120, 30)
+    parts = partition.non_iid_partition(img, lab, n_clients=6)
+    cx, cy = partition.stack_clients(parts, per_client=32)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05)
+    tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(S.get_scenario("iot-flaky"),
+                               ecrt_expected_tx=2.0)
+    res = run_fedavg(cfg, tcfg, cx, cy, ti, tl, n_rounds=3, local_steps=2,
+                     batch_per_step=8, scale_mode="max_abs", eval_every=2,
+                     scenario=scen)
+    assert len(res.link) == 3
+    for t in res.link:
+        assert sum(t["mode_counts"]) == 6
+        assert t["airtime_s"] >= 0.0
+    assert np.isfinite(res.final_accuracy)

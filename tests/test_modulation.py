@@ -51,6 +51,36 @@ def test_closed_form_equals_ml(seed, name):
         np.asarray(M.demod_hard(y, scheme)), np.asarray(M.demod_ml(y, scheme)))
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**16 - 1))
+def test_gray_roundtrip_property(n):
+    """gray_decode(gray_encode(n)) == n for arbitrary level indices."""
+    enc = M.gray_encode(jnp.uint32(n))
+    assert int(M.gray_decode(enc)) == n
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**16 - 2))
+def test_gray_adjacent_hamming_distance_one(n):
+    """Consecutive level indices map to Gray codes differing in exactly one
+    bit — the property that makes near-neighbour symbol errors single-bit."""
+    a = int(M.gray_encode(jnp.uint32(n)))
+    b = int(M.gray_encode(jnp.uint32(n + 1)))
+    assert bin(a ^ b).count("1") == 1
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.name)
+def test_gray_axis_levels_adjacent_hamming1(scheme):
+    """Per-axis PAM levels (up to 64-QAM's 8 levels and beyond): the whole
+    Gray sequence round-trips and every adjacent pair is Hamming-distance 1."""
+    levels = jnp.arange(scheme.levels, dtype=jnp.uint32)
+    enc = M.gray_encode(levels)
+    np.testing.assert_array_equal(
+        np.asarray(M.gray_decode(enc)), np.asarray(levels))
+    diffs = np.asarray(enc[:-1] ^ enc[1:])
+    assert all(bin(int(d)).count("1") == 1 for d in diffs)
+
+
 def test_qpsk_rayleigh_ber_matches_paper():
     """Paper Sec. V: BER ~ 4e-2 @ 10 dB and ~ 5e-3 @ 20 dB."""
     assert M.rayleigh_qpsk_ber(10.0) == pytest.approx(4e-2, rel=0.15)

@@ -163,6 +163,122 @@ def test_sharded_dispatch_matches_unsharded(payloads):
     np.testing.assert_array_equal(np.asarray(ref2), np.asarray(out2))
 
 
+def test_batch_snr_wrong_length_raises(payloads):
+    """Regression: a per-client snr_db whose length != num_clients must fail
+    loudly, naming both sizes — via the call override and the config path."""
+    cfg = _cfg(mode="approx")
+    key = jax.random.PRNGKey(20)
+    with pytest.raises(ValueError, match=rf"{M - 1}.*{M} clients"):
+        T.transmit_batch(payloads, key, cfg, snr_db=jnp.zeros((M - 1,)))
+    bad_cfg = _cfg(mode="approx",
+                   channel=CH.ChannelConfig(snr_db=tuple(range(M + 3))))
+    with pytest.raises(ValueError, match=rf"{M + 3}.*{M}"):
+        T.transmit_batch(payloads, key, bad_cfg)
+
+
+def test_batch_snr_2d_raises(payloads):
+    """A (2, M/2) grid flattens to M entries — it must be rejected, not
+    silently reinterpreted as a per-client vector."""
+    cfg = _cfg(mode="approx")
+    with pytest.raises(ValueError, match="shape"):
+        T.transmit_batch(payloads, jax.random.PRNGKey(21), cfg,
+                         snr_db=jnp.zeros((2, M // 2)))
+
+
+def _mode_table():
+    ch = CH.ChannelConfig(snr_db=10.0)
+    return (
+        _cfg(mode="ecrt", channel=ch, simulate_fec=False, ecrt_expected_tx=2.2),
+        _cfg(mode="approx", channel=ch),
+        _cfg(mode="approx", modulation="16qam", channel=ch),
+        _cfg(mode="approx", modulation="256qam", channel=ch),
+    )
+
+
+@pytest.mark.parametrize("with_snr", [False, True])
+def test_adaptive_batch_equals_single_mode_calls(payloads, with_snr):
+    """A per-client mode vector is bit-identical to per-client single-mode
+    ``transmit_flat`` calls under the shared fold_in key schedule."""
+    cfgs = _mode_table()
+    key = jax.random.PRNGKey(22)
+    mode = jnp.array([0, 1, 2, 3, 3, 2, 1, 0])
+    snr = jnp.linspace(4.0, 30.0, M) if with_snr else None
+    out, st = T.transmit_batch_adaptive(payloads, key, cfgs, mode, snr_db=snr)
+    for i in range(M):
+        cfg_i = cfgs[int(mode[i])]
+        s_i = None if snr is None else snr[i]
+        ref, rst = T.transmit_flat(payloads[i], jax.random.fold_in(key, i),
+                                   cfg_i, snr_db=s_i)
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(ref))
+        assert float(st.bit_errors[i]) == float(rst.bit_errors)
+        assert float(st.data_symbols[i]) == float(rst.data_symbols)
+    np.testing.assert_array_equal(np.asarray(st.mode_idx), np.asarray(mode))
+
+
+def test_adaptive_uniform_mode_equals_plain_batch(payloads):
+    """An all-one-mode vector reproduces transmit_batch exactly."""
+    cfgs = _mode_table()
+    key = jax.random.PRNGKey(23)
+    for m in (1, 2):
+        out, st = T.transmit_batch_adaptive(
+            payloads, key, cfgs, jnp.full((M,), m, jnp.int32))
+        ref, rst = T.transmit_batch(payloads, key, cfgs[m])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        np.testing.assert_array_equal(
+            np.asarray(st.bit_errors), np.asarray(rst.bit_errors))
+
+
+def test_adaptive_single_jit_trace(payloads):
+    """Mixed-mode cohorts re-dispatch without retracing: one XLA program."""
+    cfgs = _mode_table()
+    traces = []
+
+    def fn(x, k, mode):
+        traces.append(1)
+        return T.transmit_batch_adaptive(x, k, cfgs, mode)
+
+    jf = jax.jit(fn)
+    for seed in (0, 1, 2):
+        mode = jax.random.randint(jax.random.PRNGKey(seed), (M,), 0, len(cfgs))
+        out, st = jf(payloads, jax.random.PRNGKey(24), mode)
+        assert out.shape == (M, N)
+    assert len(traces) == 1
+
+
+def test_adaptive_validation_errors(payloads):
+    cfgs = _mode_table()
+    key = jax.random.PRNGKey(25)
+    with pytest.raises(ValueError, match="mode_idx"):
+        T.transmit_batch_adaptive(payloads, key, cfgs, jnp.zeros((M - 2,), jnp.int32))
+    with pytest.raises(ValueError, match="use_kernel"):
+        T.transmit_batch_adaptive(
+            payloads, key, (_cfg(mode="approx", use_kernel=True),),
+            jnp.zeros((M,), jnp.int32))
+    mixed_ch = (_cfg(mode="approx"),
+                _cfg(mode="approx", channel=CH.ChannelConfig(snr_db=20.0)))
+    with pytest.raises(ValueError, match="ChannelConfig"):
+        T.transmit_batch_adaptive(payloads, key, mixed_ch,
+                                  jnp.zeros((M,), jnp.int32))
+
+
+def test_adaptive_airtime_matches_static_pricing(payloads):
+    """round_airtime_adaptive == round_airtime per mode on uniform batches."""
+    from repro.core import latency as LAT
+
+    cfgs = _mode_table()
+    t = LAT.PhyTimings()
+    key = jax.random.PRNGKey(26)
+    for m, mode_name in ((0, "ecrt"), (1, "approx")):
+        _, st = T.transmit_batch_adaptive(
+            payloads, key, cfgs, jnp.full((M,), m, jnp.int32))
+        adaptive = np.asarray(LAT.round_airtime_adaptive(st, t, cfgs))
+        static = np.asarray(LAT.round_airtime(st, t, mode_name))
+        np.testing.assert_allclose(adaptive, static, rtol=1e-6)
+    _, st_plain = T.transmit_batch(payloads, key, cfgs[1])
+    with pytest.raises(ValueError, match="mode_idx"):
+        LAT.round_airtime_adaptive(st_plain, t, cfgs)
+
+
 def test_client_offset_windows_the_schedule(payloads):
     """client_offset reproduces any contiguous slice of a larger batch —
     the property the sharded dispatch relies on."""

@@ -1,8 +1,9 @@
-"""Documentation gate for the core package (``make docs-check``).
+"""Documentation gate for the core + link packages (``make docs-check``).
 
-Fails (exit 1) when a public module under ``src/repro/core/`` lacks a module
-docstring, or a public (non-underscore) top-level function in one of those
-modules lacks a function docstring. Kept dependency-free: pure ``ast``.
+Fails (exit 1) when a public module under ``src/repro/core/`` or
+``src/repro/link/`` lacks a module docstring, or a public (non-underscore)
+top-level function in one of those modules lacks a function docstring. Kept
+dependency-free: pure ``ast``.
 """
 
 from __future__ import annotations
@@ -11,7 +12,8 @@ import ast
 import pathlib
 import sys
 
-CORE = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+_SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+PACKAGES = [_SRC / "core", _SRC / "link"]
 
 
 def check_module(path: pathlib.Path) -> list[str]:
@@ -31,17 +33,19 @@ def check_module(path: pathlib.Path) -> list[str]:
 
 
 def main() -> int:
-    problems = []
-    for path in sorted(CORE.glob("*.py")):
-        if path.name.startswith("_") and path.name != "__init__.py":
-            continue
-        problems.extend(check_module(path))
+    problems, n_modules = [], 0
+    for pkg in PACKAGES:
+        for path in sorted(pkg.glob("*.py")):
+            if path.name.startswith("_") and path.name != "__init__.py":
+                continue
+            n_modules += 1
+            problems.extend(check_module(path))
     for p in problems:
         print(p)
     if problems:
         print(f"docs-check: {len(problems)} problem(s)")
         return 1
-    print(f"docs-check: OK ({len(list(CORE.glob('*.py')))} modules)")
+    print(f"docs-check: OK ({n_modules} modules)")
     return 0
 
 
