@@ -16,8 +16,10 @@ bench-smoke:
 	$(PY) -m benchmarks.run --only kernel,scaling
 
 # Link-adaptation smoke: adaptive policy vs fixed transports at reduced
-# scale (quick profile: one scenario, 24 clients) + the 64-client
-# mixed-mode single-trace check.
+# scale (quick profile: one scenario, 24 clients), the 64-client mixed-mode
+# single-trace check, and the bucketed-vs-select dispatch arm (asserts
+# bit-equivalence, records timings). Writes BENCH_link_adaptation.json
+# (uploaded as a CI artifact).
 bench-link:
 	$(PY) -m benchmarks.run --only link
 

@@ -13,23 +13,38 @@ dynamics; the policy is the only difference):
 
 Headline check: on non-static scenarios the adaptive arm should Pareto-
 dominate — accuracy at least fixed-approx's, airtime below fixed-ECRT's
-(``pareto=True`` in the emitted line). Also verifies the fusion claim: a
-mixed-mode 64-client round is ONE jitted XLA program (a single trace, no
-per-client Python loop), re-dispatching as the mode vector changes.
+(``pareto=True`` in the emitted line).
+
+Dispatch arm (``link/dispatch/*``): times the mixed-mode uplink engine on a
+vehicular-flavored 4-mode, 256-client round under both dispatch strategies —
+``select`` (vmapped ``lax.switch``: every client pays every mode) vs
+``bucketed`` (sort/gather/scatter: each mode runs once) — asserting the two
+are **bit-identical** before reporting the speedup. Also verifies the fusion
+claim for the select path: a mixed-mode 64-client round is ONE jitted XLA
+program (a single trace), re-dispatching as the mode vector changes.
+
+Results land on stdout (CSV) and in ``BENCH_link_adaptation.json`` (written
+to the CWD; uploaded as a CI artifact) so the perf trajectory is tracked.
+
+Standalone: ``python -m benchmarks.link_adaptation --dispatch both``.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import emit, fl_world
+from benchmarks.common import emit, fl_world, timeit
 from repro.configs.mnist_cnn import config as cnn_config
 from repro.core import channel as CH
 from repro.core import transport as T
 from repro.fl.loop import run_fl
+from repro.link import dynamics as dynamics_lib
 from repro.link import policy as policy_lib
 from repro.link import scenario as scenario_lib
 
@@ -39,9 +54,11 @@ ARMS = {
     "ecrt": policy_lib.fixed_policy("ecrt", "qpsk"),
 }
 
+JSON_PATH = "BENCH_link_adaptation.json"
+
 
 def _check_single_trace(n_clients: int = 64, n_floats: int = 4096) -> int:
-    """Trace-count the mixed-mode batched uplink at 64 clients."""
+    """Trace-count the select-dispatch mixed-mode uplink at 64 clients."""
     ch = CH.ChannelConfig(snr_db=10.0)
     cfgs = policy_lib.build_mode_cfgs(
         T.TransportConfig(channel=ch), policy_lib.PolicyConfig(),
@@ -63,7 +80,81 @@ def _check_single_trace(n_clients: int = 64, n_floats: int = 4096) -> int:
     return traces[0]
 
 
-def run(quick: bool = True):
+def _vehicular_round(n_clients: int, seed: int = 7):
+    """A realistic (snr, mode) draw: one vehicular dynamics step through the
+    default threshold policy — the mode mix the adaptive FL loop sees."""
+    dyn = dynamics_lib.DYNAMICS_PRESETS["vehicular"]
+    snr = dynamics_lib.trajectory(
+        jax.random.PRNGKey(seed), dyn, n_clients, 2)[-1]
+    mode = np.asarray(policy_lib.initial_mode(snr, policy_lib.PolicyConfig()))
+    return snr, mode
+
+
+def dispatch_speedup(n_clients: int = 256, n_floats: int = 2048,
+                     which: str = "both") -> dict:
+    """Time select vs bucketed dispatch on a 4-mode vehicular round.
+
+    Asserts the two dispatches are bit-identical (payloads and stats) before
+    timing — ``make bench-link`` doubles as the equivalence smoke. Returns
+    the record written into ``BENCH_link_adaptation.json``.
+    """
+    ch = CH.ChannelConfig(snr_db=10.0)
+    cfgs = policy_lib.build_mode_cfgs(
+        T.TransportConfig(channel=ch), policy_lib.PolicyConfig(),
+        ecrt_expected_tx=2.2)
+    snr, mode = _vehicular_round(n_clients)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (n_clients, n_floats),
+                           minval=-0.99, maxval=0.99)
+    key = jax.random.PRNGKey(2)
+    mode_j = jnp.asarray(mode)
+
+    select_fn = jax.jit(lambda x, k, m, s: T.transmit_batch_adaptive(
+        x, k, cfgs, m, snr_db=s, dispatch="select"))
+
+    def bucketed_fn():
+        return T.transmit_batch_adaptive(
+            x, key, cfgs, mode, snr_db=snr, dispatch="bucketed")
+
+    a, sa = select_fn(x, key, mode_j, snr)
+    b, sb = bucketed_fn()
+    identical = bool(
+        np.array_equal(np.asarray(a).view(np.uint32),
+                       np.asarray(b).view(np.uint32))
+        and all(
+            np.array_equal(np.asarray(getattr(sa, f)),
+                           np.asarray(getattr(sb, f)))
+            for f in ("data_symbols", "transmissions", "bit_errors", "n_bits"))
+    )
+    if not identical:  # explicit raise: this gate must survive python -O
+        raise AssertionError("bucketed dispatch diverged from the select path")
+    emit("link/dispatch/bit_identical", 0.0,
+         f"clients={n_clients} modes={len(cfgs)} identical={identical}")
+
+    rec = {
+        "clients": n_clients,
+        "n_floats": n_floats,
+        "modes": len(cfgs),
+        "mode_mix": np.bincount(mode, minlength=len(cfgs)).tolist(),
+        "bit_identical": identical,
+    }
+    if which in ("select", "both"):
+        rec["select_us"] = timeit(lambda: select_fn(x, key, mode_j, snr))
+        emit("link/dispatch/select", rec["select_us"],
+             f"clients={n_clients} modes={len(cfgs)}")
+    if which in ("bucketed", "both"):
+        rec["bucketed_us"] = timeit(bucketed_fn)
+        emit("link/dispatch/bucketed", rec["bucketed_us"],
+             f"clients={n_clients} modes={len(cfgs)}")
+    if which == "both":
+        rec["speedup"] = rec["select_us"] / rec["bucketed_us"]
+        emit("link/dispatch/speedup", 0.0,
+             f"select/bucketed={rec['speedup']:.2f}x "
+             f"mode_mix={rec['mode_mix']}")
+    return rec
+
+
+def run(quick: bool = True, dispatch: str = "both",
+        dispatch_clients: int = 256, dispatch_floats: int = 2048):
     scenarios = ("vehicular",) if quick else (
         "vehicular", "bursty", "pedestrian", "shadowed-urban", "static")
     n_clients = 24 if quick else 64
@@ -72,9 +163,16 @@ def run(quick: bool = True):
     cfg = dataclasses.replace(cnn_config(), lr=0.05 if quick else 0.01)
     tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
 
+    report = {
+        "dispatch": dispatch_speedup(dispatch_clients, dispatch_floats,
+                                     which=dispatch),
+        "arms": {},
+    }
+
     traces = _check_single_trace()
     emit("link/mixed_mode_single_trace", 0.0,
          f"traces={traces} clients=64 fused={traces == 1}")
+    report["select_single_trace"] = traces == 1
 
     results = {}
     for scen_name in scenarios:
@@ -89,6 +187,12 @@ def run(quick: bool = True):
             emit(f"link/{scen_name}/{arm}", res.wall_s * 1e6,
                  f"final_acc={res.final_accuracy:.3f} "
                  f"airtime={res.airtime_s[-1]:.2f}s mode_mix={mix}")
+            report["arms"][f"{scen_name}/{arm}"] = {
+                "final_acc": float(res.final_accuracy),
+                "airtime_s": float(res.airtime_s[-1]),
+                "wall_s": float(res.wall_s),
+                "mode_mix": mix,
+            }
 
     for scen_name in scenarios:
         a = results[(scen_name, "adaptive")]
@@ -101,4 +205,38 @@ def run(quick: bool = True):
              f"approx=({fx.final_accuracy:.3f},{fx.airtime_s[-1]:.2f}s) "
              f"ecrt=({ec.final_accuracy:.3f},{ec.airtime_s[-1]:.2f}s) "
              f"pareto={pareto}")
+        report["arms"][f"{scen_name}/pareto"] = bool(pareto)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("link/json", 0.0, f"wrote {JSON_PATH}")
     return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="link-adaptation benchmarks (standalone entry)")
+    ap.add_argument("--dispatch", choices=("select", "bucketed", "both"),
+                    default="both",
+                    help="which uplink dispatch arm(s) to time")
+    ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--floats", type=int, default=2048)
+    ap.add_argument("--fl", action="store_true",
+                    help="also run the full accuracy-vs-airtime FL arms")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale FL arms (implies --fl)")
+    args = ap.parse_args()
+    args.fl = args.fl or args.full
+    print("name,us_per_call,derived")
+    if args.fl:
+        run(quick=not args.full, dispatch=args.dispatch,
+            dispatch_clients=args.clients, dispatch_floats=args.floats)
+    else:
+        rec = dispatch_speedup(args.clients, args.floats, which=args.dispatch)
+        with open(JSON_PATH, "w") as f:
+            json.dump({"dispatch": rec}, f, indent=2)
+        emit("link/json", 0.0, f"wrote {JSON_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,7 @@ def main() -> None:
         raise SystemExit(2)
 
     print("name,us_per_call,derived")
+    failed = []
     for name in picks:
         mod_name, desc = SUITES[name]
         print(f"# === {name}: {desc} ===")
@@ -49,7 +50,14 @@ def main() -> None:
             mod.run(quick=not args.full)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{e!r}", file=sys.stdout)
+            failed.append(name)
         print(f"# {name} done in {time.time()-t0:.1f}s")
+    if failed:
+        # Remaining suites still ran (the ERROR lines above are per-suite),
+        # but the invocation as a whole must fail: suites double as gates —
+        # e.g. the link suite asserts bucketed ≡ select bit-equivalence.
+        print(f"# FAILED suites: {', '.join(failed)}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

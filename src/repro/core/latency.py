@@ -25,14 +25,25 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import channel as channel_lib
 from repro.core import ecrt as ecrt_lib
 from repro.core import modulation as mod_lib
 from repro.core import transport as transport_lib
 
-__all__ = ["PhyTimings", "round_airtime", "round_airtime_adaptive",
-           "calibrate_ecrt"]
+__all__ = ["DEFAULT_CALIB_CODEWORDS", "DEFAULT_CALIB_MAX_TX", "PhyTimings",
+           "round_airtime", "round_airtime_adaptive", "calibrate_ecrt",
+           "ecrt_expected_tx_curve", "interp_expected_tx",
+           "ecrt_expected_tx_profile"]
+
+# ECRT E[tx] pricing sample budget — the one default shared by every
+# pricing entry point (policy.build_mode_cfgs, scenario.ScenarioDriver,
+# the FL loops' resolve_ecrt_analytic), so the same channel always
+# resolves to the same Monte-Carlo estimate whichever door it came in.
+# (calibrate_ecrt's own larger defaults serve standalone measurement.)
+DEFAULT_CALIB_CODEWORDS = 48
+DEFAULT_CALIB_MAX_TX = 6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,7 +85,6 @@ def round_airtime_adaptive(stats: transport_lib.TxStats, timings: PhyTimings,
     return t_data + stats.transmissions * timings.t_overhead
 
 
-@functools.lru_cache(maxsize=64)
 def calibrate_ecrt(
     snr_db: float,
     modulation: str = "qpsk",
@@ -88,7 +98,12 @@ def calibrate_ecrt(
 
     Runs the full encode -> channel -> soft min-sum decode -> retransmit loop
     on random payloads and returns the mean transmission count. Cached: FL
-    loops reuse the scalar instead of decoding every round.
+    loops reuse the scalar instead of decoding every round. Arguments are
+    canonicalized (SNR round-trips through float32, everything hits the
+    cache positionally) so keyword vs positional call forms and
+    float64-vs-float32 representations of the same SNR share one cache
+    entry — the anchor-point / curve-point consistency the per-client
+    airtime interpolation relies on.
 
     Default fading is *per-codeword block Rayleigh* (coherence time >= packet
     airtime): with per-symbol iid fading + perfect CSI the rate-1/2 LDPC has
@@ -102,6 +117,15 @@ def calibrate_ecrt(
     is pessimistic vs. our real soft min-sum chain (``decoder="minsum"``) —
     both are recorded in EXPERIMENTS.md.
     """
+    return _calibrate_ecrt(
+        float(np.float32(snr_db)), str(modulation), str(fading),
+        int(n_codewords), int(max_tx), int(seed), str(decoder))
+
+
+@functools.lru_cache(maxsize=64)
+def _calibrate_ecrt(snr_db, modulation, fading, n_codewords, max_tx, seed,
+                    decoder) -> float:
+    """The canonicalized, cached body of :func:`calibrate_ecrt`."""
     code = ecrt_lib.LdpcCode()
     scheme = mod_lib.MOD_SCHEMES[modulation]
     key = jax.random.PRNGKey(seed)
@@ -146,3 +170,65 @@ def calibrate_ecrt(
 
     e_tx, frac_ok = run(jax.random.split(k_ch, max_tx))
     return float(e_tx)
+
+
+def ecrt_expected_tx_curve(grid_db, modulation: str = "qpsk", *,
+                           fading: str = "block_rayleigh",
+                           n_codewords: int = DEFAULT_CALIB_CODEWORDS,
+                           max_tx: int = DEFAULT_CALIB_MAX_TX):
+    """Calibrate E[transmissions] on an SNR grid (one cached point each).
+
+    E[tx] is *not* a constant under time-varying or heterogeneous SNR: a
+    client in a fade retransmits far more than the fleet average, so pricing
+    every ECRT uplink with one scenario-wide constant underprices exactly
+    the rounds where ECRT is slowest. This builds the lookup the airtime
+    models interpolate per client per round; each grid point goes through
+    :func:`calibrate_ecrt`'s LRU cache, so repeated curves are free.
+
+    Returns ``(grid_db, e_tx)`` as ascending float32 jnp arrays.
+    """
+    grid = np.asarray(sorted(float(s) for s in np.asarray(grid_db).reshape(-1)),
+                      np.float32)
+    if grid.size == 0:
+        raise ValueError("ecrt_expected_tx_curve needs a non-empty SNR grid")
+    vals = np.asarray(
+        [calibrate_ecrt(float(s), modulation, fading, n_codewords, max_tx)
+         for s in grid],
+        np.float32,
+    )
+    return jnp.asarray(grid), jnp.asarray(vals)
+
+
+def interp_expected_tx(snr_db, grid, e_tx) -> jax.Array:
+    """Per-entry E[tx] at ``snr_db`` by linear interpolation on a calibrated
+    curve (clamped at the grid edges). Pure jnp — safe under jit; broadcasts
+    over any ``snr_db`` shape."""
+    return jnp.interp(jnp.asarray(snr_db, jnp.float32),
+                      jnp.asarray(grid, jnp.float32),
+                      jnp.asarray(e_tx, jnp.float32))
+
+
+def ecrt_expected_tx_profile(snr_db, modulation: str = "qpsk", *,
+                             fading: str = "block_rayleigh",
+                             n_codewords: int = DEFAULT_CALIB_CODEWORDS,
+                             max_tx: int = DEFAULT_CALIB_MAX_TX,
+                             max_grid: int = 4) -> np.ndarray:
+    """Per-client E[tx] for a static SNR vector (the fixed-ECRT FL loops).
+
+    Calibrates at each distinct SNR when there are at most ``max_grid`` of
+    them (interpolation is then exact), else on a ``max_grid``-point linear
+    grid spanning the cohort's range. Returns a float32 vector matching
+    ``snr_db``'s length (scalars give length 1).
+    """
+    snr = np.asarray(snr_db, np.float32).reshape(-1)
+    uniq = np.unique(snr)
+    if uniq.size <= max_grid:
+        grid = uniq
+    else:
+        grid = np.linspace(float(snr.min()), float(snr.max()), max_grid,
+                           dtype=np.float32)
+    grid_j, vals_j = ecrt_expected_tx_curve(
+        grid, modulation, fading=fading, n_codewords=n_codewords,
+        max_tx=max_tx)
+    return np.interp(snr, np.asarray(grid_j), np.asarray(vals_j)).astype(
+        np.float32)

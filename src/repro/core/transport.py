@@ -30,11 +30,39 @@ schedule, and a sharded batch (``launch.sharding.shard_transmit_batch``)
 reproduces the unsharded batch exactly. Heterogeneous link quality is
 expressed either via a per-client ``ChannelConfig.snr_db`` sequence or the
 ``snr_db`` override argument.
+
+Mixed-mode dispatch
+-------------------
+``transmit_batch_adaptive`` carries a cohort where client ``i`` uses
+``cfgs[mode_idx[i]]`` (the link-adaptation hook). Two dispatch strategies:
+
+``bucketed`` (default when ``mode_idx`` is concrete)
+    Stable-argsort clients by mode, gather payload rows into contiguous
+    per-mode buckets, run each mode **once** as a fused single-mode batch on
+    its bucket, scatter results back to original client order. Total work is
+    O(num_clients) payload pipelines instead of O(modes x num_clients), and
+    each bucket may take the fused Pallas kernel path (``cfg.use_kernel``).
+    Bucket capacities round up on a quarter-octave schedule (masked tail
+    rows, outputs discarded; see ``_bucket_capacity``) so the per-mode jit
+    traces are bounded (``~4 log2(num_clients)`` shapes per mode for any
+    sequence of mode mixes) and reused as the mix changes round to round.
+    The fold_in key rides the *client index*, not the bucket slot, so the
+    result is bit-identical to the select path and to per-client
+    ``transmit_flat`` calls.
+
+``select`` (default when ``mode_idx`` is traced)
+    One ``lax.switch`` over the config table, vmapped over clients: a single
+    fused XLA program, but the switch lowers to a select over **all**
+    branches, so every client pays every mode's FLOPs (~``len(cfgs)``x) and
+    the Pallas kernel path cannot lower. Kept for fully-traced contexts
+    (``jax.jit`` round steps with a traced mode vector, ``shard_map``
+    bodies).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -49,6 +77,7 @@ from repro.core import modulation as mod_lib
 __all__ = [
     "TransportConfig",
     "TxStats",
+    "clear_kernel_rows",
     "client_keys",
     "transmit_flat",
     "transmit_pytree",
@@ -373,10 +402,24 @@ def transmit_batch(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
     snr_vec = _resolve_batch_snr(cfg, num_clients, snr_db)
     keys = client_keys(key, num_clients, client_offset)
 
+    return _batch_with_keys(x, keys, cfg, snr_vec)
+
+
+def _batch_with_keys(x: jax.Array, keys: jax.Array, cfg: TransportConfig,
+                     snr_vec, *, num_active=None):
+    """Single-mode batch over explicit per-client keys.
+
+    The shared engine under ``transmit_batch`` (keys from the fold_in
+    schedule) and each bucket of the bucketed adaptive dispatch (keys
+    gathered by client index). ``num_active`` masks the tail of a padded
+    bucket on the kernel path (masked rows skip the grid work); the jnp
+    paths compute padded rows and the caller discards them.
+    """
     if cfg.mode in ("naive", "approx") and cfg.use_kernel:
         from repro.kernels import ops as kernel_ops
 
-        return kernel_ops.approx_channel_transmit_batch(x, keys, cfg, snr_vec)
+        return kernel_ops.approx_channel_transmit_batch(
+            x, keys, cfg, snr_vec, num_active=num_active)
 
     # All jnp paths (perfect/naive/approx/ecrt, chunked or not) are one vmap
     # over the single-client pipeline — batch semantics == loop semantics by
@@ -392,45 +435,197 @@ def _same_channel(a: channel_lib.ChannelConfig,
     """ChannelConfig equality that tolerates array-valued ``snr_db``.
 
     Plain dataclass ``==`` on two distinct configs with per-client snr_db
-    arrays evaluates an ambiguous-truth array comparison; compare the scalar
-    fields and the snr_db values separately instead.
+    arrays evaluates an ambiguous-truth array comparison, and a bare
+    ``np.array_equal`` on the snr_db values is shape-sensitive: a scalar, a
+    0-d array, and a length-1 sequence all mean "one homogeneous SNR" but
+    compare unequal. Normalize both sides to flat vectors first; a size-1
+    value equals any vector it would broadcast to.
     """
     if a is b:
         return True
     if dataclasses.replace(a, snr_db=0.0) != dataclasses.replace(b, snr_db=0.0):
         return False
-    return np.array_equal(np.asarray(a.snr_db, np.float32),
-                          np.asarray(b.snr_db, np.float32))
+    sa = np.asarray(a.snr_db, np.float32).reshape(-1)
+    sb = np.asarray(b.snr_db, np.float32).reshape(-1)
+    if sa.size != sb.size and sa.size != 1 and sb.size != 1:
+        return False
+    if sa.size == 0 or sb.size == 0:
+        return sa.size == sb.size
+    return bool(np.all(sa == sb))
+
+
+def clear_kernel_rows(cfgs):
+    """A mode table with every ``use_kernel`` flag cleared.
+
+    The single transform behind every select-pinned consumer (the fused FL
+    round, ``shard_map`` dispatch): the Pallas grid cannot lower inside a
+    vmapped switch, and the jnp rows draw their own — equally valid, but
+    *different* — channel realization, so the engine refuses to swap the
+    flag silently and callers opt in through this helper instead.
+    """
+    return tuple(
+        dataclasses.replace(c, use_kernel=False) if c.use_kernel else c
+        for c in cfgs
+    )
+
+
+def _bucket_capacity(count: int) -> int:
+    """Static bucket capacity for ``count`` clients: quarter-octave rounding.
+
+    Rounds up to the next multiple of ``2^(floor(log2 count) - 2)`` (counts
+    <= 4 are exact), i.e. at most 4 capacities per power-of-two octave. This
+    bounds the number of distinct bucket shapes — and therefore per-mode jit
+    traces — at ``~4 log2(num_clients)`` per mode, whatever sequence of mode
+    mixes the policy produces, while wasting at most 25% of a bucket's work
+    on masked padding (so total work stays O(num_clients) across modes, vs
+    O(modes x num_clients) for the select lowering).
+    """
+    if count <= 4:
+        return max(count, 1)
+    granule = 1 << (count.bit_length() - 3)
+    return -(-count // granule) * granule
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_mode_batch_fn(cfg: TransportConfig, with_snr: bool):
+    """One jitted single-mode batch per (config, snr-arity) — jax caches per
+    bucket shape underneath, so repeated rounds with the same mode mix reuse
+    their traces."""
+    if with_snr:
+        return jax.jit(lambda x, k, s, na: _batch_with_keys(
+            x, k, cfg, s, num_active=na))
+    return jax.jit(lambda x, k, na: _batch_with_keys(
+        x, k, cfg, None, num_active=na))
+
+
+def _mode_batch_fn(cfg: TransportConfig, with_snr: bool):
+    try:
+        return _cached_mode_batch_fn(cfg, with_snr)
+    except TypeError:
+        # Unhashable config (e.g. an array-valued channel snr_db): fall back
+        # to an unjitted call — correct, just not trace-cached.
+        if with_snr:
+            return lambda x, k, s, na: _batch_with_keys(
+                x, k, cfg, s, num_active=na)
+        return lambda x, k, na: _batch_with_keys(x, k, cfg, None, num_active=na)
+
+
+def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec):
+    """Sort/gather/scatter mixed-mode dispatch over concrete mode counts.
+
+    Clients are stable-argsorted by mode so each mode's clients form one
+    contiguous bucket; every bucket runs the fused single-mode engine once
+    (kernel path included) on a quarter-octave capacity with the tail
+    masked, and outputs scatter back through the inverse permutation. Keys/SNR are
+    gathered by client index, so each row is bit-identical to the select
+    path and to ``transmit_flat`` under the fold_in schedule.
+    """
+    num_clients, n_payload = x.shape
+    if num_clients == 0:
+        # Degenerate empty cohort (e.g. every client dropped): agree with
+        # the select dispatch's empty vmap output instead of concatenating
+        # zero buckets.
+        empty = jnp.zeros((0,), jnp.float32)
+        return x, TxStats(empty, empty, empty, empty)
+    order = np.argsort(mode_np, kind="stable")
+    counts = np.bincount(mode_np, minlength=len(cfgs))
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    parts_x, parts_st = [], []
+    for m, cfg in enumerate(cfgs):
+        count = int(counts[m])
+        if count == 0:
+            continue
+        idx = jnp.asarray(order[starts[m] : starts[m] + count])
+        xb = jnp.take(x, idx, axis=0)
+        kb = jnp.take(keys, idx, axis=0)
+        sb = None if snr_vec is None else jnp.take(snr_vec, idx)
+        cap = _bucket_capacity(count)
+        if cap > count:
+            pad = cap - count
+            xb = jnp.concatenate([xb, jnp.zeros((pad, n_payload), xb.dtype)])
+            kb = jnp.concatenate(
+                [kb, jnp.broadcast_to(kb[:1], (pad,) + kb.shape[1:])])
+            if sb is not None:
+                sb = jnp.concatenate([sb, jnp.broadcast_to(sb[:1], (pad,))])
+        fn = _mode_batch_fn(cfg, sb is not None)
+        na = jnp.int32(count)
+        xh, st = fn(xb, kb, na) if sb is None else fn(xb, kb, sb, na)
+        parts_x.append(xh[:count])
+        parts_st.append(TxStats(st.data_symbols[:count],
+                                st.transmissions[:count],
+                                st.bit_errors[:count], st.n_bits[:count]))
+    inv = np.empty(num_clients, np.int64)
+    inv[order] = np.arange(num_clients)
+    inv = jnp.asarray(inv)
+    x_hat = jnp.take(jnp.concatenate(parts_x, axis=0), inv, axis=0)
+    fields = (
+        jnp.take(jnp.concatenate([getattr(st, f) for st in parts_st]), inv)
+        for f in ("data_symbols", "transmissions", "bit_errors", "n_bits")
+    )
+    return x_hat, TxStats(*fields)
+
+
+def _select_adaptive(x, keys, cfgs, mode_idx, snr_vec):
+    """Per-client ``lax.switch`` over the table, vmapped over clients: one
+    fused XLA program, but the switch lowers to a select over all branches
+    (every client pays every mode's FLOPs)."""
+    if snr_vec is None:
+        branches = [
+            lambda xc, kc, cfg=cfg: transmit_flat(xc, kc, cfg) for cfg in cfgs
+        ]
+        return jax.vmap(
+            lambda xc, kc, m: jax.lax.switch(m, branches, xc, kc)
+        )(x, keys, mode_idx)
+    branches = [
+        lambda xc, kc, s, cfg=cfg: transmit_flat(xc, kc, cfg, snr_db=s)
+        for cfg in cfgs
+    ]
+    return jax.vmap(
+        lambda xc, kc, s, m: jax.lax.switch(m, branches, xc, kc, s)
+    )(x, keys, snr_vec, mode_idx)
 
 
 def transmit_batch_adaptive(x: jax.Array, key: jax.Array,
-                            cfgs, mode_idx, *, snr_db=None, client_offset=0):
+                            cfgs, mode_idx, *, snr_db=None, client_offset=0,
+                            dispatch: str = "auto"):
     """Mixed-mode batched uplink: client ``i`` uses ``cfgs[mode_idx[i]]``.
 
     The link-adaptation dispatch (paper Sec. I: deliver gradients with errors
     "when the channel quality is satisfactory", protect otherwise): a policy
-    upstream picks a transport config per client per round, and the whole
-    cohort still runs as **one fused XLA program** — the per-client pipeline
-    is a ``lax.switch`` over the config table, vmapped over clients, so a
-    mixed approx/ECRT/high-order-QAM round costs one jit trace and no
-    per-client Python loop. Under vmap the switch lowers to a select over
-    all branches, so the FLOP cost is ~``len(cfgs)`` single-mode batches —
-    keep the table small (3-5 modes) and use the analytic ECRT model
-    (``simulate_fec=False``) inside FL loops.
+    upstream picks a transport config per client per round and the whole
+    cohort runs through the fused batched engine. See the module docstring
+    for the two dispatch strategies; the short version:
+
+    * ``"bucketed"`` — sort/gather/scatter per-mode buckets, each mode runs
+      once, O(num_clients) total work, Pallas-kernel rows allowed. Needs a
+      *concrete* (non-traced) ``mode_idx``.
+    * ``"select"`` — vmapped ``lax.switch``: one XLA program even with a
+      traced ``mode_idx``, but ~``len(cfgs)``x the FLOPs and no kernel rows.
+    * ``"auto"`` (default) — bucketed when ``mode_idx`` is concrete, select
+      otherwise.
 
     Args:
       x: ``(num_clients, N)`` payload matrix.
       key: base PRNG key; the :func:`client_keys` fold_in schedule is shared
         with :func:`transmit_batch`, so row ``i`` is bit-identical to
-        ``transmit_flat(x[i], fold_in(key, client_offset + i), cfgs[m_i])``.
+        ``transmit_flat(x[i], fold_in(key, client_offset + i), cfgs[m_i])``
+        under **either** dispatch (the bucketed key rides the client index,
+        not the bucket slot).
       cfgs: sequence of :class:`TransportConfig` — the mode table. All
         entries must share one ``ChannelConfig`` (the physical link does not
-        depend on the chosen transport) and must not use the Pallas kernel
-        path (``use_kernel`` does not lower inside a vmapped switch).
+        depend on the chosen transport); equal-valued configs of different
+        shapes (scalar vs length-1 snr_db) are normalized to ``cfgs[0]``'s.
+        ``use_kernel`` rows are accepted on the bucketed path and rejected
+        on the select path (the Pallas grid cannot lower inside a vmapped
+        switch).
       mode_idx: ``(num_clients,)`` integer vector of table indices.
+        Out-of-range values clamp (matching ``lax.switch``), and the
+        *clamped* vector is what ``stats.mode_idx`` records — so airtime
+        pricing always sees the mode that actually transmitted.
       snr_db: optional per-client SNR override (scalar or ``(num_clients,)``),
         resolved against the shared channel config.
       client_offset: global index of row 0 (as in :func:`transmit_batch`).
+      dispatch: ``"auto" | "bucketed" | "select"``.
 
     Returns:
       ``(x_hat, stats)`` as :func:`transmit_batch`; ``stats.mode_idx`` holds
@@ -443,42 +638,72 @@ def transmit_batch_adaptive(x: jax.Array, key: jax.Array,
     if not cfgs:
         raise ValueError("transmit_batch_adaptive needs a non-empty config table")
     for cfg in cfgs:
-        if cfg.use_kernel:
-            raise ValueError(
-                "use_kernel configs cannot be dispatched per client; the "
-                "Pallas path does not lower inside a vmapped lax.switch"
-            )
         if not _same_channel(cfg.channel, cfgs[0].channel):
             raise ValueError(
                 "all adaptive mode configs must share one ChannelConfig; "
                 f"got {cfg.channel} vs {cfgs[0].channel}"
             )
+    # Normalize representation differences (scalar vs 0-d vs length-1
+    # snr_db) so every row resolves SNR identically, and canonicalize an
+    # array-valued snr_db to a hashable tuple — otherwise the per-mode jit
+    # cache (keyed on the config) falls back to eager per-op dispatch for
+    # every bucket of every round.
+    ch0 = cfgs[0].channel
+    try:
+        hash(ch0)
+    except TypeError:
+        try:
+            ch0 = dataclasses.replace(ch0, snr_db=tuple(
+                float(v)
+                for v in np.asarray(ch0.snr_db, np.float32).reshape(-1)))
+        except (TypeError, ValueError):
+            pass  # e.g. a traced snr_db: the unjitted fallback still works
+    cfgs = tuple(
+        cfg if cfg.channel is ch0
+        else dataclasses.replace(cfg, channel=ch0)
+        for cfg in cfgs
+    )
     num_clients = x.shape[0]
-    mode_idx = jnp.asarray(mode_idx, jnp.int32)
-    if mode_idx.shape != (num_clients,):
+    mode_concrete = not isinstance(mode_idx, jax.core.Tracer)
+    if dispatch == "auto":
+        dispatch = "bucketed" if mode_concrete else "select"
+    if dispatch not in ("bucketed", "select"):
+        raise ValueError(f"unknown dispatch {dispatch!r}; use bucketed|select")
+    if dispatch == "bucketed" and not mode_concrete:
+        raise ValueError(
+            "bucketed dispatch needs a concrete mode_idx (bucket sizes are "
+            "host-side); inside jit/shard_map with a traced mode vector use "
+            "dispatch='select'"
+        )
+    if dispatch == "select" and any(cfg.use_kernel for cfg in cfgs):
+        raise ValueError(
+            "use_kernel configs cannot take the select dispatch; the Pallas "
+            "grid does not lower inside a vmapped lax.switch — use the "
+            "bucketed dispatch (concrete mode_idx)"
+        )
+    if dispatch == "bucketed":
+        mode_arr = np.asarray(mode_idx, np.int32)
+    else:
+        mode_arr = jnp.asarray(mode_idx, jnp.int32)
+    if mode_arr.shape != (num_clients,):
         raise ValueError(
             f"mode_idx must be ({num_clients},) to match the batch; got "
-            f"{mode_idx.shape}"
+            f"{mode_arr.shape}"
         )
+    # Clamp once, up front: the dispatch and the recorded stats.mode_idx
+    # must agree on the mode each client actually used — a stray -1 would
+    # otherwise transmit as cfgs[0] (lax.switch clamps) yet price as the
+    # *last* row downstream (jnp indexing wraps negatives).
+    mode_arr = (np.clip if dispatch == "bucketed" else jnp.clip)(
+        mode_arr, 0, len(cfgs) - 1)
     snr_vec = _resolve_batch_snr(cfgs[0], num_clients, snr_db)
     keys = client_keys(key, num_clients, client_offset)
 
-    if snr_vec is None:
-        branches = [
-            lambda xc, kc, cfg=cfg: transmit_flat(xc, kc, cfg) for cfg in cfgs
-        ]
-        x_hat, stats = jax.vmap(
-            lambda xc, kc, m: jax.lax.switch(m, branches, xc, kc)
-        )(x, keys, mode_idx)
+    if dispatch == "bucketed":
+        x_hat, stats = _bucketed_adaptive(x, keys, cfgs, mode_arr, snr_vec)
     else:
-        branches = [
-            lambda xc, kc, s, cfg=cfg: transmit_flat(xc, kc, cfg, snr_db=s)
-            for cfg in cfgs
-        ]
-        x_hat, stats = jax.vmap(
-            lambda xc, kc, s, m: jax.lax.switch(m, branches, xc, kc, s)
-        )(x, keys, snr_vec, mode_idx)
-    stats.mode_idx = mode_idx
+        x_hat, stats = _select_adaptive(x, keys, cfgs, mode_arr, snr_vec)
+    stats.mode_idx = jnp.asarray(mode_arr, jnp.int32)
     return x_hat, stats
 
 
@@ -537,7 +762,7 @@ def transmit_pytree_batch(tree: Any, key: jax.Array, cfg: TransportConfig, *,
 
 
 def transmit_pytree_batch_adaptive(tree: Any, key: jax.Array, cfgs, mode_idx,
-                                   *, snr_db=None):
+                                   *, snr_db=None, dispatch: str = "auto"):
     """Pytree front-end of :func:`transmit_batch_adaptive`.
 
     Same flatten/transmit/unflatten contract as :func:`transmit_pytree_batch`
@@ -546,5 +771,5 @@ def transmit_pytree_batch_adaptive(tree: Any, key: jax.Array, cfgs, mode_idx,
     """
     flat, spec = _flatten_client_tree(tree)
     flat_hat, stats = transmit_batch_adaptive(
-        flat, key, cfgs, mode_idx, snr_db=snr_db)
+        flat, key, cfgs, mode_idx, snr_db=snr_db, dispatch=dispatch)
     return _unflatten_client_tree(flat_hat, spec), stats

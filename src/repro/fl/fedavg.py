@@ -16,7 +16,6 @@ an adaptive per-round scale factor (see ``scale_mode``):
 
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax
@@ -30,7 +29,9 @@ from repro.fl.loop import (
     FLResult,
     dropout_weighted_mean,
     record_link_round,
+    resolve_ecrt_analytic,
     resolve_scenario,
+    select_mode_cfgs,
 )
 from repro.optim.sgd import sgd as make_sgd
 
@@ -50,6 +51,7 @@ def run_fedavg(
     eval_every: int = 2,
     timings: latency_lib.PhyTimings | None = None,
     scenario=None,
+    adaptive_dispatch: str = "bucketed",
 ) -> FLResult:
     timings = timings or latency_lib.PhyTimings()
     M = client_x.shape[0]
@@ -58,15 +60,14 @@ def run_fedavg(
     params = cnn.init_params(pk, cfg)
     grad_fn = jax.grad(cnn.loss_fn)
     driver = resolve_scenario(scenario, transport_cfg)
+    if adaptive_dispatch not in ("bucketed", "select"):
+        raise ValueError(
+            f"adaptive_dispatch must be bucketed|select, got {adaptive_dispatch!r}")
 
-    if (driver is None and transport_cfg.mode == "ecrt"
-            and transport_cfg.simulate_fec):
-        # mean SNR for heterogeneous cohorts (see loop.py)
-        snr_cal = float(np.mean(np.asarray(transport_cfg.channel.snr_db)))
-        e_tx = latency_lib.calibrate_ecrt(
-            snr_cal, transport_cfg.modulation, n_codewords=64, max_tx=6)
-        transport_cfg = dataclasses.replace(
-            transport_cfg, simulate_fec=False, ecrt_expected_tx=float(e_tx))
+    ecrt_air_scale = None
+    if driver is None:
+        # Per-client analytic E[tx] for heterogeneous cohorts (see loop.py).
+        transport_cfg, ecrt_air_scale = resolve_ecrt_analytic(transport_cfg, M)
 
     def client_deltas(params, xb, yb):
         # xb: (M, local_steps, batch, 28, 28) -> weight deltas, leaves (M, ...)
@@ -82,23 +83,35 @@ def run_fedavg(
 
         return jax.vmap(client_update)(xb, yb)
 
+    def expand(s, like):
+        return s.reshape((M,) + (1,) * (like.ndim - 1))
+
+    # jitted so the host-driven bucketed round doesn't run the scale math
+    # op-by-op; inside round_step_link's trace they simply inline.
+    @jax.jit
+    def compute_scale(deltas):
+        flat = jnp.concatenate(
+            [l.reshape(M, -1) for l in jax.tree_util.tree_leaves(deltas)],
+            axis=1)
+        return jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
+
+    @jax.jit
+    def div_scale(deltas, scale):
+        return jax.tree_util.tree_map(lambda l: l / expand(scale, l), deltas)
+
+    @jax.jit
+    def mul_scale(deltas, scale):
+        return jax.tree_util.tree_map(lambda l: l * expand(scale, l), deltas)
+
     def scaled_uplink(deltas, transmit):
         # Per-client adaptive scale (scale_mode == "max_abs"): one scalar per
         # client travels on the (error-free) control channel; the cohort then
         # rides the batched uplink in a single fused computation.
         if scale_mode != "max_abs":
             return transmit(deltas)
-        flat = jnp.concatenate(
-            [l.reshape(M, -1) for l in jax.tree_util.tree_leaves(deltas)],
-            axis=1)
-        scale = jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
-
-        def expand(s, like):
-            return s.reshape((M,) + (1,) * (like.ndim - 1))
-
-        scaled = jax.tree_util.tree_map(lambda l: l / expand(scale, l), deltas)
-        out, stats = transmit(scaled)
-        return jax.tree_util.tree_map(lambda l: l * expand(scale, l), out), stats
+        scale = compute_scale(deltas)
+        out, stats = transmit(div_scale(deltas, scale))
+        return mul_scale(out, scale), stats
 
     @jax.jit
     def round_step(params, xb, yb, key):
@@ -112,18 +125,50 @@ def run_fedavg(
 
     @jax.jit
     def round_step_link(params, xb, yb, key, lstate, prev_mode, prev_est):
-        # Scenario-driven round: link pipeline + mixed-mode uplink +
-        # dropout-weighted FedAvg aggregate (see loop.run_fl).
+        # Select dispatch, scenario-driven round: link pipeline + vmapped-
+        # switch uplink + dropout-weighted FedAvg aggregate (see loop.run_fl).
         k_link, k_tx = jax.random.split(key)
         lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
         deltas = client_deltas(params, xb, yb)
         deltas_hat, stats = scaled_uplink(
             deltas,
             lambda t: transport_lib.transmit_pytree_batch_adaptive(
-                t, k_tx, driver.mode_cfgs, rnd.mode, snr_db=rnd.snr_db))
+                t, k_tx, select_mode_cfgs(driver), rnd.mode,
+                snr_db=rnd.snr_db, dispatch="select"))
         agg = dropout_weighted_mean(deltas_hat, rnd.active)
         new_params = jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
         return new_params, stats, lstate, rnd
+
+    @jax.jit
+    def link_round(lstate, prev_mode, prev_est, key):
+        return driver.round(lstate, prev_mode, prev_est, key)
+
+    @jax.jit
+    def deltas_fn(params, xb, yb):
+        return client_deltas(params, xb, yb)
+
+    @jax.jit
+    def apply_deltas(params, deltas_hat, active):
+        agg = dropout_weighted_mean(deltas_hat, active)
+        return jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
+
+    def round_step_link_bucketed(params, xb, yb, key, lstate, prev_mode,
+                                 prev_est):
+        # Bucketed dispatch: the mode vector syncs to the host after the
+        # jitted link step, the uplink runs each mode once on its own client
+        # bucket, and the (jitted) aggregate applies the deltas (see
+        # loop.run_fl for the trade-off).
+        k_link, k_tx = jax.random.split(key)
+        lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
+        mode_np = np.asarray(rnd.mode)
+        deltas = deltas_fn(params, xb, yb)
+        deltas_hat, stats = scaled_uplink(
+            deltas,
+            lambda t: transport_lib.transmit_pytree_batch_adaptive(
+                t, k_tx, driver.mode_cfgs, mode_np, snr_db=rnd.snr_db,
+                dispatch="bucketed"))
+        params = apply_deltas(params, deltas_hat, rnd.active)
+        return params, stats, lstate, rnd
 
     @jax.jit
     def eval_acc(params):
@@ -149,8 +194,12 @@ def run_fedavg(
         if driver is None:
             params, stats = round_step(params, xb, yb, rk)
             air = latency_lib.round_airtime(stats, timings, transport_cfg.mode)
+            if ecrt_air_scale is not None:
+                air = air * ecrt_air_scale
         else:
-            params, stats, lstate, rnd = round_step_link(
+            step = (round_step_link_bucketed
+                    if adaptive_dispatch == "bucketed" else round_step_link)
+            params, stats, lstate, rnd = step(
                 params, xb, yb, rk, lstate, prev_mode, prev_est)
             prev_mode, prev_est = rnd.mode, rnd.est_db
             air = record_link_round(res, r, driver, stats, rnd, timings)

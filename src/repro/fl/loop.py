@@ -13,12 +13,23 @@ One XLA program per round regardless of M; per-client TxStats feed the
 latency model directly.
 
 Scenario-driven rounds (``scenario=``): instead of one static transport
-mode and SNR, each round runs the link-adaptation pipeline inside the same
-jitted step — ``repro.link`` dynamics evolve per-client SNR, the estimator
-produces noisy CSI, the policy picks each client's mode, the mixed-mode
-batched uplink delivers (``transmit_pytree_batch_adaptive``), and dropped
-clients are excluded from the weighted aggregate. Per-round link telemetry
-lands in ``FLResult.link``.
+mode and SNR, each round runs the link-adaptation pipeline — ``repro.link``
+dynamics evolve per-client SNR, the estimator produces noisy CSI, the
+policy picks each client's mode, the mixed-mode batched uplink delivers
+(``transmit_pytree_batch_adaptive``), and dropped clients are excluded from
+the weighted aggregate. Per-round link telemetry lands in ``FLResult.link``.
+
+Adaptive dispatch (``adaptive_dispatch=``): ``"bucketed"`` (default) splits
+the round into jitted link/grad/update steps around a host-driven
+mode-bucketed uplink — each mode runs once on its own client bucket
+(O(clients) work, Pallas kernel rows allowed) at the cost of syncing the
+mode vector to the host each round. ``"select"`` keeps the whole round one
+fused XLA program (the vmapped ``lax.switch`` uplink), paying ~n_modes x
+the uplink FLOPs. For kernel-free mode tables the two dispatches are
+bit-identical through the uplink; with ``use_kernel`` rows the select path
+clears the flag (the grid cannot lower in the fused round), so its jnp rows
+draw a different — equally valid — channel realization than bucketed's
+kernel rows.
 """
 
 from __future__ import annotations
@@ -103,6 +114,47 @@ def link_telemetry(r: int, rnd, per_client_air, n_modes: int) -> dict:
     }
 
 
+def select_mode_cfgs(driver):
+    """The driver's mode table, legal for the select dispatch.
+
+    Delegates to ``transport.clear_kernel_rows`` (the one clearing rule):
+    the fused select round cannot lower the Pallas grid. A select round is
+    therefore *not* bit-comparable to a bucketed round of a kernel-enabled
+    table — the jnp rows draw their own, equally valid, channel
+    realization; within the select dispatch everything stays deterministic
+    as usual.
+    """
+    return transport_lib.clear_kernel_rows(driver.mode_cfgs)
+
+
+def resolve_ecrt_analytic(transport_cfg, num_clients: int):
+    """Swap real-FEC ECRT for the calibrated analytic model in an FL loop.
+
+    The real decoder inside a vmapped per-round loop would only re-measure a
+    constant; calibrate instead — with the shared pricing sample budget
+    (``latency.DEFAULT_CALIB_CODEWORDS``), so every entry point resolves
+    the same channel to the same E[tx]. Heterogeneous cohorts get E[tx]
+    interpolated per client over an SNR grid (``ecrt_expected_tx_profile``),
+    with the cohort mean driving the transport constant and the per-client
+    ratio returned as a ``(num_clients,)`` airtime scale (the analytic model
+    is linear in E[tx]). Returns ``(transport_cfg, air_scale_or_None)``.
+    """
+    if not (transport_cfg.mode == "ecrt" and transport_cfg.simulate_fec):
+        return transport_cfg, None
+    snr_vec = np.asarray(transport_cfg.channel.snr_db, np.float32).reshape(-1)
+    e_tx = latency_lib.ecrt_expected_tx_profile(
+        snr_vec, transport_cfg.modulation,
+        n_codewords=latency_lib.DEFAULT_CALIB_CODEWORDS,
+        max_tx=latency_lib.DEFAULT_CALIB_MAX_TX)
+    e_mean = float(e_tx.mean())
+    transport_cfg = dataclasses.replace(
+        transport_cfg, simulate_fec=False, ecrt_expected_tx=e_mean)
+    air_scale = None
+    if e_tx.size == num_clients and e_tx.size > 1:
+        air_scale = jnp.asarray(e_tx / e_mean)
+    return transport_cfg, air_scale
+
+
 def run_fl(
     cfg,
     transport_cfg: transport_lib.TransportConfig,
@@ -116,6 +168,7 @@ def run_fl(
     eval_every: int = 2,
     timings: latency_lib.PhyTimings | None = None,
     scenario=None,
+    adaptive_dispatch: str = "bucketed",
 ) -> FLResult:
     timings = timings or latency_lib.PhyTimings()
     M = client_x.shape[0]
@@ -125,18 +178,13 @@ def run_fl(
     opt = make_sgd(cfg.lr)
     opt_state = opt.init(params)
     driver = resolve_scenario(scenario, transport_cfg)
+    if adaptive_dispatch not in ("bucketed", "select"):
+        raise ValueError(
+            f"adaptive_dispatch must be bucketed|select, got {adaptive_dispatch!r}")
 
-    # ECRT inside a vmapped per-round loop uses the calibrated analytic model
-    # (the real decoder is exercised in tests/benchmarks; see DESIGN.md).
-    # Heterogeneous cohorts calibrate at the mean SNR (E[tx] is a round-level
-    # airtime constant here, not a per-client quantity).
-    if (driver is None and transport_cfg.mode == "ecrt"
-            and transport_cfg.simulate_fec):
-        snr_cal = float(np.mean(np.asarray(transport_cfg.channel.snr_db)))
-        e_tx = latency_lib.calibrate_ecrt(
-            snr_cal, transport_cfg.modulation, n_codewords=96, max_tx=6)
-        transport_cfg = dataclasses.replace(
-            transport_cfg, simulate_fec=False, ecrt_expected_tx=float(e_tx))
+    ecrt_air_scale = None
+    if driver is None:
+        transport_cfg, ecrt_air_scale = resolve_ecrt_analytic(transport_cfg, M)
 
     grad_fn = jax.grad(cnn.loss_fn)
 
@@ -157,8 +205,8 @@ def run_fl(
     @jax.jit
     def round_step_link(params, opt_state, xb, yb, key, lstate, prev_mode,
                         prev_est):
-        # One fused program: dynamics -> noisy CSI -> mode policy ->
-        # mixed-mode batched uplink -> dropout-weighted aggregation.
+        # Select dispatch: one fused program — dynamics -> noisy CSI -> mode
+        # policy -> vmapped-switch uplink -> dropout-weighted aggregation.
         k_link, k_tx = jax.random.split(key)
         lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
 
@@ -167,10 +215,41 @@ def run_fl(
 
         grads = jax.vmap(client_grad)(xb, yb)
         grads_hat, stats = transport_lib.transmit_pytree_batch_adaptive(
-            grads, k_tx, driver.mode_cfgs, rnd.mode, snr_db=rnd.snr_db)
+            grads, k_tx, select_mode_cfgs(driver), rnd.mode,
+            snr_db=rnd.snr_db, dispatch="select")
         agg = dropout_weighted_mean(grads_hat, rnd.active)
         new_params, new_state = opt.update(agg, opt_state, params)
         return new_params, new_state, stats, lstate, rnd
+
+    @jax.jit
+    def link_round(lstate, prev_mode, prev_est, key):
+        return driver.round(lstate, prev_mode, prev_est, key)
+
+    @jax.jit
+    def client_grads(params, xb, yb):
+        return jax.vmap(lambda x, y: grad_fn(params, x, y))(xb, yb)
+
+    @jax.jit
+    def apply_update(params, opt_state, grads_hat, active):
+        agg = dropout_weighted_mean(grads_hat, active)
+        return opt.update(agg, opt_state, params)
+
+    def round_step_link_bucketed(params, opt_state, xb, yb, key, lstate,
+                                 prev_mode, prev_est):
+        # Bucketed dispatch: the link step runs first and the mode vector
+        # syncs to the host, so the uplink can sort clients into per-mode
+        # buckets and run each mode once (O(M) work, kernel rows allowed)
+        # instead of paying every mode for every client.
+        k_link, k_tx = jax.random.split(key)
+        lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
+        mode_np = np.asarray(rnd.mode)
+        grads = client_grads(params, xb, yb)
+        grads_hat, stats = transport_lib.transmit_pytree_batch_adaptive(
+            grads, k_tx, driver.mode_cfgs, mode_np, snr_db=rnd.snr_db,
+            dispatch="bucketed")
+        params, opt_state = apply_update(params, opt_state, grads_hat,
+                                         rnd.active)
+        return params, opt_state, stats, lstate, rnd
 
     @jax.jit
     def eval_acc(params):
@@ -194,8 +273,14 @@ def run_fl(
             # TDMA uplink: total airtime is the sum over clients ((M,) stats)
             per_client_air = latency_lib.round_airtime(
                 stats, timings, transport_cfg.mode)
+            if ecrt_air_scale is not None:
+                # Heterogeneous analytic ECRT: rescale each client's airtime
+                # from the cohort-mean E[tx] to its own interpolated value.
+                per_client_air = per_client_air * ecrt_air_scale
         else:
-            params, opt_state, stats, lstate, rnd = round_step_link(
+            step = (round_step_link_bucketed
+                    if adaptive_dispatch == "bucketed" else round_step_link)
+            params, opt_state, stats, lstate, rnd = step(
                 params, opt_state, xb, yb, rk, lstate, prev_mode, prev_est)
             prev_mode, prev_est = rnd.mode, rnd.est_db
             per_client_air = record_link_round(

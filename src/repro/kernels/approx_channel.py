@@ -81,7 +81,8 @@ def approx_channel_pallas(
     return x_hat[0], errs[0]
 
 
-def _batch_kernel(
+def _batch_tile_body(
+    tile,
     seed_ref,
     noise_ref,
     gain_ref,
@@ -98,8 +99,10 @@ def _batch_kernel(
 ):
     """Per-(client, tile) body. The symbol counter restarts per client and the
     RNG is keyed by the client's own seed, so each grid row reproduces the
-    single-client kernel's stream bit-for-bit."""
-    tile = pl.program_id(1)
+    single-client kernel's stream bit-for-bit. ``tile`` is ``program_id(1)``,
+    hoisted to the caller: the masked grid stages this body inside a
+    ``pl.when`` branch, where a ``program_id`` call would not resolve under
+    the interpret-mode evaluator."""
     s_per_word = word_bits // bits_per_symbol
     base_sym = tile.astype(_U32) * _U32(block_words * s_per_word)
 
@@ -128,6 +131,38 @@ def _batch_kernel(
     err_ref[0, 0] = jnp.sum(_ref._popcount(u ^ u_hat)).astype(jnp.int32)
 
 
+def _make_batch_kernel(masked: bool, **params):
+    """Grid body, optionally masked to the first ``num_active`` client rows.
+
+    The masked variant (partial-batch grid) serves padded per-mode buckets
+    of the adaptive dispatch: rows at or beyond ``num_active`` skip the
+    whole PHY chain and write zeros, so a bucket padded to its power-of-two
+    capacity only pays for its real clients.
+    """
+    if not masked:
+        def kernel(seed_ref, noise_ref, gain_ref, x_ref, out_ref, err_ref):
+            _batch_tile_body(pl.program_id(1), seed_ref, noise_ref, gain_ref,
+                             x_ref, out_ref, err_ref, **params)
+
+        return kernel
+
+    def kernel(na_ref, seed_ref, noise_ref, gain_ref, x_ref, out_ref, err_ref):
+        tile = pl.program_id(1)
+        active = pl.program_id(0) < na_ref[0]
+
+        @pl.when(active)
+        def _():
+            _batch_tile_body(tile, seed_ref, noise_ref, gain_ref, x_ref,
+                             out_ref, err_ref, **params)
+
+        @pl.when(jnp.logical_not(active))
+        def _():
+            out_ref[0] = jnp.zeros_like(out_ref[0])
+            err_ref[0, 0] = jnp.int32(0)
+
+    return kernel
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -153,6 +188,7 @@ def approx_channel_batch_pallas(
     block_words: int = 1024,
     word_bits: int = 32,
     interpret: bool = True,
+    num_active=None,
 ):
     """Batched fused PHY pipeline over a 2-D ``(clients, tiles)`` grid.
 
@@ -161,18 +197,24 @@ def approx_channel_batch_pallas(
       seeds: ``(C,)`` uint32 — one independent RNG stream per client.
       noise_powers / large_scale_gains: ``(C,)`` f32 per-client link params
         (heterogeneous SNR = varying ``noise_powers``).
+      num_active: optional scalar (may be traced): only the first
+        ``num_active`` client rows are computed; rows beyond it are masked —
+        zero output, zero error count, no PHY work. This is the
+        partial-batch grid the adaptive dispatch's padded buckets ride;
+        ``None`` computes every row.
 
     Returns:
-      ``(x_hat (C, N), bit_errors (C,) int32)``. Row ``i`` is bit-identical
-      to ``approx_channel_pallas(x[i], seeds[i], ...)``.
+      ``(x_hat (C, N), bit_errors (C,) int32)``. Active row ``i`` is
+      bit-identical to ``approx_channel_pallas(x[i], seeds[i], ...)``.
     """
     c, n = x.shape
     if n % block_words != 0:
         raise ValueError(f"N={n} must be a multiple of block_words={block_words}")
     tiles = n // block_words
 
-    kernel = functools.partial(
-        _batch_kernel,
+    masked = num_active is not None
+    kernel = _make_batch_kernel(
+        masked,
         bits_per_symbol=bits_per_symbol,
         fading=fading,
         fade_block=fade_block,
@@ -182,15 +224,26 @@ def approx_channel_batch_pallas(
     )
     wire = jnp.bfloat16 if word_bits == 16 else jnp.float32
     client_scalar = pl.BlockSpec((1,), lambda ci, ti: (ci,))
+    in_specs = [
+        client_scalar,  # seed
+        client_scalar,  # noise power
+        client_scalar,  # large-scale gain
+        pl.BlockSpec((1, block_words), lambda ci, ti: (ci, ti)),
+    ]
+    operands = [
+        seeds.reshape(c).astype(_U32),
+        noise_powers.reshape(c).astype(jnp.float32),
+        large_scale_gains.reshape(c).astype(jnp.float32),
+        x.astype(wire),
+    ]
+    if masked:
+        in_specs.insert(0, pl.BlockSpec((1,), lambda ci, ti: (0,)))
+        operands.insert(
+            0, jnp.reshape(jnp.asarray(num_active, jnp.int32), (1,)))
     x_hat, errs = pl.pallas_call(
         kernel,
         grid=(c, tiles),
-        in_specs=[
-            client_scalar,  # seed
-            client_scalar,  # noise power
-            client_scalar,  # large-scale gain
-            pl.BlockSpec((1, block_words), lambda ci, ti: (ci, ti)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_words), lambda ci, ti: (ci, ti)),
             pl.BlockSpec((1, 1), lambda ci, ti: (ci, ti)),
@@ -200,10 +253,5 @@ def approx_channel_batch_pallas(
             jax.ShapeDtypeStruct((c, tiles), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        seeds.reshape(c).astype(_U32),
-        noise_powers.reshape(c).astype(jnp.float32),
-        large_scale_gains.reshape(c).astype(jnp.float32),
-        x.astype(wire),
-    )
+    )(*operands)
     return x_hat, jnp.sum(errs, axis=1)

@@ -164,11 +164,15 @@ def approx_channel_batch(
     block_words: int = 1024,
     word_bits: int = 32,
     interpret: bool = True,
+    num_active=None,
 ):
     """Batched arbitrary-length wrapper: pads ``(C, N)`` payloads along the
     payload dim to a tile multiple, one fused kernel launch for all clients.
     Returns ``(x_hat (C, N), bit_errors (C,) int32)``; errors counted on the
-    zero padding are subtracted per client (see ``approx_channel``)."""
+    zero padding are subtracted per client (see ``approx_channel``).
+    ``num_active`` masks the tail client rows (partial-batch grid): masked
+    rows cost no PHY work and return zeros — the adaptive dispatch's padded
+    buckets discard them."""
     c, n = x.shape
     pad = (-n) % block_words
     wire = jnp.bfloat16 if word_bits == 16 else jnp.float32
@@ -185,12 +189,14 @@ def approx_channel_batch(
         block_words=block_words,
         word_bits=word_bits,
         interpret=interpret,
+        num_active=num_active,
     )
     errs = errs - jax.vmap(lambda row: _padding_errors(row[n:], word_bits))(x_hat)
     return x_hat[:, :n], errs
 
 
-def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg, snr_db=None):
+def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg,
+                                  snr_db=None, *, num_active=None):
     """Batched TransportConfig adapter behind ``transport.transmit_batch``.
 
     Args:
@@ -200,6 +206,8 @@ def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg, snr_db=Non
         exactly as ``approx_channel_transmit`` would).
       cfg: TransportConfig with mode 'approx'|'naive'.
       snr_db: optional ``(C,)`` per-client SNR; ``None`` = config scalar.
+      num_active: optional scalar — compute only the first ``num_active``
+        client rows (masked partial-batch grid for padded adaptive buckets).
 
     Returns ``(x_hat (C, N) float32, TxStats with (C,) fields)``.
     """
@@ -226,6 +234,7 @@ def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg, snr_db=Non
         clamp_mask=clamp_mask,
         word_bits=wb,
         interpret=default_interpret(),
+        num_active=num_active,
     )
     ones = jnp.ones((c,), jnp.float32)
     stats = transport_lib.TxStats(

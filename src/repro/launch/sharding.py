@@ -102,6 +102,77 @@ def shard_transmit_batch(x, key, cfg, mesh, *, axis_names=None, snr_db=None):
     )(x, snr_vec)
 
 
+def shard_transmit_batch_adaptive(x, key, cfgs, mode_idx, mesh, *,
+                                  axis_names=None, snr_db=None):
+    """Sharded mixed-mode uplink: the client dim over the mesh's data axes.
+
+    Each shard runs ``transport.transmit_batch_adaptive`` on its cohort with
+    globally indexed fold_in keys; ``mode_idx`` (and a per-client ``snr_db``)
+    shard along the clients, so the result — received payloads and per-client
+    ``TxStats`` including ``mode_idx`` — is bit-identical, whatever the mesh
+    shape, to the unsharded call *on the kernel-cleared table* (for
+    kernel-free tables that is simply the unsharded call; ``use_kernel``
+    rows are cleared here, so their jnp rows draw a different channel
+    realization than an unsharded bucketed call that kept the kernel).
+
+    Inside the ``shard_map`` body the mode vector is traced, so the per-shard
+    dispatch is necessarily ``"select"`` (every shard pays every mode's
+    FLOPs for its cohort). ``use_kernel`` rows are cleared up front — the
+    Pallas grid cannot lower in the traced select body, and the jnp rows
+    draw their own (equally valid) channel realization; the single-host
+    bucketed dispatch is the fast path when the cohort fits one process.
+    """
+    from repro.core import transport as transport_lib
+
+    cfgs = transport_lib.clear_kernel_rows(cfgs)
+    axes = tuple(axis_names) if axis_names is not None else data_axes(mesh)
+    if not axes:
+        return transport_lib.transmit_batch_adaptive(
+            x, key, cfgs, mode_idx, snr_db=snr_db)
+    n_shards = math.prod(mesh.shape[a] for a in axes)
+    num_clients = x.shape[0]
+    if num_clients % n_shards != 0:
+        raise ValueError(
+            f"{num_clients} clients do not shard evenly over {n_shards} devices"
+        )
+    local_clients = num_clients // n_shards
+    ax_spec = axes if len(axes) > 1 else axes[0]
+
+    snr_vec = transport_lib._resolve_batch_snr(cfgs[0], num_clients, snr_db)
+    mode_arr = jnp.asarray(mode_idx, jnp.int32)
+
+    def shard_index():
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    if snr_vec is None:
+
+        def local(xl, ml):
+            offset = shard_index() * local_clients
+            return transport_lib.transmit_batch_adaptive(
+                xl, key, cfgs, ml, client_offset=offset, dispatch="select")
+
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(ax_spec, None), P(ax_spec)),
+            out_specs=(P(ax_spec, None), P(ax_spec)),
+        )(x, mode_arr)
+
+    def local(xl, ml, sl):
+        offset = shard_index() * local_clients
+        return transport_lib.transmit_batch_adaptive(
+            xl, key, cfgs, ml, snr_db=sl, client_offset=offset,
+            dispatch="select")
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(ax_spec, None), P(ax_spec), P(ax_spec)),
+        out_specs=(P(ax_spec, None), P(ax_spec)),
+    )(x, mode_arr, snr_vec)
+
+
 import re
 
 

@@ -15,7 +15,13 @@ from repro.link.dynamics import (
     jakes_rho,
 )
 from repro.link.estimator import EstimatorConfig, estimate_snr_db
-from repro.link.policy import PolicyConfig, build_mode_cfgs, choose_mode, fixed_policy
+from repro.link.policy import (
+    PolicyConfig,
+    build_mode_cfgs,
+    choose_mode,
+    ecrt_anchor_snr_db,
+    fixed_policy,
+)
 from repro.link.scenario import (
     SCENARIOS,
     LinkRound,

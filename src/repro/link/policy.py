@@ -27,17 +27,27 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import latency as latency_lib
 from repro.core import modulation as mod_lib
 from repro.core import transport as transport_lib
 
 __all__ = [
+    "DEFAULT_CALIB_CODEWORDS",
+    "DEFAULT_CALIB_MAX_TX",
     "PolicyConfig",
     "fixed_policy",
     "initial_mode",
     "choose_mode",
+    "ecrt_anchor_snr_db",
     "build_mode_cfgs",
 ]
+
+# Re-exported for table builders; defined next to the calibrator so the FL
+# loops' fixed-ECRT path shares the exact same sample budget.
+DEFAULT_CALIB_CODEWORDS = latency_lib.DEFAULT_CALIB_CODEWORDS
+DEFAULT_CALIB_MAX_TX = latency_lib.DEFAULT_CALIB_MAX_TX
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,20 +116,66 @@ def choose_mode(snr_est_db: jax.Array, prev_mode: jax.Array,
     return jnp.clip(jnp.asarray(prev_mode, jnp.int32), up, down)
 
 
+def ecrt_anchor_snr_db(cfg: PolicyConfig, fallback_db: float) -> float:
+    """The SNR where the table's ECRT row actually operates.
+
+    With thresholds, ECRT serves the protected regime below the first
+    threshold — calibrate there. A degenerate (fixed-ECRT) table has no
+    thresholds, so the caller's fleet operating point (``fallback_db``) is
+    the anchor. The single rule both ``build_mode_cfgs`` and
+    ``scenario.ScenarioDriver`` price ECRT from, so the two entry points
+    agree on E[tx] for the same policy.
+    """
+    return float(cfg.thresholds_db[0]) if cfg.thresholds_db else float(
+        fallback_db)
+
+
 def build_mode_cfgs(base: transport_lib.TransportConfig, cfg: PolicyConfig,
-                    *, ecrt_expected_tx: float = 2.2):
+                    *, ecrt_expected_tx: float | None = None,
+                    calib_codewords: int = DEFAULT_CALIB_CODEWORDS,
+                    calib_max_tx: int = DEFAULT_CALIB_MAX_TX,
+                    anchor_fallback_db: float | None = None):
     """Materialize the mode table as ``TransportConfig`` rows.
 
     Every row inherits ``base`` (channel, interleaving, wire dtype, clamp
     bound) and overrides mode/modulation. ECRT rows use the calibrated
     analytic model (``simulate_fec=False`` with ``ecrt_expected_tx``) — the
-    real decoder inside a vmapped ``lax.switch`` would run for every client
-    whatever their mode; calibrate E[tx] once at the protected regime's SNR
-    instead (see ``latency.calibrate_ecrt``). ``use_kernel`` is force-cleared
-    (the Pallas path cannot be switched per client).
+    real decoder dispatched per client would run far too often inside FL
+    loops; calibrate E[tx] at the regime where ECRT operates instead
+    (:func:`ecrt_anchor_snr_db`). ``ecrt_expected_tx=None`` (the default)
+    runs that calibration through ``latency.calibrate_ecrt``'s cache. This
+    is the **only** calibration path — ``scenario.ScenarioDriver`` routes
+    through here too, supplying its fleet operating point as
+    ``anchor_fallback_db`` (the anchor when the table has no thresholds;
+    defaults to the base channel's mean SNR) — so every entry point prices
+    ECRT identically for the same inputs. Pass a float ``ecrt_expected_tx``
+    to skip calibration (tests, quick sweeps).
+
+    ``use_kernel`` is threaded from ``base`` onto the uncoded (approx/naive)
+    rows — the bucketed adaptive dispatch runs each mode as its own fused
+    single-mode batch, so those rows may take the Pallas grid. ECRT/perfect
+    rows clear it (the kernel implements only the uncoded chain). Consumers
+    pinned to the select dispatch (a fused jitted round, ``shard_map``)
+    clear the flag via ``transport.clear_kernel_rows`` — the kernel's
+    counter RNG draws a different channel realization than the jnp path, so
+    the engine refuses to swap it silently.
     """
     rows = []
     wire_bits = 16 if base.wire_dtype == "bfloat16" else 32
+    e_tx_by_mod = {}
+    if ecrt_expected_tx is None and any(m == "ecrt" for m, _ in cfg.modes):
+        if anchor_fallback_db is None:
+            anchor_fallback_db = np.mean(
+                np.asarray(base.channel.snr_db, np.float32))
+        anchor = ecrt_anchor_snr_db(cfg, anchor_fallback_db)
+        # Calibrate once per distinct ECRT modulation: E[tx] depends on the
+        # constellation (16-QAM fails far more codewords than QPSK at the
+        # same SNR), so one constant cannot price a mixed-ECRT table.
+        for m, mod in cfg.modes:
+            if m == "ecrt" and mod not in e_tx_by_mod:
+                e_tx_by_mod[mod] = latency_lib.calibrate_ecrt(
+                    anchor, mod, n_codewords=calib_codewords,
+                    max_tx=calib_max_tx)
     for mode, modulation in cfg.modes:
         k = mod_lib.MOD_SCHEMES[modulation].bits_per_symbol
         if mode in ("approx", "naive") and wire_bits % k != 0:
@@ -128,9 +184,16 @@ def build_mode_cfgs(base: transport_lib.TransportConfig, cfg: PolicyConfig,
                 f"{wire_bits}-bit wire words MSB-first; pick a modulation "
                 f"whose bits_per_symbol divides {wire_bits}"
             )
+        if mode != "ecrt":
+            e_tx = 1.0
+        elif ecrt_expected_tx is not None:
+            e_tx = ecrt_expected_tx
+        else:
+            e_tx = e_tx_by_mod[modulation]
         rows.append(dataclasses.replace(
-            base, mode=mode, modulation=modulation, use_kernel=False,
+            base, mode=mode, modulation=modulation,
+            use_kernel=base.use_kernel and mode in ("approx", "naive"),
             simulate_fec=False,
-            ecrt_expected_tx=ecrt_expected_tx if mode == "ecrt" else 1.0,
+            ecrt_expected_tx=float(e_tx),
         ))
     return tuple(rows)

@@ -17,6 +17,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
@@ -43,9 +44,12 @@ class Scenario:
     absent (no uplink, no airtime, excluded from aggregation);
     ``straggler_prob``/``straggler_slowdown`` model clients whose uplink
     takes ``slowdown``x the modeled airtime (contention, duty cycling).
-    ``ecrt_expected_tx = None`` means "calibrate with the real LDPC chain at
-    the protected regime's SNR" (cached); a float skips calibration —
-    tests and quick sweeps set it explicitly.
+    ``ecrt_expected_tx = None`` means "calibrate with the real LDPC chain"
+    (cached): the transport constant anchors at the protected regime's SNR
+    and airtime interpolates E[tx] per client per round over a calibrated
+    SNR grid (see :meth:`ScenarioDriver.airtime`). A float skips
+    calibration and prices with that constant — tests and quick sweeps set
+    it explicitly.
     """
 
     name: str
@@ -84,27 +88,78 @@ class ScenarioDriver:
     inside jit — ``round`` advances dynamics, estimates CSI, runs the
     policy, and draws availability, returning the carry for the next round
     plus the :class:`LinkRound` record the uplink and telemetry consume.
+
+    ECRT pricing: ``scenario.ecrt_expected_tx = None`` calibrates E[tx] at
+    the policy's anchor SNR for the *transport* constant (the analytic model
+    inside the uplink) and, for *airtime*, lazily builds a small calibrated
+    curve over ECRT's operating band so each client's airtime reflects its
+    own SNR that round (a client in a fade retransmits more than the
+    anchor average). An explicit float keeps the old constant pricing.
     """
 
     def __init__(self, scenario: Scenario,
                  base_cfg: transport_lib.TransportConfig,
-                 *, calib_codewords: int = 48, calib_max_tx: int = 6):
+                 *, calib_codewords: int = policy_lib.DEFAULT_CALIB_CODEWORDS,
+                 calib_max_tx: int = policy_lib.DEFAULT_CALIB_MAX_TX,
+                 calib_grid_points: int = 3):
         self.scenario = scenario
-        e_tx = scenario.ecrt_expected_tx
-        if e_tx is None and any(m == "ecrt" for m, _ in scenario.policy.modes):
-            # Calibrate where ECRT actually operates: the protected regime
-            # below the first threshold (or the fleet mean for a fixed-ECRT
-            # policy table).
-            thr = scenario.policy.thresholds_db
-            snr_cal = float(thr[0]) if thr else scenario.dynamics.mean_snr_db
-            ecrt_mod = next(
-                mod for m, mod in scenario.policy.modes if m == "ecrt")
-            e_tx = latency_lib.calibrate_ecrt(
-                snr_cal, ecrt_mod, n_codewords=calib_codewords,
-                max_tx=calib_max_tx)
+        self._calib = (calib_codewords, calib_max_tx, calib_grid_points)
+        self._ecrt_curve = None  # lazily built by _ecrt_tx_curve
+        ecrt_mods = {mod for m, mod in scenario.policy.modes if m == "ecrt"}
+        # Per-client/per-round interpolated airtime only applies when the
+        # scenario asked for calibration (None); an explicit float means
+        # "price with this constant" (tests, controlled sweeps). Tables with
+        # several distinct ECRT modulations fall back to their (per-row
+        # calibrated) constants — one interpolation curve cannot serve two
+        # constellations.
+        self._interp_ecrt_airtime = (len(ecrt_mods) == 1) and (
+            scenario.ecrt_expected_tx is None)
+        # Calibration (when ecrt_expected_tx is None) happens inside
+        # build_mode_cfgs — the single pricing path; the scenario's fleet
+        # operating point is the anchor fallback for threshold-less tables.
         self.mode_cfgs = policy_lib.build_mode_cfgs(
             base_cfg, scenario.policy,
-            ecrt_expected_tx=float(e_tx if e_tx is not None else 1.0))
+            ecrt_expected_tx=scenario.ecrt_expected_tx,
+            calib_codewords=calib_codewords, calib_max_tx=calib_max_tx,
+            anchor_fallback_db=scenario.dynamics.mean_snr_db)
+        self._ecrt_rows = tuple(
+            i for i, c in enumerate(self.mode_cfgs) if c.mode == "ecrt")
+
+    def _ecrt_modulation(self) -> str:
+        return next(mod for m, mod in self.scenario.policy.modes
+                    if m == "ecrt")
+
+    def _ecrt_tx_curve(self):
+        """Calibrated (grid_db, E[tx]) over ECRT's operating band, cached.
+
+        The band runs from the dynamics' SNR floor up to the first policy
+        threshold plus the hysteresis window (above that the policy moves
+        clients off ECRT); a fixed-ECRT table spans the whole dynamics
+        range. Points go through ``latency.calibrate_ecrt``'s cache.
+        """
+        if self._ecrt_curve is None:
+            scen = self.scenario
+            codewords, max_tx, points = self._calib
+            thr = scen.policy.thresholds_db
+            lo = scen.dynamics.snr_floor_db
+            hi = (thr[0] + scen.policy.hysteresis_db) if thr \
+                else scen.dynamics.snr_ceil_db
+            # The anchor joins the grid so a client sitting exactly at the
+            # transport constant's calibration point gets ratio 1 (its grid
+            # value is the same LRU-cached calibrate_ecrt call). Wide bands
+            # (threshold-less tables span the whole dynamics range) get
+            # proportionally more points — E[tx] vs SNR is convex, so a
+            # sparse linear chord would overprice mid-band clients.
+            hi = max(hi, lo + 1.0)
+            points = max(points, int(np.ceil((hi - lo) / 12.0)) + 1)
+            anchor = policy_lib.ecrt_anchor_snr_db(
+                scen.policy, scen.dynamics.mean_snr_db)
+            grid = np.unique(np.concatenate(
+                [np.linspace(lo, hi, points), [anchor]]))
+            self._ecrt_curve = latency_lib.ecrt_expected_tx_curve(
+                grid, self._ecrt_modulation(), n_codewords=codewords,
+                max_tx=max_tx)
+        return self._ecrt_curve
 
     def init(self, key: jax.Array, num_clients: int
              ) -> tuple[dynamics_lib.LinkState, jax.Array, jax.Array]:
@@ -142,7 +197,28 @@ class ScenarioDriver:
     def airtime(self, stats: transport_lib.TxStats, rnd: LinkRound,
                 timings: latency_lib.PhyTimings) -> jax.Array:
         """Per-client airtime of the round: mode-priced, straggler-scaled,
-        zero for dropped clients. ``(num_clients,)`` seconds."""
+        zero for dropped clients. ``(num_clients,)`` seconds.
+
+        With calibrated ECRT (``scenario.ecrt_expected_tx = None``) each
+        ECRT client's symbols/transmissions are rescaled from the anchor
+        constant to E[tx] interpolated at *its* SNR *this round* — the
+        analytic model is linear in E[tx], so the rescale prices the fade
+        exactly as a per-client calibration would.
+        """
+        if (self._interp_ecrt_airtime and self._ecrt_rows
+                and stats.mode_idx is not None):
+            grid, vals = self._ecrt_tx_curve()
+            e_tx = latency_lib.interp_expected_tx(rnd.snr_db, grid, vals)
+            anchor = jnp.asarray(
+                [c.ecrt_expected_tx for c in self.mode_cfgs], jnp.float32
+            )[stats.mode_idx]
+            is_ecrt = jnp.any(
+                jnp.asarray(stats.mode_idx)[:, None]
+                == jnp.asarray(self._ecrt_rows, jnp.int32), axis=-1)
+            ratio = jnp.where(is_ecrt, e_tx / jnp.maximum(anchor, 1e-6), 1.0)
+            stats = transport_lib.TxStats(
+                stats.data_symbols * ratio, stats.transmissions * ratio,
+                stats.bit_errors, stats.n_bits, stats.mode_idx)
         air = latency_lib.round_airtime_adaptive(stats, timings,
                                                  self.mode_cfgs)
         slowdown = 1.0 + (self.scenario.straggler_slowdown - 1.0) * rnd.straggler

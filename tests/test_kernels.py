@@ -36,6 +36,33 @@ def test_kernel_bitexact_vs_ref(k, fading):
     assert ref_err == ker_err
 
 
+@pytest.mark.parametrize("k", [2, 8])
+@pytest.mark.parametrize("num_active", [1, 3, 5])
+def test_masked_partial_batch_grid(k, num_active):
+    """The masked (clients, tiles) grid: active rows bit-identical to the
+    unmasked batch, masked tail rows all-zero with zero error count — the
+    contract the adaptive dispatch's padded buckets rely on."""
+    C, N = 5, 1024
+    x = jax.random.uniform(jax.random.PRNGKey(3), (C, N), minval=-1, maxval=1)
+    seeds = jnp.arange(100, 100 + C, dtype=jnp.uint32)
+    npow = jnp.full((C,), G0 / 10.0, jnp.float32)
+    gains = jnp.full((C,), G0, jnp.float32)
+    full, full_err = O.approx_channel_batch(
+        x, seeds, npow, gains, bits_per_symbol=k, block_words=512,
+        interpret=True)
+    part, part_err = O.approx_channel_batch(
+        x, seeds, npow, gains, bits_per_symbol=k, block_words=512,
+        interpret=True, num_active=jnp.int32(num_active))
+    np.testing.assert_array_equal(
+        np.asarray(full[:num_active]), np.asarray(part[:num_active]))
+    np.testing.assert_array_equal(
+        np.asarray(full_err[:num_active]), np.asarray(part_err[:num_active]))
+    np.testing.assert_array_equal(
+        np.asarray(part[num_active:]), np.zeros((C - num_active, N)))
+    np.testing.assert_array_equal(
+        np.asarray(part_err[num_active:]), np.zeros(C - num_active))
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     st.integers(0, 2**31 - 1),

@@ -159,9 +159,84 @@ def test_build_mode_cfgs_rows():
     cfgs = P.build_mode_cfgs(base, P.PolicyConfig(), ecrt_expected_tx=2.5)
     assert [c.mode for c in cfgs] == ["ecrt", "approx", "approx", "approx"]
     assert [c.modulation for c in cfgs] == ["qpsk", "qpsk", "16qam", "256qam"]
-    assert all(not c.use_kernel for c in cfgs)  # kernel path force-cleared
+    # Kernel flag threads through to the uncoded rows (legal under the
+    # bucketed adaptive dispatch); the ECRT row clears it (no coded kernel).
+    assert not cfgs[0].use_kernel
+    assert all(c.use_kernel for c in cfgs[1:])
     assert cfgs[0].ecrt_expected_tx == 2.5 and not cfgs[0].simulate_fec
     assert all(c.channel == base.channel for c in cfgs)
+    # Without use_kernel on the base, no row gets it.
+    plain = P.build_mode_cfgs(
+        dataclasses.replace(base, use_kernel=False), P.PolicyConfig(),
+        ecrt_expected_tx=2.5)
+    assert all(not c.use_kernel for c in plain)
+
+
+def test_ecrt_anchor_snr_db_rule():
+    assert P.ecrt_anchor_snr_db(P.PolicyConfig(), 99.0) == 6.0
+    assert P.ecrt_anchor_snr_db(P.fixed_policy("ecrt", "qpsk"), 12.5) == 12.5
+
+
+def test_build_mode_cfgs_calibrates_per_ecrt_modulation(monkeypatch):
+    """A table with two ECRT rows of different modulations prices each with
+    its own calibrated E[tx] — 16-QAM fails more codewords than QPSK at the
+    same anchor, so sharing QPSK's constant would undercount airtime."""
+    from repro.core import latency as LATmod
+
+    def fake_calibrate(snr_db, modulation="qpsk", **kw):
+        return {"qpsk": 1.5, "16qam": 3.0}[modulation]
+
+    monkeypatch.setattr(LATmod, "calibrate_ecrt", fake_calibrate)
+    pc = P.PolicyConfig(
+        modes=(("ecrt", "qpsk"), ("ecrt", "16qam"), ("approx", "16qam")),
+        thresholds_db=(6.0, 16.0))
+    cfgs = P.build_mode_cfgs(T.TransportConfig(), pc)
+    assert cfgs[0].ecrt_expected_tx == 1.5
+    assert cfgs[1].ecrt_expected_tx == 3.0
+    assert cfgs[2].ecrt_expected_tx == 1.0  # non-ECRT rows untouched
+
+
+def test_ecrt_expected_tx_single_source(monkeypatch):
+    """The two ECRT-pricing entry points (``build_mode_cfgs`` default and
+    ``ScenarioDriver`` with ``ecrt_expected_tx=None``) must resolve E[tx]
+    through the same calibration, at the same anchor SNR."""
+    from repro.core import latency as LATmod
+
+    calls = []
+
+    def fake_calibrate(snr_db, modulation="qpsk", fading="block_rayleigh",
+                       n_codewords=256, max_tx=8, seed=0, decoder="minsum"):
+        calls.append((float(snr_db), n_codewords, max_tx))
+        return 1.0 + 0.1 * float(snr_db)
+
+    monkeypatch.setattr(LATmod, "calibrate_ecrt", fake_calibrate)
+    base = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    via_policy = P.build_mode_cfgs(base, P.PolicyConfig())
+    scen = dataclasses.replace(S.get_scenario("static"),
+                               ecrt_expected_tx=None)
+    via_driver = S.ScenarioDriver(scen, base).mode_cfgs
+    # Same anchor (first threshold = 6 dB) AND the same calibration sample
+    # budget — two Monte-Carlo runs with different n_codewords would price
+    # the same table differently even at one anchor.
+    assert set(calls) == {
+        (6.0, P.DEFAULT_CALIB_CODEWORDS, P.DEFAULT_CALIB_MAX_TX)}
+    assert via_policy[0].ecrt_expected_tx == via_driver[0].ecrt_expected_tx
+    assert via_policy[0].ecrt_expected_tx == pytest.approx(1.6)
+
+    # Fixed-ECRT (threshold-less) tables: the driver's fleet operating point
+    # flows through the same anchor_fallback_db hook, so the two entry
+    # points still agree — even when base channel SNR != dynamics mean.
+    calls.clear()
+    fixed = P.fixed_policy("ecrt", "qpsk")
+    base20 = T.TransportConfig(channel=CH.ChannelConfig(snr_db=20.0))
+    scen_fixed = dataclasses.replace(S.get_scenario("static"), policy=fixed,
+                                     ecrt_expected_tx=None)
+    drv_cfgs = S.ScenarioDriver(scen_fixed, base20).mode_cfgs
+    pol_cfgs = P.build_mode_cfgs(
+        base20, fixed, anchor_fallback_db=scen_fixed.dynamics.mean_snr_db)
+    assert set(calls) == {(scen_fixed.dynamics.mean_snr_db,
+                           P.DEFAULT_CALIB_CODEWORDS, P.DEFAULT_CALIB_MAX_TX)}
+    assert drv_cfgs[0].ecrt_expected_tx == pol_cfgs[0].ecrt_expected_tx
 
 
 # ----------------------------------------------------------------- scenario
@@ -233,6 +308,77 @@ def test_driver_calibrates_ecrt_when_unset():
         calib_codewords=16, calib_max_tx=4)
     assert drv.mode_cfgs[0].mode == "ecrt"
     assert drv.mode_cfgs[0].ecrt_expected_tx >= 1.0
+
+
+def test_calibrate_ecrt_canonicalizes_cache_key(monkeypatch):
+    """Keyword vs positional call forms and float64-vs-float32 SNR
+    representations of the same calibration must resolve to one cache
+    entry — the anchor/curve-point consistency the airtime interpolation
+    relies on."""
+    from repro.core import latency as LATmod
+
+    calls = []
+
+    def fake_inner(snr, mod, fading, ncw, mtx, seed, dec):
+        calls.append((snr, mod, fading, ncw, mtx))
+        return 2.0
+
+    monkeypatch.setattr(LATmod, "_calibrate_ecrt", fake_inner)
+    a = LATmod.calibrate_ecrt(6.1, "qpsk", n_codewords=48, max_tx=6)
+    b = LATmod.calibrate_ecrt(float(np.float32(6.1)), "qpsk",
+                              "block_rayleigh", 48, 6)
+    assert a == b == 2.0
+    assert len(set(calls)) == 1  # identical canonical arguments
+
+
+def test_driver_airtime_interpolates_ecrt_per_client(monkeypatch):
+    """Regression for the constant-E[tx] airtime bug: under calibrated ECRT
+    (``ecrt_expected_tx=None``) two ECRT clients at different SNRs the same
+    round must pay different airtime — E[tx] interpolated from the
+    calibration curve at each client's SNR — while non-ECRT clients are
+    untouched; an explicit float keeps the flat constant."""
+    from repro.core import latency as LATmod
+
+    # Steep fake curve: E[tx] = 4 at the floor, 1 above the anchor.
+    def fake_calibrate(snr_db, modulation="qpsk", fading="block_rayleigh",
+                       n_codewords=256, max_tx=8, seed=0, decoder="minsum"):
+        return float(np.clip(4.0 - 0.5 * (float(snr_db) + 5.0), 1.0, 4.0))
+
+    monkeypatch.setattr(LATmod, "calibrate_ecrt", fake_calibrate)
+    base = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(S.get_scenario("vehicular"),
+                               ecrt_expected_tx=None)
+    drv = S.ScenarioDriver(scen, base)
+    M = 4
+    x = jax.random.uniform(KEY, (M, 256), minval=-0.9, maxval=0.9)
+    mode = jnp.array([0, 0, 1, 1], jnp.int32)  # two ECRT, two approx clients
+    snr = jnp.array([-3.0, 4.0, -3.0, 4.0], jnp.float32)
+    _, stats = T.transmit_batch_adaptive(x, KEY, drv.mode_cfgs, mode,
+                                         snr_db=snr)
+    rnd = S.LinkRound(snr_db=snr, est_db=snr, mode=mode,
+                      active=jnp.ones((M,), jnp.float32),
+                      straggler=jnp.zeros((M,), jnp.float32))
+    air = np.asarray(drv.airtime(stats, rnd, LAT.PhyTimings()))
+    # ECRT client in the fade pays more than the ECRT client in the clear...
+    assert air[0] > air[1] * 1.5
+    # ...approx clients price identically regardless of SNR (same symbols).
+    assert air[2] == pytest.approx(air[3])
+
+    # The anchor SNR is on the grid, so a client sitting exactly at the
+    # transport constant's calibration point reprices with ratio 1.
+    grid, vals = drv._ecrt_tx_curve()
+    anchor = P.ecrt_anchor_snr_db(scen.policy, scen.dynamics.mean_snr_db)
+    assert anchor in np.asarray(grid)
+    at_anchor = float(LAT.interp_expected_tx(anchor, grid, vals))
+    assert at_anchor == pytest.approx(drv.mode_cfgs[0].ecrt_expected_tx)
+
+    # An explicit constant disables the interpolation: equal ECRT airtimes.
+    drv_const = S.ScenarioDriver(
+        dataclasses.replace(scen, ecrt_expected_tx=2.0), base)
+    _, stats_c = T.transmit_batch_adaptive(x, KEY, drv_const.mode_cfgs, mode,
+                                           snr_db=snr)
+    air_c = np.asarray(drv_const.airtime(stats_c, rnd, LAT.PhyTimings()))
+    assert air_c[0] == pytest.approx(air_c[1])
 
 
 # ------------------------------------------------------- FL loop integration
