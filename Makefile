@@ -4,7 +4,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench-link docs-check
+.PHONY: test bench-smoke bench-link bench-fl docs-check
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -23,7 +23,14 @@ bench-smoke:
 bench-link:
 	$(PY) -m benchmarks.run --only link
 
-# Fails if a public module (or public function) under src/repro/core/ lacks
-# a docstring.
+# Uplink-vs-downlink error-budget study (Qu et al. asymmetry): four FL arms
+# with one noisy leg at a time at matched SNR; asserts the noisy downlink
+# degrades accuracy more than the equally-noisy uplink and writes
+# BENCH_fl_round.json (uploaded as a CI artifact).
+bench-fl:
+	$(PY) -m benchmarks.run --only fl_round
+
+# Fails if a public module (or public function) under src/repro/{core,link,fl}
+# lacks a docstring.
 docs-check:
 	$(PY) tools/docs_check.py

@@ -1,0 +1,121 @@
+"""Uplink-vs-downlink error-budget study (per Qu et al., arXiv:2310.16652).
+
+The paper models bit errors only on the uplink; Qu et al. show FL is
+markedly *less* tolerant of errors on the downlink broadcast of the global
+model than of errors on the uplink gradients. With the round engine's
+downlink leg both directions ride the same transport, so the comparison is
+apples-to-apples: four arms on the same world/seed, one noisy leg at a time,
+the noisy leg always uncoded (``approx``) at the **same matched SNR**:
+
+  ``clean``     perfect uplink + error-free downlink (reference)
+  ``uplink``    approx uplink @ SNR dB, error-free downlink (paper setting)
+  ``downlink``  perfect uplink, approx downlink @ the same SNR dB
+  ``both``      approx on both legs
+
+Headline (the ``fl_round/asymmetry`` line): the downlink arm's final
+accuracy falls below the uplink arm's at the same SNR. Mechanism: an uplink
+bit error corrupts one client's gradient and is averaged down ~1/M by the
+aggregate; a downlink bit error corrupts the weights a client computes its
+*entire* local step from, every round, so the same BER buys far more damage.
+
+Emits CSV lines + ``BENCH_fl_round.json`` (uploaded as a CI artifact by the
+``bench-fl`` job). Standalone:
+
+    PYTHONPATH=src python -m benchmarks.fl_round [--snr 10] [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from benchmarks.common import emit, fl_world
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.fl.loop import run_fl
+from repro.link.scenario import DownlinkConfig
+
+JSON_PATH = "BENCH_fl_round.json"
+
+
+def _arms(snr_db: float) -> dict:
+    """The four (uplink transport, downlink config) arms at one SNR."""
+    perfect = T.TransportConfig(mode="perfect",
+                                channel=CH.ChannelConfig(snr_db=snr_db))
+    approx = T.TransportConfig(mode="approx",
+                               channel=CH.ChannelConfig(snr_db=snr_db))
+    noisy_dl = DownlinkConfig(mode="approx", snr_offset_db=0.0)
+    return {
+        "clean": (perfect, None),
+        "uplink": (approx, None),
+        "downlink": (perfect, noisy_dl),
+        "both": (approx, noisy_dl),
+    }
+
+
+def run(quick: bool = True, snr_db: float = 10.0, seed: int = 0) -> dict:
+    """Run the four arms and assert/report the error-budget asymmetry."""
+    n_clients = 16 if quick else 40
+    rounds = 30 if quick else 100
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05 if quick else 0.01)
+
+    report = {"snr_db": snr_db, "clients": n_clients, "rounds": rounds,
+              "arms": {}}
+    results = {}
+    for arm, (tcfg, dl) in _arms(snr_db).items():
+        res = run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=rounds,
+                     batch_per_round=32, eval_every=5, seed=seed,
+                     downlink=dl)
+        results[arm] = res
+        dl_ber = (sum(t["downlink_ber"] for t in res.link) / len(res.link)
+                  if res.link else 0.0)
+        emit(f"fl_round/{arm}", res.wall_s * 1e6,
+             f"final_acc={res.final_accuracy:.3f} "
+             f"airtime={res.airtime_s[-1]:.2f}s dl_ber={dl_ber:.2e}")
+        report["arms"][arm] = {
+            "final_acc": float(res.final_accuracy),
+            "airtime_s": float(res.airtime_s[-1]),
+            "wall_s": float(res.wall_s),
+            "downlink_ber": float(dl_ber),
+        }
+
+    # Qu et al.'s qualitative claim at matched SNR: the noisy downlink hurts
+    # accuracy more than the equally-noisy uplink.
+    up, dn = results["uplink"], results["downlink"]
+    asymmetric = dn.final_accuracy < up.final_accuracy
+    emit("fl_round/asymmetry", 0.0,
+         f"uplink_acc={up.final_accuracy:.3f} "
+         f"downlink_acc={dn.final_accuracy:.3f} "
+         f"downlink_worse={asymmetric}")
+    report["downlink_worse_than_uplink"] = bool(asymmetric)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("fl_round/json", 0.0, f"wrote {JSON_PATH}")
+    if not asymmetric:  # the suite doubles as a gate (see benchmarks/run.py)
+        raise AssertionError(
+            f"expected the noisy downlink to degrade accuracy more than the "
+            f"equally-noisy uplink at {snr_db} dB; got uplink "
+            f"{up.final_accuracy:.3f} vs downlink {dn.final_accuracy:.3f}")
+    return report
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.fl_round``."""
+    ap = argparse.ArgumentParser(
+        description="uplink-vs-downlink FL error-budget study")
+    ap.add_argument("--snr", type=float, default=10.0,
+                    help="matched SNR (dB) for whichever leg is noisy")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale profile (40 clients, 100 rounds)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, snr_db=args.snr, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,8 @@ SUITES = {
     "roofline": ("benchmarks.roofline_report", "dry-run roofline summary"),
     "link": ("benchmarks.link_adaptation",
              "adaptive mode policy vs fixed transports across scenarios"),
+    "fl_round": ("benchmarks.fl_round",
+                 "uplink-vs-downlink error budget (Qu et al. asymmetry)"),
 }
 
 

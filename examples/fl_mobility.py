@@ -10,6 +10,12 @@ ECRT when the channel is bad, the paper's MSB-protected Gray-QAM uncoded
 scheme (up to 256-QAM) when it is "satisfactory". Prints the per-round
 mode mix / SNR telemetry and, with ``--compare``, the fixed-mode baselines
 under the same channel trajectories.
+
+``--downlink OFFSET_DB`` adds the noisy broadcast leg: the global model
+reaches each client through its own downlink channel at the uplink SNR +
+OFFSET_DB, with per-client downlink modes picked from the same policy table
+(``DownlinkConfig(adaptive=True)``); the telemetry grows downlink airtime
+and residual-BER columns.
 """
 
 import argparse
@@ -41,6 +47,10 @@ def main():
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--compare", action="store_true",
                     help="also run fixed-approx and fixed-ECRT baselines")
+    ap.add_argument("--downlink", type=float, default=None, metavar="OFFSET_DB",
+                    help="add a noisy adaptive broadcast downlink at uplink "
+                         "SNR + OFFSET_DB (per-client mode via the policy "
+                         "table)")
     args = ap.parse_args()
 
     (img, lab), (ti, tl) = synth_mnist.train_test(300, 60)
@@ -51,20 +61,31 @@ def main():
     tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
 
     scen = scenario_lib.get_scenario(args.scenario)
+    if args.downlink is not None:
+        scen = dataclasses.replace(scen, downlink=scenario_lib.DownlinkConfig(
+            mode="approx", snr_offset_db=args.downlink, adaptive=True))
     print(f"scenario '{scen.name}': {scen.description}")
     mode_names = ["/".join(m) for m in scen.policy.modes]
     print(f"{args.clients} clients, modes: {mode_names}, "
           f"thresholds {scen.policy.thresholds_db} dB "
-          f"(hysteresis {scen.policy.hysteresis_db} dB)\n")
+          f"(hysteresis {scen.policy.hysteresis_db} dB)")
+    if scen.downlink is not None:
+        print(f"downlink: {scen.downlink.mode} at uplink SNR "
+              f"{scen.downlink.snr_offset_db:+.1f} dB "
+              f"(adaptive={scen.downlink.adaptive})")
+    print()
 
     res = _run(cfg, tcfg, data, scen, args.rounds)
+    dl_cols = "  dl airtime   dl BER" if scen.downlink is not None else ""
     print(f"{'round':>5} {'mean SNR':>9} {'est SNR':>8} {'active':>6} "
-          f"{'airtime':>9}  mode mix {mode_names}")
+          f"{'airtime':>9}{dl_cols}  mode mix {mode_names}")
     step = max(1, len(res.link) // 12)
     for t in res.link[::step]:
+        dl = (f" {t['downlink_airtime_s'] * 1e3:9.2f}ms {t['downlink_ber']:.1e}"
+              if "downlink_airtime_s" in t else "")
         print(f"{t['round']:5d} {t['mean_snr_db']:8.1f}dB "
               f"{t['mean_est_db']:7.1f}dB {t['n_active']:6d} "
-              f"{t['airtime_s'] * 1e3:8.2f}ms  {t['mode_counts']}")
+              f"{t['airtime_s'] * 1e3:8.2f}ms{dl}  {t['mode_counts']}")
     print(f"\nadaptive: final_acc={res.final_accuracy:.3f} "
           f"airtime={res.airtime_s[-1]:.2f}s wall={res.wall_s:.0f}s")
 

@@ -16,6 +16,11 @@ rate-1/2 LDPC. We model airtime analytically (the radio is not computation):
 The paper's headline — approx saves >= 2x at 20 dB and >= 3x at 10 dB to the
 same accuracy — falls out of (rate-1/2 overhead) x (E[tx]) x (per-tx MAC
 overhead); see benchmarks/accuracy_vs_time.py.
+
+The downlink leg reuses the same per-transmission formula; the difference is
+the medium-access rule: uplink rounds pay the TDMA *sum* over clients, a
+broadcast round pays each distinct downlink encoding *once*
+(:func:`broadcast_airtime`).
 """
 
 from __future__ import annotations
@@ -33,8 +38,8 @@ from repro.core import modulation as mod_lib
 from repro.core import transport as transport_lib
 
 __all__ = ["DEFAULT_CALIB_CODEWORDS", "DEFAULT_CALIB_MAX_TX", "PhyTimings",
-           "round_airtime", "round_airtime_adaptive", "calibrate_ecrt",
-           "ecrt_expected_tx_curve", "interp_expected_tx",
+           "round_airtime", "round_airtime_adaptive", "broadcast_airtime",
+           "calibrate_ecrt", "ecrt_expected_tx_curve", "interp_expected_tx",
            "ecrt_expected_tx_profile"]
 
 # ECRT E[tx] pricing sample budget — the one default shared by every
@@ -83,6 +88,38 @@ def round_airtime_adaptive(stats: transport_lib.TxStats, timings: PhyTimings,
     )[stats.mode_idx]
     t_data = stats.data_symbols / timings.symbol_rate * (1.0 + fec_stall)
     return t_data + stats.transmissions * timings.t_overhead
+
+
+def broadcast_airtime(per_client_air, mode_idx=None) -> float:
+    """Wall-clock seconds the PS spends on one downlink broadcast round.
+
+    The uplink is TDMA — every client transmits its own payload, so the
+    round's uplink cost is the *sum* of ``round_airtime`` entries. The
+    downlink is a broadcast: the PS transmits each encoding **once** and
+    every client of that mode listens to the same transmission. So the
+    round's downlink cost is, per distinct mode in the cohort, one
+    representative airtime (the per-mode max, which also covers per-client
+    E[tx]-rescaled ECRT rows), summed over the modes actually present.
+
+    Args:
+      per_client_air: ``(num_clients,)`` per-client *reception* airtime —
+        ``round_airtime`` (homogeneous broadcast) or
+        ``round_airtime_adaptive`` (per-client downlink modes) applied to
+        the broadcast's :class:`~repro.core.transport.TxStats`.
+      mode_idx: the stats' per-client mode vector, or ``None`` for a
+        single-mode broadcast (one transmission total).
+
+    Returns:
+      Airtime in seconds (a host float — this prices the accumulator, not a
+      traced value).
+    """
+    air = np.asarray(per_client_air, np.float32).reshape(-1)
+    if air.size == 0:
+        return 0.0
+    if mode_idx is None:
+        return float(air.max())
+    modes = np.asarray(mode_idx).reshape(-1)
+    return float(sum(float(air[modes == m].max()) for m in np.unique(modes)))
 
 
 def calibrate_ecrt(

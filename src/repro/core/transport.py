@@ -57,6 +57,19 @@ Mixed-mode dispatch
     the Pallas kernel path cannot lower. Kept for fully-traced contexts
     (``jax.jit`` round steps with a traced mode vector, ``shard_map``
     bodies).
+
+Downlink broadcast
+------------------
+``transmit_broadcast`` (and the ``_adaptive``/``_pytree`` variants) carry
+**one** payload — the PS's global model — through ``num_clients``
+independent *downlink* channels: the broadcast leg of an FL round, where
+each client receives its own corrupted copy of the same bits. The engine is
+the same ``_batch_with_keys`` as the uplink; only the key schedule differs:
+client ``i`` draws ``fold_in(key, DOWNLINK_KEY_LANE + i)`` instead of
+``fold_in(key, i)``, so a round may feed its *uplink* base key to the
+broadcast leg and the two legs' fading/noise realizations stay independent
+— and, critically, adding a downlink leg leaves every uplink draw of an
+existing run untouched (no extra ``jax.random.split`` is consumed).
 """
 
 from __future__ import annotations
@@ -75,6 +88,7 @@ from repro.core import float_codec as fc
 from repro.core import modulation as mod_lib
 
 __all__ = [
+    "DOWNLINK_KEY_LANE",
     "TransportConfig",
     "TxStats",
     "clear_kernel_rows",
@@ -85,7 +99,18 @@ __all__ = [
     "transmit_pytree_batch",
     "transmit_batch_adaptive",
     "transmit_pytree_batch_adaptive",
+    "transmit_broadcast",
+    "transmit_broadcast_adaptive",
+    "transmit_pytree_broadcast",
+    "transmit_pytree_broadcast_adaptive",
 ]
+
+# fold_in lane where downlink-broadcast client keys live: uplink client i
+# draws fold_in(key, i), downlink client i draws fold_in(key, LANE + i), so
+# one round key serves both legs with independent channel realizations.
+# Cohorts must stay below the lane width (~1M clients) or the two schedules
+# would collide; transmit_broadcast validates this.
+DOWNLINK_KEY_LANE = 1 << 20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -773,3 +798,109 @@ def transmit_pytree_batch_adaptive(tree: Any, key: jax.Array, cfgs, mode_idx,
     flat_hat, stats = transmit_batch_adaptive(
         flat, key, cfgs, mode_idx, snr_db=snr_db, dispatch=dispatch)
     return _unflatten_client_tree(flat_hat, spec), stats
+
+
+def _broadcast_payload(x: jax.Array, num_clients: int) -> jax.Array:
+    """Validate + tile one flat payload to a ``(num_clients, N)`` batch."""
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 1:
+        raise ValueError(f"broadcast wants a flat (N,) payload; got {x.shape}")
+    if not 0 < num_clients <= DOWNLINK_KEY_LANE:
+        raise ValueError(
+            f"broadcast num_clients must be in [1, {DOWNLINK_KEY_LANE}] (the "
+            f"downlink key lane width); got {num_clients}"
+        )
+    return jnp.broadcast_to(x, (num_clients, x.shape[0]))
+
+
+def transmit_broadcast(x: jax.Array, key: jax.Array, cfg: TransportConfig,
+                       num_clients: int, *, snr_db=None):
+    """Broadcast one payload through ``num_clients`` independent downlinks.
+
+    The downlink leg of an FL round: the PS transmits the global model once
+    and every client hears it over its *own* fading channel — same bits in,
+    per-client corrupted copies out. Runs the shared ``_batch_with_keys``
+    engine on the tiled payload; client ``i``'s key is
+    ``fold_in(key, DOWNLINK_KEY_LANE + i)`` (see :data:`DOWNLINK_KEY_LANE`),
+    so the caller may reuse the round's uplink base key and the two legs
+    stay decorrelated, with uplink draws unchanged vs a downlink-free run.
+
+    Args:
+      x: ``(N,)`` global payload (cast to float32).
+      key: base PRNG key — typically the same key the round's uplink uses.
+      cfg: downlink transport configuration.
+      num_clients: number of receiving clients.
+      snr_db: optional per-client downlink SNR (scalar or ``(num_clients,)``),
+        overriding ``cfg.channel.snr_db``.
+
+    Returns:
+      ``(x_hat, stats)``: ``(num_clients, N)`` received copies and
+      :class:`TxStats` with ``(num_clients,)`` fields. Note the broadcast is
+      transmitted *once* — ``latency.broadcast_airtime`` prices the round
+      from these per-client stats.
+    """
+    xb = _broadcast_payload(x, num_clients)
+    snr_vec = _resolve_batch_snr(cfg, num_clients, snr_db)
+    keys = client_keys(key, num_clients, DOWNLINK_KEY_LANE)
+    return _batch_with_keys(xb, keys, cfg, snr_vec)
+
+
+def transmit_broadcast_adaptive(x: jax.Array, key: jax.Array, cfgs, mode_idx,
+                                *, snr_db=None, dispatch: str = "auto"):
+    """Mixed-mode broadcast: client ``i`` *receives* via ``cfgs[mode_idx[i]]``.
+
+    The downlink counterpart of :func:`transmit_batch_adaptive` — e.g. a
+    policy table picks a protected transport for clients whose downlink CSI
+    is poor. Same dispatch strategies and validation; keys ride the
+    downlink lane (``client_offset=DOWNLINK_KEY_LANE``).
+    """
+    num_clients = int(np.shape(mode_idx)[0])
+    xb = _broadcast_payload(x, num_clients)
+    return transmit_batch_adaptive(
+        xb, key, cfgs, mode_idx, snr_db=snr_db,
+        client_offset=DOWNLINK_KEY_LANE, dispatch=dispatch)
+
+
+def _flatten_global_tree(tree: Any):
+    """Flatten a client-dim-free pytree into one ``(D,)`` payload vector."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, (leaves, treedef, sizes)
+
+
+def _unflatten_broadcast_tree(flat_hat: jax.Array, spec) -> Any:
+    """Restore a broadcast ``(num_clients, D)`` matrix to a stacked pytree."""
+    leaves, treedef, sizes = spec
+    num_clients = flat_hat.shape[0]
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(flat_hat[:, off : off + size]
+                   .reshape((num_clients,) + leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def transmit_pytree_broadcast(tree: Any, key: jax.Array, cfg: TransportConfig,
+                              num_clients: int, *, snr_db=None):
+    """Broadcast a whole pytree (e.g. the global model) to every client.
+
+    Flattens the client-dim-free ``tree`` into one payload, broadcasts it via
+    :func:`transmit_broadcast`, and returns a pytree whose leaves grew a
+    leading ``(num_clients,)`` dimension — client ``i``'s received copy is
+    ``tree_map(lambda l: l[i], out)``. ``stats`` fields are per-client.
+    """
+    flat, spec = _flatten_global_tree(tree)
+    flat_hat, stats = transmit_broadcast(flat, key, cfg, num_clients,
+                                         snr_db=snr_db)
+    return _unflatten_broadcast_tree(flat_hat, spec), stats
+
+
+def transmit_pytree_broadcast_adaptive(tree: Any, key: jax.Array, cfgs,
+                                       mode_idx, *, snr_db=None,
+                                       dispatch: str = "auto"):
+    """Pytree front-end of :func:`transmit_broadcast_adaptive`."""
+    flat, spec = _flatten_global_tree(tree)
+    flat_hat, stats = transmit_broadcast_adaptive(
+        flat, key, cfgs, mode_idx, snr_db=snr_db, dispatch=dispatch)
+    return _unflatten_broadcast_tree(flat_hat, spec), stats

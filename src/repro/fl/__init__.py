@@ -1,2 +1,12 @@
+"""Federated-learning loops over the simulated wireless links.
+
+``engine`` is the unified round driver (Algorithm strategies x scenario
+dispatches x uplink/downlink legs); ``loop``/``fedavg`` are the thin
+algorithm entry points; ``cnn``/``partition`` are the paper's model and
+non-iid data split.
+"""
+
 from repro.fl import cnn, partition
-from repro.fl.loop import run_fl, FLResult
+from repro.fl.engine import FedAvg, FedSGD, FLResult, RoundEngine
+from repro.fl.fedavg import run_fedavg
+from repro.fl.loop import run_fl

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 
 def init_params(key, cfg):
+    """He-initialized parameter pytree for the paper's CNN (see module doc)."""
     k = jax.random.split(key, 4)
     c1, c2 = cfg.conv_channels
     K = cfg.kernel
@@ -53,10 +54,12 @@ def logits_fn(params, images):
 
 
 def loss_fn(params, images, labels):
+    """Mean cross-entropy of ``(B, 28, 28)`` images vs integer labels."""
     logits = logits_fn(params, images)
     logp = jax.nn.log_softmax(logits, axis=-1)
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
 
 
 def accuracy(params, images, labels):
+    """Top-1 accuracy of the model on ``(B, 28, 28)`` images."""
     return jnp.mean(jnp.argmax(logits_fn(params, images), -1) == labels)

@@ -1,0 +1,691 @@
+"""Unified FL round engine: one driver for every algorithm x dispatch x leg.
+
+Before this module, ``fl/loop.py`` (FedSGD) and ``fl/fedavg.py`` (FedAvg)
+each hand-wrote four round-step variants (driver-less, scenario+select,
+scenario+bucketed, plus the jitted helper pieces) and duplicated the
+driver/ECRT/airtime/eval plumbing — eight round functions to maintain, and
+every new transport leg or algorithm would have doubled that again. The
+engine splits the round into two orthogonal pieces:
+
+* an :class:`Algorithm` strategy — *what* the clients compute and how the PS
+  applies the aggregate. :class:`FedSGD` uploads one-step gradients and
+  applies them through the SGD optimizer (paper eq. (4)-(6));
+  :class:`FedAvg` uploads local-step weight deltas with optional per-client
+  ``max_abs`` scaling and adds the mean delta to the global model.
+* one :class:`RoundEngine` — *how* a round runs: scenario-driver resolution,
+  adaptive-dispatch selection (bucketed/select), analytic-ECRT pricing,
+  the optional noisy **downlink broadcast leg**, airtime accumulation, link
+  telemetry, and the eval cadence. Every algorithm gets every axis for free.
+
+``run_fl`` / ``run_fedavg`` keep their exact historical signatures as thin
+wrappers and are **bit-identical** to the pre-engine loops for any
+pre-existing configuration (``tests/test_engine_golden.py`` pins this
+against a frozen snapshot): the fold_in key schedule, the jit boundaries,
+and the op order of every round variant are preserved.
+
+Downlink leg (beyond-paper; Qu et al., arXiv:2310.16652)
+--------------------------------------------------------
+``downlink=DownlinkConfig(...)`` (or a scenario whose ``downlink`` is set)
+inserts a broadcast step at the top of each round: the global model rides
+``transport.transmit_broadcast`` through every client's *downlink* channel
+(error-free, or uncoded at an SNR offset from the uplink; per-client mode
+via the scenario's policy table when ``adaptive=True``), and each client
+computes its payload from its own corrupted copy. The broadcast reuses the
+round's uplink base key on the downlink key lane
+(``transport.DOWNLINK_KEY_LANE``), so uplink draws are unchanged — with
+``downlink=None`` every result is bit-identical to the downlink-free loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import latency as latency_lib
+from repro.core import transport as transport_lib
+from repro.fl import cnn
+from repro.optim.sgd import sgd as make_sgd
+
+__all__ = [
+    "FLResult",
+    "FedSGD",
+    "FedAvg",
+    "RoundEngine",
+    "resolve_scenario",
+    "resolve_downlink",
+    "dropout_weighted_mean",
+    "record_link_round",
+    "link_telemetry",
+    "select_mode_cfgs",
+    "resolve_ecrt_analytic",
+]
+
+
+@dataclasses.dataclass
+class FLResult:
+    """Outcome of one FL run (shared by every algorithm/loop)."""
+
+    rounds: list
+    accuracy: list
+    airtime_s: list  # cumulative airtime: TDMA uplink sum (+ downlink leg)
+    wall_s: float
+    final_accuracy: float
+    # Per-round link telemetry. Scenario-driven runs append {round,
+    # mean_snr_db, mean_est_db, mode_counts, n_active, n_stragglers,
+    # airtime_s} (mode_counts indexes the driver's mode table); runs with a
+    # downlink leg add {downlink_airtime_s, downlink_ber[, and for adaptive
+    # downlinks downlink_mode_counts]} — driver-less downlink runs append
+    # records with the downlink fields only. [] otherwise.
+    link: list = dataclasses.field(default_factory=list)
+
+
+def resolve_scenario(scenario, transport_cfg):
+    """``scenario=`` argument -> a bound ``ScenarioDriver`` (or ``None``).
+
+    Accepts a registered scenario name, a ``Scenario``, or an already-built
+    ``ScenarioDriver``; the single resolution rule under ``run_fl`` and
+    ``run_fedavg``.
+    """
+    if scenario is None:
+        return None
+    from repro.link import scenario as scenario_lib
+
+    if isinstance(scenario, scenario_lib.ScenarioDriver):
+        return scenario
+    if isinstance(scenario, str):
+        scenario = scenario_lib.get_scenario(scenario)
+    return scenario_lib.ScenarioDriver(scenario, transport_cfg)
+
+
+def resolve_downlink(downlink, driver):
+    """``downlink=`` argument -> the round's ``DownlinkConfig`` (or ``None``).
+
+    An explicit argument wins; otherwise a scenario-driven run inherits the
+    scenario's ``downlink`` field. ``None`` means the historical error-free
+    downlink (no broadcast leg at all).
+    """
+    if downlink is not None:
+        return downlink
+    if driver is not None:
+        return driver.scenario.downlink
+    return None
+
+
+def dropout_weighted_mean(tree, active):
+    """Mean of ``(M, ...)`` leaves over active clients only.
+
+    ``active`` is the 0/1 ``(M,)`` availability vector; an all-dropped round
+    yields zeros (the global model simply does not move). Jit-safe — the
+    shared aggregation rule of every scenario-driven round.
+    """
+    denom = jnp.maximum(jnp.sum(active), 1.0)
+    return jax.tree_util.tree_map(
+        lambda g: jnp.tensordot(active, g, axes=(0, 0)) / denom, tree)
+
+
+def record_link_round(res: "FLResult", r: int, driver, stats, rnd,
+                      timings) -> jax.Array:
+    """Per-round scenario bookkeeping shared by the FL loops: price the
+    round's per-client airtime and append the telemetry record. Returns the
+    ``(M,)`` airtime vector."""
+    air = driver.airtime(stats, rnd, timings)
+    res.link.append(link_telemetry(r, rnd, air, len(driver.mode_cfgs)))
+    return air
+
+
+def link_telemetry(r: int, rnd, per_client_air, n_modes: int) -> dict:
+    """One ``FLResult.link`` record from a round's ``LinkRound`` + airtime."""
+    mode = np.asarray(rnd.mode)
+    return {
+        "round": r,
+        "mean_snr_db": float(np.mean(np.asarray(rnd.snr_db))),
+        "mean_est_db": float(np.mean(np.asarray(rnd.est_db))),
+        "mode_counts": np.bincount(mode, minlength=n_modes).tolist(),
+        "n_active": int(np.asarray(rnd.active).sum()),
+        "n_stragglers": int(np.asarray(rnd.straggler).sum()),
+        "airtime_s": float(np.asarray(per_client_air).sum()),
+    }
+
+
+def select_mode_cfgs(driver):
+    """The driver's mode table, legal for the select dispatch.
+
+    Delegates to ``transport.clear_kernel_rows`` (the one clearing rule):
+    the fused select round cannot lower the Pallas grid. A select round is
+    therefore *not* bit-comparable to a bucketed round of a kernel-enabled
+    table — the jnp rows draw their own, equally valid, channel
+    realization; within the select dispatch everything stays deterministic
+    as usual.
+    """
+    return transport_lib.clear_kernel_rows(driver.mode_cfgs)
+
+
+def resolve_ecrt_analytic(transport_cfg, num_clients: int):
+    """Swap real-FEC ECRT for the calibrated analytic model in an FL loop.
+
+    The real decoder inside a vmapped per-round loop would only re-measure a
+    constant; calibrate instead — with the shared pricing sample budget
+    (``latency.DEFAULT_CALIB_CODEWORDS``), so every entry point resolves
+    the same channel to the same E[tx]. Heterogeneous cohorts get E[tx]
+    interpolated per client over an SNR grid (``ecrt_expected_tx_profile``),
+    with the cohort mean driving the transport constant and the per-client
+    ratio returned as a ``(num_clients,)`` airtime scale (the analytic model
+    is linear in E[tx]). Returns ``(transport_cfg, air_scale_or_None)``.
+    """
+    if not (transport_cfg.mode == "ecrt" and transport_cfg.simulate_fec):
+        return transport_cfg, None
+    snr_vec = np.asarray(transport_cfg.channel.snr_db, np.float32).reshape(-1)
+    e_tx = latency_lib.ecrt_expected_tx_profile(
+        snr_vec, transport_cfg.modulation,
+        n_codewords=latency_lib.DEFAULT_CALIB_CODEWORDS,
+        max_tx=latency_lib.DEFAULT_CALIB_MAX_TX)
+    e_mean = float(e_tx.mean())
+    transport_cfg = dataclasses.replace(
+        transport_cfg, simulate_fec=False, ecrt_expected_tx=e_mean)
+    air_scale = None
+    if e_tx.size == num_clients and e_tx.size > 1:
+        air_scale = jnp.asarray(e_tx / e_mean)
+    return transport_cfg, air_scale
+
+
+# --------------------------------------------------------------- algorithms
+
+
+class FedSGD:
+    """The paper's algorithm: one gradient per client per round (eq. (4)-(6)).
+
+    Payload = the stacked per-client single-step gradients; the PS applies
+    the (dropout-weighted) mean through the SGD optimizer.
+    """
+
+    name = "fedsgd"
+
+    def __init__(self, cfg, batch_per_round: int = 32):
+        self.cfg = cfg
+        self.batch_per_round = batch_per_round
+        self.opt = make_sgd(cfg.lr)
+        self.grad_fn = jax.grad(cnn.loss_fn)
+
+    def init_params(self, key):
+        """Global model at round 0."""
+        return cnn.init_params(key, self.cfg)
+
+    def init_opt(self, params):
+        """Optimizer state threaded through the rounds."""
+        return self.opt.init(params)
+
+    def sample(self, rng, client_x, client_y):
+        """One round's per-client minibatches: ``(M, B, ...)`` images/labels."""
+        M = client_x.shape[0]
+        take = rng.integers(0, client_x.shape[1], (M, self.batch_per_round))
+        xb = jnp.asarray(
+            np.take_along_axis(client_x, take[:, :, None, None], axis=1))
+        yb = jnp.asarray(np.take_along_axis(client_y, take, axis=1))
+        return xb, yb
+
+    def payload(self, params, xb, yb):
+        """Per-client gradients of the shared global model (error-free
+        downlink): leaves ``(M, ...)``."""
+        def client_grad(x, y):
+            return self.grad_fn(params, x, y)
+
+        return jax.vmap(client_grad)(xb, yb)
+
+    def payload_from(self, recv_params, xb, yb):
+        """Per-client gradients at each client's *received* model copy (the
+        noisy-downlink variant of :meth:`payload`)."""
+        return jax.vmap(self.grad_fn)(recv_params, xb, yb)
+
+    def wrap_uplink(self, payload, transmit):
+        """FedSGD uploads raw gradients — no transport-side scaling."""
+        return transmit(payload)
+
+    def apply(self, params, opt_state, agg):
+        """PS update (eq. (6)): one optimizer step on the aggregate."""
+        return self.opt.update(agg, opt_state, params)
+
+
+class FedAvg:
+    """FedAvg over the approximate uplink (beyond-paper extension).
+
+    Payload = the weight delta after ``local_steps`` local SGD steps;
+    deltas stay bounded (|Δw| <= eta * sum|g|), so the same exponent-clamp
+    receiver prior applies. ``scale_mode``:
+
+      ``none``     transmit raw deltas (paper-style prior |Δ| < 2)
+      ``max_abs``  scale by 1/max|Δ| before transmission and undo at the PS;
+                   the scalar travels on the (error-free) control channel.
+                   This concentrates values near the top of the representable
+                   range where relative QAM error is smallest.
+    """
+
+    name = "fedavg"
+
+    def __init__(self, cfg, local_steps: int = 4, batch_per_step: int = 32,
+                 scale_mode: str = "none"):
+        self.cfg = cfg
+        self.local_steps = local_steps
+        self.batch_per_step = batch_per_step
+        self.scale_mode = scale_mode
+        self.grad_fn = jax.grad(cnn.loss_fn)
+        # jitted so the host-driven bucketed round doesn't run the scale math
+        # op-by-op; inside a fused round's trace they simply inline.
+        self._compute_scale = jax.jit(self._scale_of)
+        self._div_scale = jax.jit(self._div)
+        self._mul_scale = jax.jit(self._mul)
+
+    def init_params(self, key):
+        """Global model at round 0."""
+        return cnn.init_params(key, self.cfg)
+
+    def init_opt(self, params):
+        """FedAvg applies deltas directly — no optimizer state."""
+        return None
+
+    def sample(self, rng, client_x, client_y):
+        """One round's batches: ``(M, local_steps, B, ...)`` images/labels."""
+        M = client_x.shape[0]
+        L, B = self.local_steps, self.batch_per_step
+        sample_shape = client_x.shape[2:]
+        take = rng.integers(0, client_x.shape[1], (M, L, B))
+        xb = jnp.asarray(np.take_along_axis(
+            client_x, take.reshape(M, -1)[:, :, None, None], axis=1
+        ).reshape((M, L, B) + sample_shape))
+        yb = jnp.asarray(np.take_along_axis(
+            client_y, take.reshape(M, -1), axis=1
+        ).reshape(M, L, B))
+        return xb, yb
+
+    def _local_delta(self, start, x, y):
+        """One client's weight delta after ``local_steps`` SGD steps from
+        ``start`` (its received copy of the global model)."""
+        def body(p, inp):
+            xi, yi = inp
+            g = self.grad_fn(p, xi, yi)
+            p = jax.tree_util.tree_map(lambda a, b: a - self.cfg.lr * b, p, g)
+            return p, None
+
+        local, _ = jax.lax.scan(body, start, (x, y))
+        return jax.tree_util.tree_map(lambda a, b: a - b, local, start)
+
+    def payload(self, params, xb, yb):
+        """Per-client local-step deltas from the shared global model."""
+        return jax.vmap(lambda x, y: self._local_delta(params, x, y))(xb, yb)
+
+    def payload_from(self, recv_params, xb, yb):
+        """Per-client deltas, each relative to that client's *received*
+        model copy — the PS still adds the mean delta to the true model."""
+        return jax.vmap(self._local_delta)(recv_params, xb, yb)
+
+    @staticmethod
+    def _expand(s, like):
+        return s.reshape((s.shape[0],) + (1,) * (like.ndim - 1))
+
+    def _scale_of(self, deltas):
+        leaves = jax.tree_util.tree_leaves(deltas)
+        M = leaves[0].shape[0]
+        flat = jnp.concatenate([l.reshape(M, -1) for l in leaves], axis=1)
+        return jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
+
+    def _div(self, deltas, scale):
+        return jax.tree_util.tree_map(
+            lambda l: l / self._expand(scale, l), deltas)
+
+    def _mul(self, deltas, scale):
+        return jax.tree_util.tree_map(
+            lambda l: l * self._expand(scale, l), deltas)
+
+    def wrap_uplink(self, deltas, transmit):
+        """Per-client adaptive scale (``scale_mode == "max_abs"``): one
+        scalar per client travels on the (error-free) control channel; the
+        cohort then rides the batched uplink unchanged."""
+        if self.scale_mode != "max_abs":
+            return transmit(deltas)
+        scale = self._compute_scale(deltas)
+        out, stats = transmit(self._div_scale(deltas, scale))
+        return self._mul_scale(out, scale), stats
+
+    def apply(self, params, aux, agg):
+        """PS update: add the aggregated delta to the global model."""
+        return jax.tree_util.tree_map(lambda p, d: p + d, params, agg), aux
+
+
+# -------------------------------------------------------------- round engine
+
+
+class RoundEngine:
+    """One composable FL round driver for any :class:`Algorithm`.
+
+    Owns everything the old per-algorithm loops duplicated: scenario-driver
+    resolution, dispatch selection, analytic-ECRT pricing, the downlink
+    broadcast leg, per-round airtime accumulation, link telemetry, and the
+    eval cadence. Three round variants cover every configuration:
+
+    * **driver-less** — one fused jitted round: [broadcast ->] payload ->
+      single-mode batched uplink -> mean -> apply.
+    * **scenario + select** — one fused jitted round: link pipeline ->
+      [broadcast ->] payload -> vmapped-switch uplink -> dropout-weighted
+      aggregate -> apply.
+    * **scenario + bucketed** — jitted link/payload/apply steps around
+      host-driven mode-bucketed transports (each mode runs once on its own
+      client bucket; Pallas kernel rows allowed) — the mode vector syncs to
+      the host once per round.
+
+    The key schedule is the pre-engine one, exactly: ``key -> params`` split,
+    an optional driver-init split, one split per round, and inside a
+    scenario round ``k_link, k_tx = split(round_key)``. The downlink leg
+    rides the *same* round/uplink key on the downlink fold_in lane, so
+    enabling it consumes no extra splits and ``downlink=None`` runs are
+    bit-identical to the pre-engine loops.
+    """
+
+    def __init__(self, algorithm, transport_cfg, client_x, client_y,
+                 test_x, test_y, *, n_rounds: int, seed: int = 0,
+                 eval_every: int = 2,
+                 timings: latency_lib.PhyTimings | None = None,
+                 scenario=None, adaptive_dispatch: str = "bucketed",
+                 downlink=None):
+        self.algo = algorithm
+        self.client_x, self.client_y = client_x, client_y
+        self.test_x, self.test_y = test_x, test_y
+        self.n_rounds = n_rounds
+        self.seed = seed
+        self.eval_every = eval_every
+        self.timings = timings or latency_lib.PhyTimings()
+        self.num_clients = client_x.shape[0]
+
+        key = jax.random.PRNGKey(seed)
+        key, pk = jax.random.split(key)
+        self.params = algorithm.init_params(pk)
+        self.aux = algorithm.init_opt(self.params)
+        self.driver = resolve_scenario(scenario, transport_cfg)
+        if adaptive_dispatch not in ("bucketed", "select"):
+            raise ValueError(
+                f"adaptive_dispatch must be bucketed|select, got "
+                f"{adaptive_dispatch!r}")
+        self.dispatch = adaptive_dispatch
+
+        # Kept pre-resolution: the downlink leg re-derives its own transport
+        # from this (its ECRT pricing anchors at the *shifted* SNR, not the
+        # uplink's — see _downlink_transport_cfg).
+        self._raw_transport_cfg = transport_cfg
+        self.ecrt_air_scale = None
+        if self.driver is None:
+            transport_cfg, self.ecrt_air_scale = resolve_ecrt_analytic(
+                transport_cfg, self.num_clients)
+        self.transport_cfg = transport_cfg
+        self.downlink = resolve_downlink(downlink, self.driver)
+        if (self.downlink is not None and self.downlink.adaptive
+                and self.driver is None):
+            raise ValueError(
+                "DownlinkConfig(adaptive=True) needs a scenario — the "
+                "per-client downlink mode comes from the scenario's policy "
+                "table; driver-less runs use a single broadcast mode")
+        self.dl_air_scale = None
+        self.dl_cfg = (None if self.downlink is None
+                       else self._downlink_transport_cfg())
+
+        self._build_round_fns()
+        if self.driver is not None:
+            key, lk = jax.random.split(key)
+            self.lstate, self.prev_mode, self.prev_est = self.driver.init(
+                lk, self.num_clients)
+        self._key = key
+
+    # ----------------------------------------------------------- downlink
+
+    def _downlink_transport_cfg(self):
+        """The broadcast ``TransportConfig``: the *raw* uplink config with
+        the downlink's mode/modulation and (driver-less) shifted channel SNR.
+
+        Derived from the pre-resolution uplink config, then put through its
+        own analytic-ECRT resolution, because an ECRT downlink must not (a)
+        trace the real LDPC decoder inside the jitted round, nor (b) reuse
+        an E[tx] calibrated at the uplink's unshifted SNR — the analytic
+        model is SNR-blind, so the constant must be calibrated where the
+        *downlink* operates. Driver-less: the shift is baked into the
+        channel (shape preserved — per-client SNR vectors shift elementwise)
+        and ``resolve_ecrt_analytic`` runs on the shifted config, yielding a
+        per-client downlink airtime scale for heterogeneous cohorts.
+        Scenario rounds override SNR per round (``rnd.snr_db + Δ``), so the
+        config keeps the base channel and an ECRT downlink calibrates at the
+        scenario's fleet operating point + Δ.
+        """
+        dl = self.downlink
+        cfg = dataclasses.replace(
+            self._raw_transport_cfg, mode=dl.mode,
+            modulation=dl.modulation or self._raw_transport_cfg.modulation)
+        if self.driver is not None:
+            if cfg.mode == "ecrt" and cfg.simulate_fec:
+                anchor = float(self.driver.scenario.dynamics.mean_snr_db
+                               + dl.snr_offset_db)
+                e_tx = latency_lib.calibrate_ecrt(
+                    anchor, cfg.modulation,
+                    n_codewords=latency_lib.DEFAULT_CALIB_CODEWORDS,
+                    max_tx=latency_lib.DEFAULT_CALIB_MAX_TX)
+                cfg = dataclasses.replace(
+                    cfg, simulate_fec=False, ecrt_expected_tx=float(e_tx))
+            return cfg
+        ch = cfg.channel
+        snr = np.asarray(ch.snr_db, np.float32) + np.float32(dl.snr_offset_db)
+        snr_val = (float(snr) if snr.ndim == 0
+                   else tuple(float(v) for v in snr.reshape(-1)))
+        cfg = dataclasses.replace(
+            cfg, channel=dataclasses.replace(ch, snr_db=snr_val))
+        cfg, self.dl_air_scale = resolve_ecrt_analytic(cfg, self.num_clients)
+        return cfg
+
+    def _downlink_modes(self, est_db):
+        """Adaptive downlink: per-client mode from the scenario's policy
+        table at the shifted CSI (jit-safe; bucketed rounds pass host CSI)."""
+        from repro.link import policy as policy_lib
+
+        return policy_lib.downlink_mode(
+            est_db, self.driver.scenario.policy, self.downlink.snr_offset_db)
+
+    def _broadcast_scenario(self, params, k_tx, rnd, dl_mode=None,
+                            dispatch="select"):
+        """One scenario round's broadcast leg: global model -> per-client
+        received copies at the shifted per-round SNR."""
+        dl_snr = rnd.snr_db + self.downlink.snr_offset_db
+        if self.downlink.adaptive:
+            cfgs = (self.driver.mode_cfgs if dispatch == "bucketed"
+                    else select_mode_cfgs(self.driver))
+            mode = dl_mode if dl_mode is not None else self._downlink_modes(
+                rnd.est_db)
+            return transport_lib.transmit_pytree_broadcast_adaptive(
+                params, k_tx, cfgs, mode, snr_db=dl_snr, dispatch=dispatch)
+        return transport_lib.transmit_pytree_broadcast(
+            params, k_tx, self.dl_cfg, self.num_clients, snr_db=dl_snr)
+
+    def _downlink_air_record(self, res, r, dstats, scenario_rec):
+        """Price the round's broadcast and attach/append its telemetry.
+
+        Returns the seconds the PS spent broadcasting (each distinct mode is
+        transmitted once — see ``latency.broadcast_airtime``).
+        """
+        dl = self.downlink
+        if self.driver is not None and dl.adaptive:
+            air = latency_lib.round_airtime_adaptive(
+                dstats, self.timings, self.driver.mode_cfgs)
+            total = latency_lib.broadcast_airtime(air, dstats.mode_idx)
+        else:
+            air = latency_lib.round_airtime(dstats, self.timings, dl.mode)
+            if self.dl_air_scale is not None:
+                # Heterogeneous analytic-ECRT downlink: per-client E[tx]
+                # rescale, as on the uplink.
+                air = air * self.dl_air_scale
+            total = latency_lib.broadcast_airtime(air)
+        rec = scenario_rec
+        if rec is None:
+            rec = {"round": r}
+            res.link.append(rec)
+        rec["downlink_airtime_s"] = total
+        rec["downlink_ber"] = float(np.mean(np.asarray(dstats.ber)))
+        if dstats.mode_idx is not None:
+            rec["downlink_mode_counts"] = np.bincount(
+                np.asarray(dstats.mode_idx),
+                minlength=len(self.driver.mode_cfgs)).tolist()
+        return total
+
+    # -------------------------------------------------------- round builds
+
+    def _build_round_fns(self):
+        algo, tcfg, driver = self.algo, self.transport_cfg, self.driver
+        dl, M = self.downlink, self.num_clients
+
+        @jax.jit
+        def round_step(params, aux, xb, yb, key):
+            # Driver-less round, one fused program. The downlink broadcast
+            # (when configured) and the uplink share `key` on disjoint
+            # fold_in lanes.
+            dstats = None
+            if dl is None:
+                payload = algo.payload(params, xb, yb)
+            else:
+                recv, dstats = transport_lib.transmit_pytree_broadcast(
+                    params, key, self.dl_cfg, M)
+                payload = algo.payload_from(recv, xb, yb)
+            hat, stats = algo.wrap_uplink(
+                payload,
+                lambda t: transport_lib.transmit_pytree_batch(t, key, tcfg))
+            agg = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), hat)
+            params, aux = algo.apply(params, aux, agg)
+            return params, aux, stats, dstats
+
+        self._round_step = round_step
+
+        @jax.jit
+        def eval_acc(params):
+            return cnn.accuracy(params, jnp.asarray(self.test_x),
+                                jnp.asarray(self.test_y))
+
+        self._eval_acc = eval_acc
+
+        if driver is None:
+            return
+
+        @jax.jit
+        def round_step_link(params, aux, xb, yb, key, lstate, prev_mode,
+                            prev_est):
+            # Select dispatch: one fused program — dynamics -> noisy CSI ->
+            # mode policy -> [broadcast ->] payload -> vmapped-switch uplink
+            # -> dropout-weighted aggregation -> apply.
+            k_link, k_tx = jax.random.split(key)
+            lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
+            dstats = None
+            if dl is None:
+                payload = algo.payload(params, xb, yb)
+            else:
+                recv, dstats = self._broadcast_scenario(params, k_tx, rnd)
+                payload = algo.payload_from(recv, xb, yb)
+            hat, stats = algo.wrap_uplink(
+                payload,
+                lambda t: transport_lib.transmit_pytree_batch_adaptive(
+                    t, k_tx, select_mode_cfgs(driver), rnd.mode,
+                    snr_db=rnd.snr_db, dispatch="select"))
+            agg = dropout_weighted_mean(hat, rnd.active)
+            params, aux = algo.apply(params, aux, agg)
+            return params, aux, stats, lstate, rnd, dstats
+
+        self._round_step_link = round_step_link
+
+        @jax.jit
+        def link_round(lstate, prev_mode, prev_est, key):
+            return driver.round(lstate, prev_mode, prev_est, key)
+
+        @jax.jit
+        def payload_shared(params, xb, yb):
+            return algo.payload(params, xb, yb)
+
+        @jax.jit
+        def payload_per_client(recv, xb, yb):
+            return algo.payload_from(recv, xb, yb)
+
+        @jax.jit
+        def apply_update(params, aux, hat, active):
+            agg = dropout_weighted_mean(hat, active)
+            return algo.apply(params, aux, agg)
+
+        def round_step_link_bucketed(params, aux, xb, yb, key, lstate,
+                                     prev_mode, prev_est):
+            # Bucketed dispatch: the link step runs first and the mode
+            # vector syncs to the host, so each transport leg can sort
+            # clients into per-mode buckets and run each mode once (O(M)
+            # work, kernel rows allowed) around the jitted compute steps.
+            k_link, k_tx = jax.random.split(key)
+            lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
+            mode_np = np.asarray(rnd.mode)
+            dstats = None
+            if dl is None:
+                payload = payload_shared(params, xb, yb)
+            else:
+                dl_mode = None
+                if dl.adaptive:
+                    dl_mode = np.asarray(self._downlink_modes(
+                        np.asarray(rnd.est_db)))
+                recv, dstats = self._broadcast_scenario(
+                    params, k_tx, rnd, dl_mode=dl_mode, dispatch="bucketed")
+                payload = payload_per_client(recv, xb, yb)
+            hat, stats = algo.wrap_uplink(
+                payload,
+                lambda t: transport_lib.transmit_pytree_batch_adaptive(
+                    t, k_tx, driver.mode_cfgs, mode_np, snr_db=rnd.snr_db,
+                    dispatch="bucketed"))
+            params, aux = apply_update(params, aux, hat, rnd.active)
+            return params, aux, stats, lstate, rnd, dstats
+
+        self._round_step_link_bucketed = round_step_link_bucketed
+
+    # --------------------------------------------------------------- run
+
+    def run(self) -> FLResult:
+        """Drive ``n_rounds`` rounds and return the :class:`FLResult`."""
+        algo, driver, timings = self.algo, self.driver, self.timings
+        params, aux, key = self.params, self.aux, self._key
+        rng = np.random.default_rng(self.seed)
+        res = FLResult([], [], [], 0.0, 0.0)
+        t0 = time.time()
+        cum_air = 0.0
+        for r in range(self.n_rounds):
+            key, rk = jax.random.split(key)
+            xb, yb = algo.sample(rng, self.client_x, self.client_y)
+            scenario_rec = None
+            if driver is None:
+                params, aux, stats, dstats = self._round_step(
+                    params, aux, xb, yb, rk)
+                # TDMA uplink: total airtime is the sum over clients.
+                per_client_air = latency_lib.round_airtime(
+                    stats, timings, self.transport_cfg.mode)
+                if self.ecrt_air_scale is not None:
+                    # Heterogeneous analytic ECRT: rescale each client's
+                    # airtime from the cohort-mean E[tx] to its own value.
+                    per_client_air = per_client_air * self.ecrt_air_scale
+            else:
+                step = (self._round_step_link_bucketed
+                        if self.dispatch == "bucketed"
+                        else self._round_step_link)
+                params, aux, stats, self.lstate, rnd, dstats = step(
+                    params, aux, xb, yb, rk, self.lstate, self.prev_mode,
+                    self.prev_est)
+                self.prev_mode, self.prev_est = rnd.mode, rnd.est_db
+                per_client_air = record_link_round(
+                    res, r, driver, stats, rnd, timings)
+                scenario_rec = res.link[-1]
+            cum_air += float(jnp.sum(per_client_air))
+            if dstats is not None:
+                cum_air += self._downlink_air_record(
+                    res, r, dstats, scenario_rec)
+            if r % self.eval_every == 0 or r == self.n_rounds - 1:
+                acc = float(self._eval_acc(params))
+                res.rounds.append(r)
+                res.accuracy.append(acc)
+                res.airtime_s.append(cum_air)
+        self.params, self.aux, self._key = params, aux, key
+        res.wall_s = time.time() - t0
+        res.final_accuracy = res.accuracy[-1]
+        return res

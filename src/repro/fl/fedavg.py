@@ -1,7 +1,7 @@
 """FedAvg over the approximate wireless uplink (beyond-paper extension).
 
 The paper evaluates FedSGD (one gradient per round). FedAvg transmits the
-*weight delta* after E local epochs instead; deltas are larger than single
+*weight delta* after E local steps instead; deltas are larger than single
 gradients but still bounded in practice (|Δw| <= eta * sum|g| over the local
 steps), so the same exponent-clamp receiver prior applies — optionally with
 an adaptive per-round scale factor (see ``scale_mode``):
@@ -12,28 +12,24 @@ an adaptive per-round scale factor (see ``scale_mode``):
                This concentrates values near the top of the representable
                range where relative QAM error is smallest — a beyond-paper
                trick enabled by the same boundedness insight.
+
+Since the round-engine refactor this module is a thin façade over
+:mod:`repro.fl.engine` (:class:`~repro.fl.engine.FedAvg` plugged into the
+shared :class:`~repro.fl.engine.RoundEngine`): scenarios, both adaptive
+dispatches, ECRT pricing, the noisy downlink leg, airtime and telemetry all
+come from the same engine FedSGD uses. ``run_fedavg`` keeps its historical
+signature and is bit-identical to the pre-engine loop for every
+pre-existing configuration (``tests/test_engine_golden.py``).
 """
 
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
-from repro.fl import cnn
-from repro.fl.loop import (
-    FLResult,
-    dropout_weighted_mean,
-    record_link_round,
-    resolve_ecrt_analytic,
-    resolve_scenario,
-    select_mode_cfgs,
-)
-from repro.optim.sgd import sgd as make_sgd
+from repro.fl import engine as engine_lib
+from repro.fl.engine import FLResult
 
 
 def run_fedavg(
@@ -52,162 +48,23 @@ def run_fedavg(
     timings: latency_lib.PhyTimings | None = None,
     scenario=None,
     adaptive_dispatch: str = "bucketed",
+    downlink=None,
 ) -> FLResult:
-    timings = timings or latency_lib.PhyTimings()
-    M = client_x.shape[0]
-    key = jax.random.PRNGKey(seed)
-    key, pk = jax.random.split(key)
-    params = cnn.init_params(pk, cfg)
-    grad_fn = jax.grad(cnn.loss_fn)
-    driver = resolve_scenario(scenario, transport_cfg)
-    if adaptive_dispatch not in ("bucketed", "select"):
-        raise ValueError(
-            f"adaptive_dispatch must be bucketed|select, got {adaptive_dispatch!r}")
+    """FedAvg over the simulated uplink: ``local_steps`` SGD steps per
+    client per round, weight deltas on the wire.
 
-    ecrt_air_scale = None
-    if driver is None:
-        # Per-client analytic E[tx] for heterogeneous cohorts (see loop.py).
-        transport_cfg, ecrt_air_scale = resolve_ecrt_analytic(transport_cfg, M)
-
-    def client_deltas(params, xb, yb):
-        # xb: (M, local_steps, batch, 28, 28) -> weight deltas, leaves (M, ...)
-        def client_update(x, y):
-            def body(p, inp):
-                xi, yi = inp
-                g = grad_fn(p, xi, yi)
-                p = jax.tree_util.tree_map(lambda a, b: a - cfg.lr * b, p, g)
-                return p, None
-
-            local, _ = jax.lax.scan(body, params, (x, y))
-            return jax.tree_util.tree_map(lambda a, b: a - b, local, params)
-
-        return jax.vmap(client_update)(xb, yb)
-
-    def expand(s, like):
-        return s.reshape((M,) + (1,) * (like.ndim - 1))
-
-    # jitted so the host-driven bucketed round doesn't run the scale math
-    # op-by-op; inside round_step_link's trace they simply inline.
-    @jax.jit
-    def compute_scale(deltas):
-        flat = jnp.concatenate(
-            [l.reshape(M, -1) for l in jax.tree_util.tree_leaves(deltas)],
-            axis=1)
-        return jnp.maximum(jnp.max(jnp.abs(flat), axis=1), 1e-8) / 0.9
-
-    @jax.jit
-    def div_scale(deltas, scale):
-        return jax.tree_util.tree_map(lambda l: l / expand(scale, l), deltas)
-
-    @jax.jit
-    def mul_scale(deltas, scale):
-        return jax.tree_util.tree_map(lambda l: l * expand(scale, l), deltas)
-
-    def scaled_uplink(deltas, transmit):
-        # Per-client adaptive scale (scale_mode == "max_abs"): one scalar per
-        # client travels on the (error-free) control channel; the cohort then
-        # rides the batched uplink in a single fused computation.
-        if scale_mode != "max_abs":
-            return transmit(deltas)
-        scale = compute_scale(deltas)
-        out, stats = transmit(div_scale(deltas, scale))
-        return mul_scale(out, scale), stats
-
-    @jax.jit
-    def round_step(params, xb, yb, key):
-        deltas = client_deltas(params, xb, yb)
-        deltas_hat, stats = scaled_uplink(
-            deltas,
-            lambda t: transport_lib.transmit_pytree_batch(t, key, transport_cfg))
-        agg = jax.tree_util.tree_map(lambda d: jnp.mean(d, axis=0), deltas_hat)
-        new_params = jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
-        return new_params, stats
-
-    @jax.jit
-    def round_step_link(params, xb, yb, key, lstate, prev_mode, prev_est):
-        # Select dispatch, scenario-driven round: link pipeline + vmapped-
-        # switch uplink + dropout-weighted FedAvg aggregate (see loop.run_fl).
-        k_link, k_tx = jax.random.split(key)
-        lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
-        deltas = client_deltas(params, xb, yb)
-        deltas_hat, stats = scaled_uplink(
-            deltas,
-            lambda t: transport_lib.transmit_pytree_batch_adaptive(
-                t, k_tx, select_mode_cfgs(driver), rnd.mode,
-                snr_db=rnd.snr_db, dispatch="select"))
-        agg = dropout_weighted_mean(deltas_hat, rnd.active)
-        new_params = jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
-        return new_params, stats, lstate, rnd
-
-    @jax.jit
-    def link_round(lstate, prev_mode, prev_est, key):
-        return driver.round(lstate, prev_mode, prev_est, key)
-
-    @jax.jit
-    def deltas_fn(params, xb, yb):
-        return client_deltas(params, xb, yb)
-
-    @jax.jit
-    def apply_deltas(params, deltas_hat, active):
-        agg = dropout_weighted_mean(deltas_hat, active)
-        return jax.tree_util.tree_map(lambda p, d: p + d, params, agg)
-
-    def round_step_link_bucketed(params, xb, yb, key, lstate, prev_mode,
-                                 prev_est):
-        # Bucketed dispatch: the mode vector syncs to the host after the
-        # jitted link step, the uplink runs each mode once on its own client
-        # bucket, and the (jitted) aggregate applies the deltas (see
-        # loop.run_fl for the trade-off).
-        k_link, k_tx = jax.random.split(key)
-        lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
-        mode_np = np.asarray(rnd.mode)
-        deltas = deltas_fn(params, xb, yb)
-        deltas_hat, stats = scaled_uplink(
-            deltas,
-            lambda t: transport_lib.transmit_pytree_batch_adaptive(
-                t, k_tx, driver.mode_cfgs, mode_np, snr_db=rnd.snr_db,
-                dispatch="bucketed"))
-        params = apply_deltas(params, deltas_hat, rnd.active)
-        return params, stats, lstate, rnd
-
-    @jax.jit
-    def eval_acc(params):
-        return cnn.accuracy(params, jnp.asarray(test_x), jnp.asarray(test_y))
-
-    if driver is not None:
-        key, lk = jax.random.split(key)
-        lstate, prev_mode, prev_est = driver.init(lk, M)
-
-    rng = np.random.default_rng(seed)
-    res = FLResult([], [], [], 0.0, 0.0)
-    t0 = time.time()
-    cum_air = 0.0
-    for r in range(n_rounds):
-        key, rk = jax.random.split(key)
-        take = rng.integers(0, client_x.shape[1], (M, local_steps, batch_per_step))
-        xb = jnp.asarray(np.take_along_axis(
-            client_x, take.reshape(M, -1)[:, :, None, None], axis=1
-        ).reshape(M, local_steps, batch_per_step, 28, 28))
-        yb = jnp.asarray(np.take_along_axis(
-            client_y, take.reshape(M, -1), axis=1
-        ).reshape(M, local_steps, batch_per_step))
-        if driver is None:
-            params, stats = round_step(params, xb, yb, rk)
-            air = latency_lib.round_airtime(stats, timings, transport_cfg.mode)
-            if ecrt_air_scale is not None:
-                air = air * ecrt_air_scale
-        else:
-            step = (round_step_link_bucketed
-                    if adaptive_dispatch == "bucketed" else round_step_link)
-            params, stats, lstate, rnd = step(
-                params, xb, yb, rk, lstate, prev_mode, prev_est)
-            prev_mode, prev_est = rnd.mode, rnd.est_db
-            air = record_link_round(res, r, driver, stats, rnd, timings)
-        cum_air += float(jnp.sum(air))
-        if r % eval_every == 0 or r == n_rounds - 1:
-            res.rounds.append(r)
-            res.accuracy.append(float(eval_acc(params)))
-            res.airtime_s.append(cum_air)
-    res.wall_s = time.time() - t0
-    res.final_accuracy = res.accuracy[-1]
-    return res
+    Mirrors :func:`repro.fl.loop.run_fl`'s arguments; the FedAvg-specific
+    ones are ``local_steps`` / ``batch_per_step`` (the local schedule) and
+    ``scale_mode`` (the adaptive per-client delta scaling above). See the
+    module and :mod:`repro.fl.engine` docstrings for scenarios, dispatches,
+    and the downlink leg.
+    """
+    algo = engine_lib.FedAvg(cfg, local_steps=local_steps,
+                             batch_per_step=batch_per_step,
+                             scale_mode=scale_mode)
+    return engine_lib.RoundEngine(
+        algo, transport_cfg, client_x, client_y, test_x, test_y,
+        n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
+        scenario=scenario, adaptive_dispatch=adaptive_dispatch,
+        downlink=downlink,
+    ).run()

@@ -9,150 +9,39 @@ One round (paper Sec. II):
   4. airtime for the round = slowest client's uplink (TDMA: sum is also
      reported; Fig. 3 uses the per-round wall time accumulation)
 
-One XLA program per round regardless of M; per-client TxStats feed the
-latency model directly.
+Since the round-engine refactor this module is a thin façade: the round
+mechanics — driver resolution, adaptive dispatch (``bucketed``/``select``),
+ECRT pricing, the optional noisy downlink broadcast leg, airtime/telemetry,
+eval cadence — live in :mod:`repro.fl.engine` (:class:`~repro.fl.engine.RoundEngine`
+plus the :class:`~repro.fl.engine.FedSGD` strategy), shared with FedAvg and
+any future algorithm. ``run_fl`` keeps its historical signature and is
+bit-identical to the pre-engine loop for every pre-existing configuration
+(``tests/test_engine_golden.py``).
 
-Scenario-driven rounds (``scenario=``): instead of one static transport
-mode and SNR, each round runs the link-adaptation pipeline — ``repro.link``
-dynamics evolve per-client SNR, the estimator produces noisy CSI, the
-policy picks each client's mode, the mixed-mode batched uplink delivers
-(``transmit_pytree_batch_adaptive``), and dropped clients are excluded from
-the weighted aggregate. Per-round link telemetry lands in ``FLResult.link``.
-
-Adaptive dispatch (``adaptive_dispatch=``): ``"bucketed"`` (default) splits
-the round into jitted link/grad/update steps around a host-driven
-mode-bucketed uplink — each mode runs once on its own client bucket
-(O(clients) work, Pallas kernel rows allowed) at the cost of syncing the
-mode vector to the host each round. ``"select"`` keeps the whole round one
-fused XLA program (the vmapped ``lax.switch`` uplink), paying ~n_modes x
-the uplink FLOPs. For kernel-free mode tables the two dispatches are
-bit-identical through the uplink; with ``use_kernel`` rows the select path
-clears the flag (the grid cannot lower in the fused round), so its jnp rows
-draw a different — equally valid — channel realization than bucketed's
-kernel rows.
+Scenario-driven rounds (``scenario=``), adaptive dispatch
+(``adaptive_dispatch=``), and the downlink leg (``downlink=``) are
+documented on the engine module.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
-from repro.fl import cnn
-from repro.optim.sgd import sgd as make_sgd
+from repro.fl import engine as engine_lib
 
-
-@dataclasses.dataclass
-class FLResult:
-    rounds: list
-    accuracy: list
-    airtime_s: list  # cumulative uplink airtime (TDMA sum over clients)
-    wall_s: float
-    final_accuracy: float
-    # Per-round link telemetry (scenario-driven runs only; [] otherwise).
-    # Each entry: {round, mean_snr_db, mean_est_db, mode_counts, n_active,
-    # n_stragglers, airtime_s} — mode_counts indexes the driver's mode table.
-    link: list = dataclasses.field(default_factory=list)
-
-
-def resolve_scenario(scenario, transport_cfg):
-    """``scenario=`` argument -> a bound ``ScenarioDriver`` (or ``None``).
-
-    Accepts a registered scenario name, a ``Scenario``, or an already-built
-    ``ScenarioDriver``; shared by ``run_fl`` and ``fedavg.run_fedavg``.
-    """
-    if scenario is None:
-        return None
-    from repro.link import scenario as scenario_lib
-
-    if isinstance(scenario, scenario_lib.ScenarioDriver):
-        return scenario
-    if isinstance(scenario, str):
-        scenario = scenario_lib.get_scenario(scenario)
-    return scenario_lib.ScenarioDriver(scenario, transport_cfg)
-
-
-def dropout_weighted_mean(tree, active):
-    """Mean of ``(M, ...)`` leaves over active clients only.
-
-    ``active`` is the 0/1 ``(M,)`` availability vector; an all-dropped round
-    yields zeros (the global model simply does not move). Jit-safe — the
-    shared aggregation rule of both scenario-driven FL loops.
-    """
-    denom = jnp.maximum(jnp.sum(active), 1.0)
-    return jax.tree_util.tree_map(
-        lambda g: jnp.tensordot(active, g, axes=(0, 0)) / denom, tree)
-
-
-def record_link_round(res: "FLResult", r: int, driver, stats, rnd,
-                      timings) -> jax.Array:
-    """Per-round scenario bookkeeping shared by the FL loops: price the
-    round's per-client airtime and append the telemetry record. Returns the
-    ``(M,)`` airtime vector."""
-    air = driver.airtime(stats, rnd, timings)
-    res.link.append(link_telemetry(r, rnd, air, len(driver.mode_cfgs)))
-    return air
-
-
-def link_telemetry(r: int, rnd, per_client_air, n_modes: int) -> dict:
-    """One ``FLResult.link`` record from a round's ``LinkRound`` + airtime."""
-    mode = np.asarray(rnd.mode)
-    return {
-        "round": r,
-        "mean_snr_db": float(np.mean(np.asarray(rnd.snr_db))),
-        "mean_est_db": float(np.mean(np.asarray(rnd.est_db))),
-        "mode_counts": np.bincount(mode, minlength=n_modes).tolist(),
-        "n_active": int(np.asarray(rnd.active).sum()),
-        "n_stragglers": int(np.asarray(rnd.straggler).sum()),
-        "airtime_s": float(np.asarray(per_client_air).sum()),
-    }
-
-
-def select_mode_cfgs(driver):
-    """The driver's mode table, legal for the select dispatch.
-
-    Delegates to ``transport.clear_kernel_rows`` (the one clearing rule):
-    the fused select round cannot lower the Pallas grid. A select round is
-    therefore *not* bit-comparable to a bucketed round of a kernel-enabled
-    table — the jnp rows draw their own, equally valid, channel
-    realization; within the select dispatch everything stays deterministic
-    as usual.
-    """
-    return transport_lib.clear_kernel_rows(driver.mode_cfgs)
-
-
-def resolve_ecrt_analytic(transport_cfg, num_clients: int):
-    """Swap real-FEC ECRT for the calibrated analytic model in an FL loop.
-
-    The real decoder inside a vmapped per-round loop would only re-measure a
-    constant; calibrate instead — with the shared pricing sample budget
-    (``latency.DEFAULT_CALIB_CODEWORDS``), so every entry point resolves
-    the same channel to the same E[tx]. Heterogeneous cohorts get E[tx]
-    interpolated per client over an SNR grid (``ecrt_expected_tx_profile``),
-    with the cohort mean driving the transport constant and the per-client
-    ratio returned as a ``(num_clients,)`` airtime scale (the analytic model
-    is linear in E[tx]). Returns ``(transport_cfg, air_scale_or_None)``.
-    """
-    if not (transport_cfg.mode == "ecrt" and transport_cfg.simulate_fec):
-        return transport_cfg, None
-    snr_vec = np.asarray(transport_cfg.channel.snr_db, np.float32).reshape(-1)
-    e_tx = latency_lib.ecrt_expected_tx_profile(
-        snr_vec, transport_cfg.modulation,
-        n_codewords=latency_lib.DEFAULT_CALIB_CODEWORDS,
-        max_tx=latency_lib.DEFAULT_CALIB_MAX_TX)
-    e_mean = float(e_tx.mean())
-    transport_cfg = dataclasses.replace(
-        transport_cfg, simulate_fec=False, ecrt_expected_tx=e_mean)
-    air_scale = None
-    if e_tx.size == num_clients and e_tx.size > 1:
-        air_scale = jnp.asarray(e_tx / e_mean)
-    return transport_cfg, air_scale
+# Re-exported for backward compatibility: these helpers lived here before
+# the engine refactor and are imported by tests/benchmarks.
+from repro.fl.engine import (  # noqa: F401
+    FLResult,
+    dropout_weighted_mean,
+    link_telemetry,
+    record_link_round,
+    resolve_ecrt_analytic,
+    resolve_scenario,
+    select_mode_cfgs,
+)
 
 
 def run_fl(
@@ -169,128 +58,35 @@ def run_fl(
     timings: latency_lib.PhyTimings | None = None,
     scenario=None,
     adaptive_dispatch: str = "bucketed",
+    downlink=None,
 ) -> FLResult:
-    timings = timings or latency_lib.PhyTimings()
-    M = client_x.shape[0]
-    key = jax.random.PRNGKey(seed)
-    key, pk = jax.random.split(key)
-    params = cnn.init_params(pk, cfg)
-    opt = make_sgd(cfg.lr)
-    opt_state = opt.init(params)
-    driver = resolve_scenario(scenario, transport_cfg)
-    if adaptive_dispatch not in ("bucketed", "select"):
-        raise ValueError(
-            f"adaptive_dispatch must be bucketed|select, got {adaptive_dispatch!r}")
+    """FedSGD over the simulated wireless uplink (paper Sec. II eq. (4)-(6)).
 
-    ecrt_air_scale = None
-    if driver is None:
-        transport_cfg, ecrt_air_scale = resolve_ecrt_analytic(transport_cfg, M)
+    Args:
+      cfg: CNN model/optimizer config (``configs.mnist_cnn``).
+      transport_cfg: uplink transport; real-FEC ECRT is swapped for the
+        calibrated analytic model (see ``engine.resolve_ecrt_analytic``).
+      client_x / client_y: stacked per-client shards, leaves ``(M, n, ...)``.
+      test_x / test_y: held-out eval set (accuracy every ``eval_every``).
+      n_rounds / batch_per_round / seed: round count, per-round minibatch
+        size, and the seed driving params/keys/batch sampling.
+      timings: PHY timing model for airtime pricing.
+      scenario: ``None`` for the paper's static single-mode uplink, else a
+        scenario name / ``Scenario`` / ``ScenarioDriver`` — per-round link
+        adaptation with telemetry in ``FLResult.link``.
+      adaptive_dispatch: ``"bucketed"`` (default) or ``"select"`` — see
+        :mod:`repro.fl.engine`.
+      downlink: optional ``DownlinkConfig`` enabling the noisy broadcast
+        leg (defaults to the scenario's ``downlink`` field; ``None`` = the
+        historical error-free downlink, bit-identical to pre-engine runs).
 
-    grad_fn = jax.grad(cnn.loss_fn)
-
-    @jax.jit
-    def round_step(params, opt_state, xb, yb, key):
-        def client_grad(x, y):
-            return grad_fn(params, x, y)
-
-        grads = jax.vmap(client_grad)(xb, yb)  # pytree leaves (M, ...)
-        # Batched uplink: M independent channels, fold_in key schedule,
-        # per-client TxStats — one fused computation instead of M pipelines.
-        grads_hat, stats = transport_lib.transmit_pytree_batch(
-            grads, key, transport_cfg)
-        agg = jax.tree_util.tree_map(lambda g: jnp.mean(g, axis=0), grads_hat)
-        new_params, new_state = opt.update(agg, opt_state, params)
-        return new_params, new_state, stats
-
-    @jax.jit
-    def round_step_link(params, opt_state, xb, yb, key, lstate, prev_mode,
-                        prev_est):
-        # Select dispatch: one fused program — dynamics -> noisy CSI -> mode
-        # policy -> vmapped-switch uplink -> dropout-weighted aggregation.
-        k_link, k_tx = jax.random.split(key)
-        lstate, rnd = driver.round(lstate, prev_mode, prev_est, k_link)
-
-        def client_grad(x, y):
-            return grad_fn(params, x, y)
-
-        grads = jax.vmap(client_grad)(xb, yb)
-        grads_hat, stats = transport_lib.transmit_pytree_batch_adaptive(
-            grads, k_tx, select_mode_cfgs(driver), rnd.mode,
-            snr_db=rnd.snr_db, dispatch="select")
-        agg = dropout_weighted_mean(grads_hat, rnd.active)
-        new_params, new_state = opt.update(agg, opt_state, params)
-        return new_params, new_state, stats, lstate, rnd
-
-    @jax.jit
-    def link_round(lstate, prev_mode, prev_est, key):
-        return driver.round(lstate, prev_mode, prev_est, key)
-
-    @jax.jit
-    def client_grads(params, xb, yb):
-        return jax.vmap(lambda x, y: grad_fn(params, x, y))(xb, yb)
-
-    @jax.jit
-    def apply_update(params, opt_state, grads_hat, active):
-        agg = dropout_weighted_mean(grads_hat, active)
-        return opt.update(agg, opt_state, params)
-
-    def round_step_link_bucketed(params, opt_state, xb, yb, key, lstate,
-                                 prev_mode, prev_est):
-        # Bucketed dispatch: the link step runs first and the mode vector
-        # syncs to the host, so the uplink can sort clients into per-mode
-        # buckets and run each mode once (O(M) work, kernel rows allowed)
-        # instead of paying every mode for every client.
-        k_link, k_tx = jax.random.split(key)
-        lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
-        mode_np = np.asarray(rnd.mode)
-        grads = client_grads(params, xb, yb)
-        grads_hat, stats = transport_lib.transmit_pytree_batch_adaptive(
-            grads, k_tx, driver.mode_cfgs, mode_np, snr_db=rnd.snr_db,
-            dispatch="bucketed")
-        params, opt_state = apply_update(params, opt_state, grads_hat,
-                                         rnd.active)
-        return params, opt_state, stats, lstate, rnd
-
-    @jax.jit
-    def eval_acc(params):
-        return cnn.accuracy(params, jnp.asarray(test_x), jnp.asarray(test_y))
-
-    if driver is not None:
-        key, lk = jax.random.split(key)
-        lstate, prev_mode, prev_est = driver.init(lk, M)
-
-    rng = np.random.default_rng(seed)
-    res = FLResult([], [], [], 0.0, 0.0)
-    t0 = time.time()
-    cum_air = 0.0
-    for r in range(n_rounds):
-        key, rk = jax.random.split(key)
-        take = rng.integers(0, client_x.shape[1], (M, batch_per_round))
-        xb = jnp.asarray(np.take_along_axis(client_x, take[:, :, None, None], axis=1))
-        yb = jnp.asarray(np.take_along_axis(client_y, take, axis=1))
-        if driver is None:
-            params, opt_state, stats = round_step(params, opt_state, xb, yb, rk)
-            # TDMA uplink: total airtime is the sum over clients ((M,) stats)
-            per_client_air = latency_lib.round_airtime(
-                stats, timings, transport_cfg.mode)
-            if ecrt_air_scale is not None:
-                # Heterogeneous analytic ECRT: rescale each client's airtime
-                # from the cohort-mean E[tx] to its own interpolated value.
-                per_client_air = per_client_air * ecrt_air_scale
-        else:
-            step = (round_step_link_bucketed
-                    if adaptive_dispatch == "bucketed" else round_step_link)
-            params, opt_state, stats, lstate, rnd = step(
-                params, opt_state, xb, yb, rk, lstate, prev_mode, prev_est)
-            prev_mode, prev_est = rnd.mode, rnd.est_db
-            per_client_air = record_link_round(
-                res, r, driver, stats, rnd, timings)
-        cum_air += float(jnp.sum(per_client_air))
-        if r % eval_every == 0 or r == n_rounds - 1:
-            acc = float(eval_acc(params))
-            res.rounds.append(r)
-            res.accuracy.append(acc)
-            res.airtime_s.append(cum_air)
-    res.wall_s = time.time() - t0
-    res.final_accuracy = res.accuracy[-1]
-    return res
+    Returns:
+      :class:`~repro.fl.engine.FLResult`.
+    """
+    algo = engine_lib.FedSGD(cfg, batch_per_round=batch_per_round)
+    return engine_lib.RoundEngine(
+        algo, transport_cfg, client_x, client_y, test_x, test_y,
+        n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
+        scenario=scenario, adaptive_dispatch=adaptive_dispatch,
+        downlink=downlink,
+    ).run()

@@ -19,11 +19,13 @@ from repro.link.policy import (
     PolicyConfig,
     build_mode_cfgs,
     choose_mode,
+    downlink_mode,
     ecrt_anchor_snr_db,
     fixed_policy,
 )
 from repro.link.scenario import (
     SCENARIOS,
+    DownlinkConfig,
     LinkRound,
     Scenario,
     ScenarioDriver,

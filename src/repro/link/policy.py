@@ -40,6 +40,7 @@ __all__ = [
     "fixed_policy",
     "initial_mode",
     "choose_mode",
+    "downlink_mode",
     "ecrt_anchor_snr_db",
     "build_mode_cfgs",
 ]
@@ -114,6 +115,21 @@ def choose_mode(snr_est_db: jax.Array, prev_mode: jax.Array,
     up = jnp.sum(snr >= thr + h, axis=-1).astype(jnp.int32)
     down = jnp.sum(snr >= thr - h, axis=-1).astype(jnp.int32)
     return jnp.clip(jnp.asarray(prev_mode, jnp.int32), up, down)
+
+
+def downlink_mode(snr_est_db: jax.Array, cfg: PolicyConfig,
+                  snr_offset_db: float = 0.0) -> jax.Array:
+    """Per-client *downlink* mode from the same policy table.
+
+    The broadcast leg reuses the uplink's CSI shifted by the downlink SNR
+    offset (downlink SNR = uplink estimate + Δ dB) through the
+    hysteresis-free threshold mapping: the downlink keeps no per-leg mode
+    memory — the PS re-derives the broadcast encoding from this round's CSI
+    alone, so there is no previous downlink mode for hysteresis to hold.
+    Pure jnp, safe under jit (the select FL round traces it).
+    """
+    return initial_mode(
+        jnp.asarray(snr_est_db, jnp.float32) + snr_offset_db, cfg)
 
 
 def ecrt_anchor_snr_db(cfg: PolicyConfig, fallback_db: float) -> float:

@@ -26,6 +26,7 @@ from repro.link import estimator as estimator_lib
 from repro.link import policy as policy_lib
 
 __all__ = [
+    "DownlinkConfig",
     "Scenario",
     "LinkRound",
     "ScenarioDriver",
@@ -34,6 +35,41 @@ __all__ = [
     "register_scenario",
     "list_scenarios",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class DownlinkConfig:
+    """The broadcast leg of an FL round: how the global model reaches clients.
+
+    The paper models bit errors on the uplink only; Qu et al.
+    (arXiv:2310.16652) show the downlink broadcast of the global model is
+    markedly *less* error-tolerant than uplink gradients, so this config
+    makes the leg explicit. ``None`` on a scenario / FL loop (the default
+    everywhere) keeps the historical error-free downlink and changes no
+    existing result bit-wise.
+
+    ``mode``
+        Broadcast transport: ``"perfect"`` (error-free reference) or an
+        uncoded mode (``"approx"``/``"naive"``) — the error-budget axis of
+        the Qu et al. comparison. Any transport mode is accepted; an
+        ``"ecrt"`` downlink is priced with the calibrated analytic model at
+        the *shifted* operating point (the engine never runs the real LDPC
+        decoder inside a round — see ``engine.RoundEngine``).
+    ``modulation``
+        ``None`` inherits the uplink's modulation.
+    ``snr_offset_db``
+        Downlink SNR = uplink SNR + Δ dB (base stations transmit with more
+        power than handsets — a positive Δ; 0 is the matched-SNR study).
+    ``adaptive``
+        Scenario-driven runs only: pick each client's downlink mode from the
+        scenario's *existing* policy table at the shifted CSI
+        (``policy.downlink_mode``) instead of one fixed broadcast mode.
+    """
+
+    mode: str = "approx"
+    modulation: str | None = None
+    snr_offset_db: float = 0.0
+    adaptive: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +96,9 @@ class Scenario:
     straggler_prob: float = 0.0
     straggler_slowdown: float = 3.0
     ecrt_expected_tx: float | None = None
+    # Broadcast leg of each round; None = error-free downlink (the paper's
+    # implicit assumption, and bit-identical to pre-downlink behavior).
+    downlink: DownlinkConfig | None = None
     description: str = ""
 
 
@@ -270,3 +309,13 @@ _preset("iot-flaky", dyn="bursty",
         estimator=estimator_lib.EstimatorConfig(n_pilots=16, stale_prob=0.2),
         dropout_prob=0.1, straggler_prob=0.1, straggler_slowdown=3.0,
         description="bursty links + few pilots, stale CSI, dropout, stragglers")
+_preset("vehicular-noisy-dl", dyn="vehicular",
+        downlink=DownlinkConfig(mode="approx", snr_offset_db=3.0,
+                                adaptive=True),
+        description="vehicular links with a noisy adaptive broadcast "
+                    "downlink 3 dB above the uplink (per-client mode via "
+                    "the policy table)")
+_preset("static-noisy-dl", dyn="static",
+        downlink=DownlinkConfig(mode="approx", snr_offset_db=0.0),
+        description="the paper's static setup plus a matched-SNR uncoded "
+                    "broadcast downlink (the Qu et al. error-budget axis)")

@@ -1,0 +1,96 @@
+"""Golden-equivalence regression for the round-engine refactor.
+
+``repro.fl.engine`` replaced the hand-written round loops of
+``fl/loop.py``/``fl/fedavg.py``; these tests pin the refactor to a frozen
+snapshot of the pre-engine implementations (``tests/golden_pre_engine.py``):
+the same seed/config must produce a **bit-identical** ``FLResult`` —
+accuracy trajectory, cumulative airtime, and per-round link telemetry —
+for FedSGD and FedAvg, driver-less and scenario-driven, under both adaptive
+dispatches. Any engine change that alters the key schedule, the jit
+boundaries, or the op order of a round shows up here as a float mismatch.
+"""
+
+import dataclasses
+
+import pytest
+
+import golden_pre_engine as golden
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.data import synth_mnist
+from repro.fl import partition
+from repro.fl.fedavg import run_fedavg
+from repro.fl.loop import run_fl
+from repro.link import scenario as S
+
+
+@pytest.fixture(scope="module")
+def world():
+    (img, lab), (ti, tl) = synth_mnist.train_test(60, 16, seed=0)
+    parts = partition.non_iid_partition(img, lab, n_clients=4)
+    cx, cy = partition.stack_clients(parts, per_client=24)
+    return cx, cy, ti, tl
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(cnn_config(), lr=0.1)
+
+
+def _scenario():
+    # Explicit ecrt_expected_tx skips LDPC calibration; dropout exercises the
+    # weighted aggregate.
+    return dataclasses.replace(S.get_scenario("vehicular"),
+                               ecrt_expected_tx=2.0, dropout_prob=0.1)
+
+
+def assert_identical(a, b):
+    """Bit-exact FLResult comparison (everything but wall-clock time)."""
+    assert a.rounds == b.rounds
+    assert a.accuracy == b.accuracy  # float lists: exact equality intended
+    assert a.airtime_s == b.airtime_s
+    assert a.final_accuracy == b.final_accuracy
+    assert a.link == b.link  # per-round telemetry dicts, exact
+
+
+def test_fedsgd_driverless_matches_golden(cfg, world):
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="approx", channel=CH.ChannelConfig(snr_db=10.0))
+    kw = dict(n_rounds=3, batch_per_round=8, eval_every=2, seed=3)
+    assert_identical(run_fl(cfg, tc, cx, cy, ti, tl, **kw),
+                     golden.golden_run_fl(cfg, tc, cx, cy, ti, tl, **kw))
+
+
+def test_fedavg_driverless_matches_golden(cfg, world):
+    """Covers the analytic-ECRT pricing path + max_abs scaling driver-less."""
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="ecrt", channel=CH.ChannelConfig(snr_db=10.0),
+                           simulate_fec=False, ecrt_expected_tx=1.3)
+    kw = dict(n_rounds=3, local_steps=2, batch_per_step=6, eval_every=2,
+              seed=5, scale_mode="max_abs")
+    assert_identical(run_fedavg(cfg, tc, cx, cy, ti, tl, **kw),
+                     golden.golden_run_fedavg(cfg, tc, cx, cy, ti, tl, **kw))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_fedsgd_scenario_matches_golden(cfg, world, dispatch):
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="approx", channel=CH.ChannelConfig(snr_db=10.0))
+    kw = dict(n_rounds=3, batch_per_round=8, eval_every=2, seed=7,
+              scenario=_scenario(), adaptive_dispatch=dispatch)
+    assert_identical(run_fl(cfg, tc, cx, cy, ti, tl, **kw),
+                     golden.golden_run_fl(cfg, tc, cx, cy, ti, tl, **kw))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_fedavg_scenario_matches_golden(cfg, world, dispatch):
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="approx", channel=CH.ChannelConfig(snr_db=10.0))
+    kw = dict(n_rounds=2, local_steps=2, batch_per_step=6, eval_every=1,
+              seed=9, scale_mode="max_abs", scenario=_scenario(),
+              adaptive_dispatch=dispatch)
+    assert_identical(run_fedavg(cfg, tc, cx, cy, ti, tl, **kw),
+                     golden.golden_run_fedavg(cfg, tc, cx, cy, ti, tl, **kw))

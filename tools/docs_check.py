@@ -1,9 +1,9 @@
-"""Documentation gate for the core + link packages (``make docs-check``).
+"""Documentation gate for the core + link + fl packages (``make docs-check``).
 
-Fails (exit 1) when a public module under ``src/repro/core/`` or
-``src/repro/link/`` lacks a module docstring, or a public (non-underscore)
-top-level function in one of those modules lacks a function docstring. Kept
-dependency-free: pure ``ast``.
+Fails (exit 1) when a public module under ``src/repro/core/``,
+``src/repro/link/``, or ``src/repro/fl/`` lacks a module docstring, or a
+public (non-underscore) top-level function in one of those modules lacks a
+function docstring. Kept dependency-free: pure ``ast``.
 """
 
 from __future__ import annotations
@@ -13,7 +13,7 @@ import pathlib
 import sys
 
 _SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-PACKAGES = [_SRC / "core", _SRC / "link"]
+PACKAGES = [_SRC / "core", _SRC / "link", _SRC / "fl"]
 
 
 def check_module(path: pathlib.Path) -> list[str]:
