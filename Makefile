@@ -4,7 +4,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench-link bench-fl docs-check
+.PHONY: test bench-smoke bench-link bench-fl bench-compress docs-check
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -30,7 +30,14 @@ bench-link:
 bench-fl:
 	$(PY) -m benchmarks.run --only fl_round
 
-# Fails if a public module (or public function) under src/repro/{core,link,fl}
-# lacks a docstring.
+# Compression Pareto study: dense-approx vs top-k+EF sparse arms vs ECRT on
+# vehicular and iot-flaky; asserts a top-k arm reaches dense accuracy at
+# <= 1/5 the cumulative airtime and writes BENCH_compression.json (uploaded
+# as a CI artifact).
+bench-compress:
+	$(PY) -m benchmarks.run --only compression
+
+# Fails if a public module (or public function) under
+# src/repro/{core,link,fl,compress} lacks a docstring.
 docs-check:
 	$(PY) tools/docs_check.py

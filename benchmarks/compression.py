@@ -1,0 +1,150 @@
+"""Accuracy-vs-airtime Pareto study for the compression subsystem.
+
+Four arms per scenario, same world/seed, all riding the scenario machinery
+(fixed single-mode policies so the only axis is the transport):
+
+  ``dense-approx``  the paper's uncoded uplink, every coordinate on the air
+  ``topk10``        top-k + error feedback at ratio 0.1 (10x fewer slots)
+  ``topk50``        top-k + error feedback at ratio 0.02 (50x fewer slots)
+  ``dense-ecrt``    the protected baseline (rate-1/2 LDPC, E[tx] priced)
+
+Sparse arms send the selected values through the same approx pipeline plus
+a Gray-MSB-protected index header; cumulative airtime prices both legs
+(``TxStats.data_symbols`` carries header + payload).
+
+The comparison is **airtime-matched, not round-matched**: a sparse round
+costs ~6-30x less air, so the sparse arms run 5x the dense arm's rounds
+and each arm traces an accuracy-vs-cumulative-airtime curve. Headline (the
+suite's gate, mirrored in ``BENCH_compression.json``): on at least one
+scenario a top-k+EF arm's curve reaches the dense-approx arm's *final*
+accuracy (within 0.02) at <= 1/5 of the dense arm's *total* cumulative
+airtime — the bits-on-air lever composes with the approximate wire instead
+of fighting it. Emits CSV lines + the JSON artifact (uploaded by the
+``bench-compress`` CI job). Standalone:
+
+    PYTHONPATH=src python -m benchmarks.compression [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from benchmarks.common import emit, fl_world
+from repro.compress import CompressionConfig
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.fl.loop import run_fl
+from repro.link import policy as policy_lib
+from repro.link import scenario as scenario_lib
+
+JSON_PATH = "BENCH_compression.json"
+ACC_TOL = 0.02  # "reaches dense accuracy" tolerance
+AIRTIME_FACTOR = 5.0  # the gate's airtime bar: <= dense / 5
+
+
+def _arms() -> dict:
+    """(policy, compression) per arm; policies are fixed single-mode."""
+    approx = policy_lib.fixed_policy("approx", "qpsk")
+    ecrt = policy_lib.fixed_policy("ecrt", "qpsk")
+    return {
+        "dense-approx": (approx, None),
+        "topk10": (approx, CompressionConfig(method="topk", ratio=0.10)),
+        "topk50": (approx, CompressionConfig(method="topk", ratio=0.02)),
+        "dense-ecrt": (ecrt, None),
+    }
+
+
+def _first_win(res, target_acc: float, air_budget: float):
+    """Earliest eval point reaching ``target_acc`` within ``air_budget``.
+
+    Scans the arm's accuracy-vs-cumulative-airtime curve; returns the
+    ``(round, accuracy, airtime_s)`` of the first qualifying point, or
+    ``None``.
+    """
+    for r, acc, air in zip(res.rounds, res.accuracy, res.airtime_s):
+        if acc >= target_acc and air <= air_budget:
+            return {"round": int(r), "accuracy": float(acc),
+                    "airtime_s": float(air)}
+    return None
+
+
+def run(quick: bool = True, seed: int = 0) -> dict:
+    """Run the Pareto arms on vehicular + iot-flaky and assert the gate."""
+    n_clients = 12 if quick else 40
+    rounds = 25 if quick else 60
+    sparse_rounds = 5 * rounds  # a sparse round is ~6-30x cheaper on the air
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05 if quick else 0.01)
+    tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+
+    report = {"clients": n_clients, "rounds": rounds,
+              "sparse_rounds": sparse_rounds, "scenarios": {}}
+    gate_ok = False
+    for scen_name in ("vehicular", "iot-flaky"):
+        base = dataclasses.replace(scenario_lib.get_scenario(scen_name),
+                                   ecrt_expected_tx=2.0)
+        scen_report = {}
+        results = {}
+        for arm, (pol, comp) in _arms().items():
+            scen = dataclasses.replace(base, policy=pol)
+            n_rounds = rounds if comp is None else sparse_rounds
+            res = run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=n_rounds,
+                         batch_per_round=32, eval_every=5, seed=seed,
+                         scenario=scen, compression=comp)
+            results[arm] = res
+            boa = (sum(t.get("comp_bits_on_air", 0.0) for t in res.link)
+                   if comp is not None else 0.0)
+            emit(f"compression/{scen_name}/{arm}", res.wall_s * 1e6,
+                 f"final_acc={res.final_accuracy:.3f} rounds={n_rounds} "
+                 f"airtime={res.airtime_s[-1]:.2f}s bits_on_air={boa:.3g}")
+            scen_report[arm] = {
+                "final_acc": float(res.final_accuracy),
+                "rounds": n_rounds,
+                "airtime_s": float(res.airtime_s[-1]),
+                "accuracy_curve": [float(a) for a in res.accuracy],
+                "airtime_curve": [float(a) for a in res.airtime_s],
+                "wall_s": float(res.wall_s),
+                "bits_on_air": float(boa),
+            }
+        dense = scen_report["dense-approx"]
+        target = dense["final_acc"] - ACC_TOL
+        budget = dense["airtime_s"] / AIRTIME_FACTOR
+        for arm in ("topk10", "topk50"):
+            win = _first_win(results[arm], target, budget)
+            scen_report[arm]["pareto_win_vs_dense"] = win
+            gate_ok = gate_ok or win is not None
+            emit(f"compression/{scen_name}/{arm}-vs-dense", 0.0,
+                 f"target_acc={target:.3f} air_budget={budget:.2f}s "
+                 + (f"win@round={win['round']} acc={win['accuracy']:.3f} "
+                    f"air={win['airtime_s']:.2f}s" if win else "win=False"))
+        report["scenarios"][scen_name] = scen_report
+    report["topk_matches_dense_at_fifth_airtime"] = bool(gate_ok)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("compression/json", 0.0, f"wrote {JSON_PATH}")
+    if not gate_ok:  # the suite doubles as a gate (see benchmarks/run.py)
+        raise AssertionError(
+            "expected a top-k+EF approx arm to reach dense-approx accuracy "
+            f"(within {ACC_TOL}) at <= 1/{AIRTIME_FACTOR:.0f} the cumulative "
+            "airtime on at least one scenario; see BENCH_compression.json")
+    return report
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.compression``."""
+    ap = argparse.ArgumentParser(
+        description="compression accuracy-vs-airtime Pareto study")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale profile (40 clients, 80 rounds)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

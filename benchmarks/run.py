@@ -26,6 +26,8 @@ SUITES = {
              "adaptive mode policy vs fixed transports across scenarios"),
     "fl_round": ("benchmarks.fl_round",
                  "uplink-vs-downlink error budget (Qu et al. asymmetry)"),
+    "compression": ("benchmarks.compression",
+                    "sparse top-k+EF uplink accuracy-vs-airtime Pareto"),
 }
 
 

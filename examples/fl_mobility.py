@@ -16,11 +16,20 @@ reaches each client through its own downlink channel at the uplink SNR +
 OFFSET_DB, with per-client downlink modes picked from the same policy table
 (``DownlinkConfig(adaptive=True)``); the telemetry grows downlink airtime
 and residual-BER columns.
+
+``--compress RATIO`` turns on sparse top-k + error-feedback uplinks at the
+given kept fraction (``repro.compress``): each round every client transmits
+only the largest coordinates of its accumulated gradient, values through
+the approx pipeline and indices on protected Gray-MSB bits. The telemetry
+grows compression-ratio / EF-residual-norm / bits-on-air columns (a
+scenario whose policy sets ``compress_ratios`` — e.g. ``iot-lowrate`` —
+compresses deeper in the low-SNR modes).
 """
 
 import argparse
 import dataclasses
 
+from repro.compress import CompressionConfig
 from repro.configs.mnist_cnn import config as cnn_config
 from repro.core import channel as CH
 from repro.core import transport as T
@@ -31,11 +40,11 @@ from repro.link import policy as policy_lib
 from repro.link import scenario as scenario_lib
 
 
-def _run(cfg, tcfg, data, scen, rounds):
+def _run(cfg, tcfg, data, scen, rounds, compression=None):
     cx, cy, ti, tl = data
     return run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=rounds,
                   batch_per_round=32, eval_every=max(2, rounds // 10),
-                  scenario=scen)
+                  scenario=scen, compression=compression)
 
 
 def main():
@@ -51,6 +60,10 @@ def main():
                     help="add a noisy adaptive broadcast downlink at uplink "
                          "SNR + OFFSET_DB (per-client mode via the policy "
                          "table)")
+    ap.add_argument("--compress", type=float, default=None, metavar="RATIO",
+                    help="sparse top-k + error-feedback uplinks keeping this "
+                         "fraction of coordinates (e.g. 0.02 = 50x fewer "
+                         "slots); indices ride protected Gray-MSB bits")
     args = ap.parse_args()
 
     (img, lab), (ti, tl) = synth_mnist.train_test(300, 60)
@@ -64,6 +77,8 @@ def main():
     if args.downlink is not None:
         scen = dataclasses.replace(scen, downlink=scenario_lib.DownlinkConfig(
             mode="approx", snr_offset_db=args.downlink, adaptive=True))
+    compression = (CompressionConfig(method="topk", ratio=args.compress)
+                   if args.compress is not None else scen.compression)
     print(f"scenario '{scen.name}': {scen.description}")
     mode_names = ["/".join(m) for m in scen.policy.modes]
     print(f"{args.clients} clients, modes: {mode_names}, "
@@ -73,19 +88,30 @@ def main():
         print(f"downlink: {scen.downlink.mode} at uplink SNR "
               f"{scen.downlink.snr_offset_db:+.1f} dB "
               f"(adaptive={scen.downlink.adaptive})")
+    if compression is not None:
+        ratios = (scen.policy.compress_ratios
+                  if scen.policy.compress_ratios is not None
+                  else f"flat {compression.ratio}")
+        print(f"compression: {compression.method}+EF, ratios {ratios}, "
+              f"header {compression.header}")
     print()
 
-    res = _run(cfg, tcfg, data, scen, args.rounds)
+    res = _run(cfg, tcfg, data, scen, args.rounds, compression)
     dl_cols = "  dl airtime   dl BER" if scen.downlink is not None else ""
+    cp_cols = ("    kept  res.norm  bits-on-air" if compression is not None
+               else "")
     print(f"{'round':>5} {'mean SNR':>9} {'est SNR':>8} {'active':>6} "
-          f"{'airtime':>9}{dl_cols}  mode mix {mode_names}")
+          f"{'airtime':>9}{dl_cols}{cp_cols}  mode mix {mode_names}")
     step = max(1, len(res.link) // 12)
     for t in res.link[::step]:
         dl = (f" {t['downlink_airtime_s'] * 1e3:9.2f}ms {t['downlink_ber']:.1e}"
               if "downlink_airtime_s" in t else "")
+        cp = (f"  {t['comp_ratio']:6.3f} {t['comp_residual_norm']:9.3f} "
+              f"{t['comp_bits_on_air']:12.3g}"
+              if "comp_ratio" in t else "")
         print(f"{t['round']:5d} {t['mean_snr_db']:8.1f}dB "
               f"{t['mean_est_db']:7.1f}dB {t['n_active']:6d} "
-              f"{t['airtime_s'] * 1e3:8.2f}ms{dl}  {t['mode_counts']}")
+              f"{t['airtime_s'] * 1e3:8.2f}ms{dl}{cp}  {t['mode_counts']}")
     print(f"\nadaptive: final_acc={res.final_accuracy:.3f} "
           f"airtime={res.airtime_s[-1]:.2f}s wall={res.wall_s:.0f}s")
 
@@ -95,7 +121,8 @@ def main():
                          ("fixed ecrt/qpsk",
                           policy_lib.fixed_policy("ecrt", "qpsk"))):
             r = _run(cfg, tcfg, data,
-                     dataclasses.replace(scen, policy=pol), args.rounds)
+                     dataclasses.replace(scen, policy=pol), args.rounds,
+                     compression)
             print(f"{arm}: final_acc={r.final_accuracy:.3f} "
                   f"airtime={r.airtime_s[-1]:.2f}s")
 

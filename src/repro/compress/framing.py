@@ -1,0 +1,398 @@
+"""Sparse wire format: protected index header + approximate value payload.
+
+A sparse uplink carries two legs per client, both on the same radio:
+
+* **value payload** — the ``(k,)`` selected values ride the *existing*
+  transport pipeline unchanged (MSB-first packing + Gray-QAM + exponent
+  clamp for ``approx``, LDPC for ``ecrt``, ...) under the client's
+  transport key. A flipped value bit costs one coordinate a bounded error —
+  the paper's whole premise.
+* **index header** — the ``(k,)`` coordinate indices are *structural*: a
+  flipped index bit scatters a value to the wrong coordinate, so the header
+  gets more protection than the values. Three schemes
+  (``CompressionConfig.header``):
+
+  - ``"gray"`` — each header bit rides one of the two most-protected
+    Gray-constellation positions (``b0``/``b1`` — the I and Q Gray MSBs,
+    which share the lowest bit-error probability of the scheme; see
+    ``modulation.py``). Two header bits per symbol whatever the
+    modulation order; the remaining positions transmit zero. No coding
+    overhead, lowest uncoded BER the constellation offers.
+  - ``"ecrt"`` — indices pack into 32-bit words, bitcast to float32, and
+    ride the rate-1/2 LDPC transport (analytic model by default: bits
+    exact, airtime priced at the calibrated E[transmissions]).
+  - ``"perfect"`` — an error-free control channel; still priced on the
+    air at full constellation packing.
+
+The receiver unpacks the header, drops indices that land out of range
+(corrupted headers cannot write outside the payload), and scatters the
+received values back to a dense vector.
+
+Key schedule: the value leg uses the client's transport key directly; the
+header leg uses ``fold_in(client_key, HEADER_KEY_LANE)``; rand-k selection
+(upstream) uses ``fold_in(client_key, SELECT_KEY_LANE)``. All three are
+derived from the same per-client fold_in key, so
+:func:`transmit_sparse_batch` is bit-identical to a per-client loop of
+:func:`transmit_sparse` — the engine-wide batching contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import sparsify as sparsify_lib
+from repro.core import float_codec as fc
+from repro.core import modulation as mod_lib
+from repro.core import transport as transport_lib
+
+__all__ = [
+    "HEADER_KEY_LANE",
+    "index_bits",
+    "pack_index_bits",
+    "unpack_index_bits",
+    "transmit_header",
+    "scatter_received",
+    "transmit_sparse",
+    "transmit_sparse_batch",
+    "sparse_batch_with_keys",
+    "transmit_sparse_batch_adaptive",
+]
+
+# fold_in lane (applied to a *client* key) where the index header draws its
+# channel realization; far above chunk indices and distinct from
+# sparsify.SELECT_KEY_LANE, so the per-client derivations never collide.
+HEADER_KEY_LANE = 1 << 21
+
+
+def _default_compression(compression):
+    return (sparsify_lib.CompressionConfig() if compression is None
+            else compression)
+
+
+def index_bits(dim: int) -> int:
+    """Bits needed to address a coordinate of a ``dim``-vector (>= 1)."""
+    return max(1, int(dim - 1).bit_length())
+
+
+def pack_index_bits(indices: jax.Array, dim: int) -> jax.Array:
+    """Pack ``(k,)`` indices into uint32 words, MSB-first.
+
+    Each index contributes ``index_bits(dim)`` bits; the flat bit stream is
+    zero-padded to a word boundary. Inverse: :func:`unpack_index_bits`.
+    """
+    b = index_bits(dim)
+    shifts = jnp.uint32(b - 1 - jnp.arange(b))
+    bits = ((indices.astype(jnp.uint32)[:, None] >> shifts)
+            & jnp.uint32(1)).reshape(-1)
+    pad = (-bits.shape[0]) % 32
+    w = jnp.pad(bits, (0, pad)).reshape(-1, 32)
+    wshift = jnp.uint32(31 - jnp.arange(32))
+    return jnp.sum(w.astype(jnp.uint32) << wshift, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_index_bits(words: jax.Array, k: int, dim: int) -> jax.Array:
+    """Inverse of :func:`pack_index_bits`: uint32 words -> ``(k,)`` int32."""
+    b = index_bits(dim)
+    wshift = jnp.uint32(31 - jnp.arange(32))
+    bits = ((words[:, None] >> wshift) & jnp.uint32(1)).reshape(-1)[: k * b]
+    shifts = jnp.uint32(b - 1 - jnp.arange(b))
+    return jnp.sum(
+        bits.reshape(k, b).astype(jnp.uint32) << shifts, axis=-1,
+        dtype=jnp.uint32).astype(jnp.int32)
+
+
+def _index_bit_vector(indices: jax.Array, dim: int) -> jax.Array:
+    """Flat ``(k * index_bits,)`` 0/1 header bit stream, MSB-first."""
+    b = index_bits(dim)
+    shifts = jnp.uint32(b - 1 - jnp.arange(b))
+    return ((indices.astype(jnp.uint32)[:, None] >> shifts)
+            & jnp.uint32(1)).reshape(-1)
+
+
+def _header_gray(indices, dim, key, cfg, snr_db):
+    """Gray-MSB header leg: 2 header bits per symbol at the best positions.
+
+    Header bit pairs land on ``b0``/``b1`` of each symbol index — the I and
+    Q Gray MSBs, the two equally-most-protected positions of a square Gray
+    QAM — and every less-protected position transmits zero. Returns
+    ``(idx_rx, symbols, extra_tx, bit_errors, n_bits, bits_on_air)``.
+    """
+    k = indices.shape[0]
+    b = index_bits(dim)
+    km = cfg.scheme.bits_per_symbol
+    bits = _index_bit_vector(indices, dim)
+    n_hdr = bits.shape[0]
+    pad = (-n_hdr) % 2
+    bp = jnp.pad(bits, (0, pad)).reshape(-1, 2)
+    sym = ((bp[:, 0] << jnp.uint32(km - 1))
+           | (bp[:, 1] << jnp.uint32(km - 2))).astype(jnp.uint32)
+    y, _ = transport_lib._through_channel(sym, key, cfg, snr_db)
+    rx = mod_lib.demod_hard(y, cfg.scheme)
+    b0 = (rx >> jnp.uint32(km - 1)) & jnp.uint32(1)
+    b1 = (rx >> jnp.uint32(km - 2)) & jnp.uint32(1)
+    bits_rx = jnp.stack([b0, b1], axis=-1).reshape(-1)[:n_hdr]
+    errs = jnp.sum((bits_rx != bits).astype(jnp.float32))
+    shifts = jnp.uint32(b - 1 - jnp.arange(b))
+    idx_rx = jnp.sum(
+        bits_rx.reshape(k, b).astype(jnp.uint32) << shifts, axis=-1,
+        dtype=jnp.uint32).astype(jnp.int32)
+    n_sym = sym.shape[0]
+    return idx_rx, n_sym, 0.0, errs, n_hdr, n_sym * km
+
+
+def _header_ecrt(indices, dim, key, cfg, compression, snr_db):
+    """ECRT header leg: packed index words through the LDPC transport."""
+    k = indices.shape[0]
+    words = pack_index_bits(indices, dim)
+    hcfg = dataclasses.replace(
+        cfg, mode="ecrt", use_kernel=False, chunk_elems=0,
+        simulate_fec=compression.header_simulate_fec,
+        ecrt_expected_tx=compression.header_ecrt_expected_tx)
+    x = fc.bits_to_f32(words)
+    x_hat, st = transport_lib.transmit_flat(x, key, hcfg, snr_db=snr_db)
+    idx_rx = unpack_index_bits(fc.f32_to_bits(x_hat), k, dim)
+    return (idx_rx, st.data_symbols, st.transmissions - 1.0, st.bit_errors,
+            st.n_bits, st.bits_on_air)
+
+
+def _header_perfect(indices, dim, cfg):
+    """Error-free control-channel header, still priced on the air."""
+    k = indices.shape[0]
+    b = index_bits(dim)
+    km = cfg.scheme.bits_per_symbol
+    n_sym = -(-k * b // km)  # full constellation packing
+    return (indices.astype(jnp.int32), float(n_sym), 0.0, 0.0,
+            float(k * b), float(n_sym * km))
+
+
+def transmit_header(indices: jax.Array, dim: int, key: jax.Array, cfg,
+                    compression=None, *, snr_db=None):
+    """Carry one client's index header over its protected leg.
+
+    ``cfg`` is the client's (value-leg) :class:`TransportConfig` — the
+    header shares its constellation and channel. Returns ``(idx_rx,
+    header_parts)`` where ``header_parts = (symbols, extra_transmissions,
+    bit_errors, n_bits, bits_on_air)`` feeds the combined
+    :class:`~repro.core.transport.TxStats`.
+    """
+    compression = _default_compression(compression)
+    if compression.header == "gray":
+        out = _header_gray(indices, dim, key, cfg, snr_db)
+    elif compression.header == "ecrt":
+        out = _header_ecrt(indices, dim, key, cfg, compression, snr_db)
+    else:
+        out = _header_perfect(indices, dim, cfg)
+    return out[0], tuple(jnp.asarray(v, jnp.float32) for v in out[1:])
+
+
+def scatter_received(values: jax.Array, idx_rx: jax.Array, dim: int
+                     ) -> jax.Array:
+    """Receiver-side scatter with a corrupted-header guard.
+
+    Received indices that land out of range (possible only when the header
+    leg flipped bits) are dropped; in-range duplicates accumulate — the
+    damage a corrupted header can do is bounded to the slots it occupied.
+    """
+    valid = idx_rx < dim
+    vals = jnp.where(valid, values, 0.0)
+    idx = jnp.where(valid, idx_rx, 0)
+    return jnp.zeros((dim,), vals.dtype).at[idx].add(vals, mode="drop")
+
+
+def transmit_sparse(values: jax.Array, indices: jax.Array, dim: int,
+                    key: jax.Array, cfg, compression=None, *, snr_db=None):
+    """One client's sparse uplink: values + protected index header.
+
+    Args:
+      values: ``(k,)`` selected values (cast to float32).
+      indices: ``(k,)`` coordinate indices in ``[0, dim)``.
+      dim: dense payload dimension the receiver scatters back to.
+      key: the client's transport key — the value leg consumes it directly
+        (same schedule as a dense uplink); the header leg uses
+        ``fold_in(key, HEADER_KEY_LANE)``.
+      cfg: value-leg :class:`~repro.core.transport.TransportConfig`; the
+        header shares its constellation/channel.
+      compression: :class:`~repro.compress.sparsify.CompressionConfig`
+        choosing the header protection (default if ``None``).
+      snr_db: optional scalar SNR override, threaded to both legs.
+
+    Returns:
+      ``(x_hat, stats)``: the dense ``(dim,)`` reconstruction and a single
+      :class:`~repro.core.transport.TxStats` whose ``data_symbols`` /
+      ``bit_errors`` / ``n_bits`` / ``bits_on_air`` sum the two legs (so
+      ``latency.round_airtime`` prices the sparse frame end to end) and
+      whose ``transmissions`` counts one PHY frame plus any header
+      retransmissions.
+    """
+    compression = _default_compression(compression)
+    values = jnp.asarray(values, jnp.float32)
+    k_hdr = jax.random.fold_in(key, HEADER_KEY_LANE)
+    v_hat, vs = transport_lib.transmit_flat(values, key, cfg, snr_db=snr_db)
+    idx_rx, (h_sym, h_xtx, h_err, h_bits, h_boa) = transmit_header(
+        indices, dim, k_hdr, cfg, compression, snr_db=snr_db)
+    dense = scatter_received(v_hat, idx_rx, dim)
+    stats = transport_lib.TxStats(
+        vs.data_symbols + h_sym, vs.transmissions + h_xtx,
+        vs.bit_errors + h_err, vs.n_bits + h_bits,
+        bits_on_air=vs.bits_on_air + h_boa)
+    return dense, stats
+
+
+def sparse_batch_with_keys(values: jax.Array, indices: jax.Array, dim: int,
+                           keys: jax.Array, cfg, snr_vec, compression=None):
+    """Sparse batch over explicit per-client keys (the bucketed hook).
+
+    The sparse analogue of ``transport._batch_with_keys``: one ``vmap`` of
+    :func:`transmit_sparse`, so batch semantics equal loop semantics by
+    construction. ``snr_vec`` is ``None`` (homogeneous) or
+    ``(num_clients,)``.
+    """
+    compression = _default_compression(compression)
+    if snr_vec is None:
+        return jax.vmap(
+            lambda v, i, kc: transmit_sparse(v, i, dim, kc, cfg, compression)
+        )(values, indices, keys)
+    return jax.vmap(
+        lambda v, i, kc, s: transmit_sparse(v, i, dim, kc, cfg, compression,
+                                            snr_db=s)
+    )(values, indices, keys, snr_vec)
+
+
+@functools.lru_cache(maxsize=256)
+def _cached_sparse_fn(cfg, compression, dim: int, with_snr: bool):
+    """One jitted sparse batch per (config, compression, dim, snr-arity)."""
+    if with_snr:
+        return jax.jit(lambda v, i, kk, s: sparse_batch_with_keys(
+            v, i, dim, kk, cfg, s, compression))
+    return jax.jit(lambda v, i, kk: sparse_batch_with_keys(
+        v, i, dim, kk, cfg, None, compression))
+
+
+def _sparse_fn(cfg, compression, dim, with_snr):
+    try:
+        return _cached_sparse_fn(cfg, compression, dim, with_snr)
+    except TypeError:
+        # Unhashable config (array-valued channel snr_db): unjitted fallback.
+        if with_snr:
+            return lambda v, i, kk, s: sparse_batch_with_keys(
+                v, i, dim, kk, cfg, s, compression)
+        return lambda v, i, kk: sparse_batch_with_keys(
+            v, i, dim, kk, cfg, None, compression)
+
+
+def transmit_sparse_batch(values: jax.Array, indices: jax.Array, dim: int,
+                          key: jax.Array, cfg, compression=None, *,
+                          snr_db=None, client_offset=0):
+    """Batched sparse uplink under the engine-wide fold_in key schedule.
+
+    Client ``i`` uses ``fold_in(key, client_offset + i)`` (shared with the
+    dense :func:`~repro.core.transport.transmit_batch`), so the batch is
+    bit-identical to a per-client loop of :func:`transmit_sparse` over the
+    same schedule. Returns ``(x_hat (M, dim), stats)`` with per-client
+    :class:`~repro.core.transport.TxStats` fields.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    if values.ndim != 2 or values.shape != indices.shape:
+        raise ValueError(
+            f"transmit_sparse_batch wants matching (num_clients, k) values/"
+            f"indices; got {values.shape} vs {jnp.shape(indices)}")
+    num_clients = values.shape[0]
+    snr_vec = transport_lib._resolve_batch_snr(cfg, num_clients, snr_db)
+    keys = transport_lib.client_keys(key, num_clients, client_offset)
+    fn = _sparse_fn(cfg, _default_compression(compression), int(dim),
+                    snr_vec is not None)
+    return fn(values, indices, keys) if snr_vec is None else fn(
+        values, indices, keys, snr_vec)
+
+
+def transmit_sparse_batch_adaptive(values: jax.Array, indices: jax.Array,
+                                   dim: int, key: jax.Array, cfgs, mode_idx,
+                                   compression=None, *, snr_db=None,
+                                   client_offset=0, dispatch: str = "auto"):
+    """Mixed-mode sparse uplink: client ``i``'s values ride ``cfgs[mode_idx[i]]``.
+
+    The sparse analogue of
+    :func:`~repro.core.transport.transmit_batch_adaptive` with a uniform
+    slot budget ``k`` across modes (per-mode budgets — the CSI-adaptive
+    compression column — are handled upstream by the FL engine's bucketed
+    round, which must also scale each bucket's values independently).
+    ``"bucketed"`` gathers per-mode client buckets and runs each mode's
+    sparse batch once; ``"select"`` is a vmapped ``lax.switch`` usable with
+    a traced ``mode_idx`` (kernel rows rejected, as in the dense engine).
+    The fold_in key rides the client index, so both dispatches are
+    bit-identical to a per-client :func:`transmit_sparse` loop.
+    """
+    compression = _default_compression(compression)
+    values = jnp.asarray(values, jnp.float32)
+    if values.ndim != 2 or values.shape != indices.shape:
+        raise ValueError(
+            f"transmit_sparse_batch_adaptive wants matching (num_clients, k) "
+            f"values/indices; got {values.shape} vs {jnp.shape(indices)}")
+    cfgs = tuple(cfgs)
+    if not cfgs:
+        raise ValueError("transmit_sparse_batch_adaptive needs a config table")
+    num_clients = values.shape[0]
+    mode_concrete = not isinstance(mode_idx, jax.core.Tracer)
+    if dispatch == "auto":
+        dispatch = "bucketed" if mode_concrete else "select"
+    if dispatch == "select" and any(c.use_kernel for c in cfgs):
+        raise ValueError(
+            "use_kernel configs cannot take the select dispatch (see "
+            "transport.transmit_batch_adaptive); clear them or go bucketed")
+    snr_vec = transport_lib._resolve_batch_snr(cfgs[0], num_clients, snr_db)
+    keys = transport_lib.client_keys(key, num_clients, client_offset)
+
+    if dispatch == "select":
+        mode_arr = jnp.clip(jnp.asarray(mode_idx, jnp.int32), 0,
+                            len(cfgs) - 1)
+        if snr_vec is None:
+            branches = [
+                lambda v, i, kc, cfg=cfg: transmit_sparse(
+                    v, i, dim, kc, cfg, compression) for cfg in cfgs]
+            dense, stats = jax.vmap(
+                lambda v, i, kc, m: jax.lax.switch(m, branches, v, i, kc)
+            )(values, indices, keys, mode_arr)
+        else:
+            branches = [
+                lambda v, i, kc, s, cfg=cfg: transmit_sparse(
+                    v, i, dim, kc, cfg, compression, snr_db=s)
+                for cfg in cfgs]
+            dense, stats = jax.vmap(
+                lambda v, i, kc, s, m: jax.lax.switch(m, branches, v, i, kc, s)
+            )(values, indices, keys, snr_vec, mode_arr)
+        stats.mode_idx = jnp.asarray(mode_arr, jnp.int32)
+        return dense, stats
+
+    if dispatch != "bucketed":
+        raise ValueError(f"unknown dispatch {dispatch!r}; use bucketed|select")
+    mode_np = np.clip(np.asarray(mode_idx, np.int32), 0, len(cfgs) - 1)
+    if mode_np.shape != (num_clients,):
+        raise ValueError(
+            f"mode_idx must be ({num_clients},); got {mode_np.shape}")
+    order = np.argsort(mode_np, kind="stable")
+    counts = np.bincount(mode_np, minlength=len(cfgs))
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    parts_x, parts_st = [], []
+    for m, cfg in enumerate(cfgs):
+        count = int(counts[m])
+        if count == 0:
+            continue
+        rows = jnp.asarray(order[starts[m]: starts[m] + count])
+        fn = _sparse_fn(cfg, compression, int(dim), snr_vec is not None)
+        args = (jnp.take(values, rows, axis=0), jnp.take(indices, rows, axis=0),
+                jnp.take(keys, rows, axis=0))
+        if snr_vec is not None:
+            args = args + (jnp.take(snr_vec, rows),)
+        xh, st = fn(*args)
+        parts_x.append(xh)
+        parts_st.append(st)
+    dense, stats, _ = transport_lib._scatter_bucket_parts(
+        parts_x, parts_st, order, num_clients)
+    stats.mode_idx = jnp.asarray(mode_np, jnp.int32)
+    return dense, stats

@@ -1,0 +1,274 @@
+"""Gradient sparsification with error-feedback residual memory.
+
+The uplink so far ships every coordinate of the gradient; the only airtime
+lever is the modulation order. Ma et al. (arXiv:2404.11035) extend the
+paper's approximate scheme to lossy sparse updates for IoT devices, and
+Amiri & Gündüz (arXiv:1907.09769) establish sparsification with error
+accumulation as the standard pre-transmission step for FL over fading
+channels. This module is that step, made explicit and jit-friendly:
+
+* **selection** — ``topk`` (largest-|value| coordinates, deterministic
+  lower-index tie-break), ``randk`` (a keyed uniform subset), and
+  ``threshold`` (top-k capacity with a magnitude floor: slots whose
+  magnitude falls below ``threshold`` transmit zero and leave their value
+  in the residual). Every method returns a *fixed-size* ``(k,)`` value /
+  index pair — ragged selections do not batch, and the sparse wire format
+  (:mod:`repro.compress.framing`) prices a fixed slot budget.
+* **error feedback** — each client keeps a dense residual of everything it
+  has not yet transmitted. Per round: ``acc = residual + gradient``,
+  selection reads ``acc``, and the new residual is ``acc`` with the
+  *transmitted values subtracted exactly* — so transmitted + residual is
+  bit-identical to the accumulated gradient (the EF identity the tests
+  pin), and no mass is ever silently dropped.
+
+Determinism: ``select_topk`` orders candidates with ``jnp.lexsort`` on
+``(-|value|, index)``, so equal magnitudes resolve to the lower index both
+inside and outside ``jit`` — the bucketed and select FL dispatches see the
+same selection for the same accumulated gradient.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SELECT_KEY_LANE",
+    "CompressionConfig",
+    "resolve_k",
+    "select_topk",
+    "select_randk",
+    "select_threshold",
+    "select",
+    "select_batch",
+    "scatter_dense",
+    "scatter_dense_batch",
+    "ef_select",
+    "ef_select_batch",
+    "selection_keys",
+]
+
+# fold_in lane (applied to a *client* key) from which rand-k selection draws
+# its subset. Lives far above the chunk indices that
+# ``transport._uncoded_chunked`` folds onto the same client key, and is
+# distinct from the framing header lane, so the three per-client derivations
+# never collide.
+SELECT_KEY_LANE = (1 << 21) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """How a client compresses its uplink payload before the sparse wire.
+
+    ``method``
+        ``"topk"`` (largest-magnitude coordinates of the accumulated
+        gradient; deterministic lower-index tie-break), ``"randk"`` (keyed
+        uniform subset — unbiased in expectation, no sorting cost), or
+        ``"threshold"`` (top-k slot budget with a magnitude floor; see
+        :func:`select_threshold`).
+    ``ratio`` / ``k``
+        Slot budget: ``k`` coordinates are transmitted per client per
+        round. ``k=None`` (default) derives it as ``max(1, round(ratio *
+        dim))``; an explicit ``k`` wins. Scenario-driven runs may override
+        the ratio per link mode via ``PolicyConfig.compress_ratios`` (the
+        CSI-adaptive column — deeper compression at low SNR).
+    ``threshold``
+        Magnitude floor for ``method="threshold"``; ignored otherwise.
+    ``error_feedback``
+        Keep the exact untransmitted remainder in a per-client residual and
+        fold it into the next round's selection (the EF carry). ``False``
+        discards the remainder every round (plain biased sparsification).
+    ``header``
+        How the index header rides the wire (:mod:`repro.compress.framing`):
+        ``"gray"`` packs two header bits per symbol into the constellation's
+        two most-protected Gray positions; ``"ecrt"`` sends the packed index
+        words through the rate-1/2 LDPC transport (bits exact under the
+        analytic model); ``"perfect"`` models an error-free control channel
+        (still priced on the air).
+    ``header_ecrt_expected_tx`` / ``header_simulate_fec``
+        ECRT-header pricing: the calibrated E[transmissions] constant for
+        the analytic model, or ``header_simulate_fec=True`` to run the real
+        LDPC chain (outside FL loops only — it decodes every round).
+    """
+
+    method: str = "topk"  # topk | randk | threshold
+    ratio: float = 0.02
+    k: int | None = None
+    threshold: float = 0.0
+    error_feedback: bool = True
+    header: str = "gray"  # gray | ecrt | perfect
+    header_ecrt_expected_tx: float = 1.0
+    header_simulate_fec: bool = False
+
+    def __post_init__(self):
+        if self.method not in ("topk", "randk", "threshold"):
+            raise ValueError(
+                f"unknown compression method {self.method!r}; "
+                "use topk|randk|threshold")
+        if self.header not in ("gray", "ecrt", "perfect"):
+            raise ValueError(
+                f"unknown header protection {self.header!r}; "
+                "use gray|ecrt|perfect")
+        if self.k is None and not 0.0 < self.ratio <= 1.0:
+            raise ValueError(f"ratio must be in (0, 1], got {self.ratio}")
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+
+
+def resolve_k(cfg: CompressionConfig, dim: int) -> int:
+    """The per-client slot budget for a ``dim``-coordinate payload."""
+    if cfg.k is not None:
+        return min(int(cfg.k), dim)
+    return max(1, min(dim, int(round(cfg.ratio * dim))))
+
+
+def select_topk(x: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """The ``k`` largest-|value| coordinates, deterministic tie-break.
+
+    Candidates are ordered by ``lexsort`` on ``(-|x|, index)`` — equal
+    magnitudes resolve to the lower index, identically under jit and eager
+    execution (plain ``top_k`` leaves that to the backend). Returns
+    ``(values, indices)`` with indices sorted ascending (the canonical wire
+    order — the framing layer packs them in this order).
+    """
+    n = x.shape[0]
+    order = jnp.lexsort((jnp.arange(n), -jnp.abs(x)))
+    idx = jnp.sort(order[:k]).astype(jnp.int32)
+    return x[idx], idx
+
+
+def select_randk(x: jax.Array, k: int, key: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """A keyed uniform ``k``-subset of coordinates (without replacement).
+
+    The subset depends only on ``key`` and the dimension, never on the
+    values — the rand-k compressor of Amiri & Gündüz. Returns ``(values,
+    indices)``, indices ascending.
+    """
+    n = x.shape[0]
+    idx = jnp.sort(jax.random.permutation(key, n)[:k]).astype(jnp.int32)
+    return x[idx], idx
+
+
+def select_threshold(x: jax.Array, k: int, threshold: float
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Magnitude thresholding under a fixed ``k``-slot budget.
+
+    Takes the top-``k`` coordinates (deterministic, as
+    :func:`select_topk`), then zeroes every selected value whose magnitude
+    falls below ``threshold`` — those slots still occupy wire capacity
+    (fixed framing) but transmit zero, and error feedback keeps their true
+    value in the residual. The effective selection is therefore
+    ``min(k, #{|x| >= threshold})`` coordinates.
+    """
+    vals, idx = select_topk(x, k)
+    return jnp.where(jnp.abs(vals) >= threshold, vals, 0.0), idx
+
+
+def select(x: jax.Array, k: int, cfg: CompressionConfig, key=None
+           ) -> tuple[jax.Array, jax.Array]:
+    """Dispatch one client's selection by ``cfg.method``.
+
+    ``key`` is required for ``randk`` (see :func:`selection_keys` for the
+    schedule the FL engine uses) and ignored otherwise.
+    """
+    if cfg.method == "topk":
+        return select_topk(x, k)
+    if cfg.method == "randk":
+        if key is None:
+            raise ValueError("method='randk' needs a selection key")
+        return select_randk(x, k, key)
+    return select_threshold(x, k, cfg.threshold)
+
+
+def select_batch(x: jax.Array, k: int, cfg: CompressionConfig, keys=None
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Per-client selection over a ``(num_clients, dim)`` matrix.
+
+    One ``vmap`` of :func:`select` — batched selection is bit-identical to
+    a per-client loop. ``keys``: ``(num_clients, key_size)`` for ``randk``.
+    Returns ``(values, indices)`` of shape ``(num_clients, k)``.
+    """
+    if cfg.method == "randk":
+        if keys is None:
+            raise ValueError("method='randk' needs per-client selection keys")
+        return jax.vmap(lambda xc, kc: select(xc, k, cfg, kc))(x, keys)
+    return jax.vmap(lambda xc: select(xc, k, cfg))(x)
+
+
+def scatter_dense(values: jax.Array, indices: jax.Array, dim: int
+                  ) -> jax.Array:
+    """Scatter ``(k,)`` sparse values back to a dense ``(dim,)`` vector.
+
+    Out-of-range indices are dropped (the receiver's guard against a
+    corrupted index header); duplicate indices accumulate — with an intact
+    header, selections never repeat an index, so the transmitter-side
+    scatter is exact.
+    """
+    return jnp.zeros((dim,), values.dtype).at[indices].add(
+        values, mode="drop")
+
+
+def scatter_dense_batch(values: jax.Array, indices: jax.Array, dim: int
+                        ) -> jax.Array:
+    """Batched :func:`scatter_dense`: ``(M, k)`` pairs -> ``(M, dim)``."""
+    return jax.vmap(lambda v, i: scatter_dense(v, i, dim))(values, indices)
+
+
+def ef_select(residual: jax.Array, grad: jax.Array, k: int,
+              cfg: CompressionConfig, key=None, active=None):
+    """One client's error-feedback selection step.
+
+    Accumulates ``acc = residual + grad`` (or just ``grad`` when error
+    feedback is off), selects ``k`` slots from ``acc``, and returns
+    ``(values, indices, new_residual)`` where ``new_residual`` is ``acc``
+    with the transmitted values subtracted *exactly*: ``scatter(values) +
+    new_residual == acc`` bit-for-bit (the gather/scatter pair cancels in
+    IEEE arithmetic — no rounding is introduced).
+
+    ``active`` (0/1 scalar) models client availability: a dropped client
+    never transmitted, so its residual keeps the whole accumulation
+    (``new_residual = acc``) instead of losing the selected mass.
+    """
+    acc = residual + grad if cfg.error_feedback else grad
+    vals, idx = select(acc, k, cfg, key)
+    if not cfg.error_feedback:
+        return vals, idx, jnp.zeros_like(residual)
+    sent = scatter_dense(vals, idx, acc.shape[0])
+    if active is not None:
+        sent = sent * active
+    return vals, idx, acc - sent
+
+
+def ef_select_batch(residual: jax.Array, grads: jax.Array, k: int,
+                    cfg: CompressionConfig, keys=None, active=None):
+    """Batched :func:`ef_select` over ``(num_clients, dim)`` matrices.
+
+    ``active``: optional ``(num_clients,)`` 0/1 availability vector (see
+    :func:`ef_select`). Returns ``(values (M, k), indices (M, k),
+    new_residual (M, dim))``.
+    """
+    acc = residual + grads if cfg.error_feedback else grads
+    vals, idx = select_batch(acc, k, cfg, keys)
+    if not cfg.error_feedback:
+        return vals, idx, jnp.zeros_like(residual)
+    sent = scatter_dense_batch(vals, idx, acc.shape[1])
+    if active is not None:
+        sent = sent * active[:, None]
+    return vals, idx, acc - sent
+
+
+def selection_keys(key: jax.Array, num_clients: int, offset=0) -> jax.Array:
+    """Per-client rand-k selection keys on the reserved fold_in lane.
+
+    Client ``i`` draws ``fold_in(fold_in(key, offset + i),
+    SELECT_KEY_LANE)`` — derived from the *client* transport key, so the
+    selection is identical whichever dispatch (batched, bucketed, select,
+    per-client loop) carries the round.
+    """
+    idx = jnp.arange(num_clients) + offset
+    return jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.fold_in(key, i),
+                                     SELECT_KEY_LANE))(idx)

@@ -70,6 +70,21 @@ client ``i`` draws ``fold_in(key, DOWNLINK_KEY_LANE + i)`` instead of
 broadcast leg and the two legs' fading/noise realizations stay independent
 — and, critically, adding a downlink leg leaves every uplink draw of an
 existing run untouched (no extra ``jax.random.split`` is consumed).
+
+Sparse uplinks
+--------------
+``transmit_sparse`` / ``transmit_sparse_batch`` carry a *compressed* payload:
+``k`` selected values plus their coordinate indices (see
+:mod:`repro.compress`). The value payload rides the existing pipeline
+(MSB-first/Gray-QAM for uncoded modes, LDPC for ECRT) under the client's
+transport key; the index header rides protected bits (the constellation's
+two most-protected Gray positions, an ECRT-coded leg, or an error-free
+control channel) under ``fold_in(client_key, HEADER_KEY_LANE)``. The
+batched form shares :func:`client_keys`' fold_in schedule, so it is
+bit-identical to a per-client loop of ``transmit_sparse`` — the same
+contract as the dense engine. These entry points delegate to
+``repro.compress.framing`` (imported lazily to keep ``core`` free of an
+upward dependency).
 """
 
 from __future__ import annotations
@@ -99,6 +114,8 @@ __all__ = [
     "transmit_pytree_batch",
     "transmit_batch_adaptive",
     "transmit_pytree_batch_adaptive",
+    "transmit_sparse",
+    "transmit_sparse_batch",
     "transmit_broadcast",
     "transmit_broadcast_adaptive",
     "transmit_pytree_broadcast",
@@ -162,6 +179,13 @@ class TxStats:
       (32 for float32 wire, 16 for bfloat16). FEC parity and retransmitted
       copies are *not* counted here — they show up in ``data_symbols`` only,
       so ``ber = bit_errors / n_bits`` is the end-to-end payload BER.
+    * ``bits_on_air`` — bits actually put **on the air**:
+      ``data_symbols * bits_per_symbol`` of the scheme, so FEC parity,
+      retransmissions, and the sparse framing's index header all count,
+      and the value is exactly proportional to data airtime. Equals
+      ``n_bits`` for uncoded dense modes; ``2 * n_bits * E[tx]`` for ECRT;
+      value + header bits for sparse uplinks — the telemetry axis the
+      compression subsystem's 10–50x reduction is measured on.
 
     Fields are float32 jnp scalars for a single uplink (``transmit_flat``),
     or ``(num_clients,)`` arrays for a batched one (``transmit_batch``) —
@@ -179,15 +203,18 @@ class TxStats:
     bit_errors: jax.Array  # residual bit errors after the receiver pipeline
     n_bits: jax.Array
     mode_idx: Any = None  # (num_clients,) int32 for adaptive batches
+    bits_on_air: Any = None  # total bits on air (payload + header + parity)
 
     @property
     def ber(self) -> jax.Array:
         return self.bit_errors / jnp.maximum(self.n_bits, 1)
 
 
-def _stats(data_symbols, transmissions, bit_errors, n_bits) -> TxStats:
+def _stats(data_symbols, transmissions, bit_errors, n_bits,
+           bits_on_air=None) -> TxStats:
     f = lambda v: jnp.asarray(v, jnp.float32)
-    return TxStats(f(data_symbols), f(transmissions), f(bit_errors), f(n_bits))
+    return TxStats(f(data_symbols), f(transmissions), f(bit_errors), f(n_bits),
+                   bits_on_air=None if bits_on_air is None else f(bits_on_air))
 
 
 def _through_channel(sym_stream: jax.Array, key: jax.Array, cfg: TransportConfig,
@@ -223,7 +250,7 @@ def _uncoded(x: jax.Array, key: jax.Array, cfg: TransportConfig, clamp: bool,
     # NOTE: bit_errors counts *post-clamp* discrepancies vs the true words —
     # the clamp can only reduce this count since the true exponent MSB is 0.
     out = fc.bits_to_bf16(u_hat).astype(jnp.float32) if wb == 16 else fc.bits_to_f32(u_hat)
-    return out, _stats(n * s_per_word, 1, bit_errors, n * wb)
+    return out, _stats(n * s_per_word, 1, bit_errors, n * wb, n * wb)
 
 
 def _ecrt_real(x: jax.Array, key: jax.Array, cfg: TransportConfig, snr_db=None):
@@ -279,7 +306,7 @@ def _ecrt_real(x: jax.Array, key: jax.Array, cfg: TransportConfig, snr_db=None):
     total_tx = jnp.sum(tx_count)
     return fc.bits_to_f32(u_hat), _stats(
         total_tx * sym_per_cw, jnp.mean(tx_count.astype(jnp.float32)),
-        bit_errors, n_words * 32,
+        bit_errors, n_words * 32, total_tx * sym_per_cw * k_mod,
     )
 
 
@@ -296,7 +323,8 @@ def _ecrt_analytic(x: jax.Array, cfg: TransportConfig):
     k_mod = cfg.scheme.bits_per_symbol
     coded_bits = 2 * n_bits  # rate 1/2
     sym = coded_bits / k_mod * cfg.ecrt_expected_tx
-    return x, _stats(sym, cfg.ecrt_expected_tx, 0, n_bits)
+    return x, _stats(sym, cfg.ecrt_expected_tx, 0, n_bits,
+                     coded_bits * cfg.ecrt_expected_tx)
 
 
 def _uncoded_chunked(x: jax.Array, key: jax.Array, cfg: TransportConfig,
@@ -324,7 +352,7 @@ def _uncoded_chunked(x: jax.Array, key: jax.Array, cfg: TransportConfig,
     pad_errs = jnp.sum(mod_lib.popcount(pad_bits))
     k = cfg.scheme.bits_per_symbol
     return x_hat[:n], _stats(
-        n * (wb // k), 1, jnp.sum(stats.bit_errors) - pad_errs, n * wb
+        n * (wb // k), 1, jnp.sum(stats.bit_errors) - pad_errs, n * wb, n * wb
     )
 
 
@@ -349,7 +377,7 @@ def transmit_flat(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
     wb = 16 if cfg.wire_dtype == "bfloat16" else 32
     if cfg.mode == "perfect":
         k = cfg.scheme.bits_per_symbol
-        return x, _stats(n * wb // k, 1, 0, n * wb)
+        return x, _stats(n * wb // k, 1, 0, n * wb, n * wb)
     if cfg.mode in ("naive", "approx") and cfg.use_kernel:
         from repro.kernels import ops as kernel_ops
 
@@ -535,6 +563,28 @@ def _mode_batch_fn(cfg: TransportConfig, with_snr: bool):
         return lambda x, k, na: _batch_with_keys(x, k, cfg, None, num_active=na)
 
 
+def _scatter_bucket_parts(parts_x, parts_st, order, num_clients):
+    """Scatter per-bucket outputs back to client order.
+
+    The shared tail of every bucketed dispatch (dense adaptive, sparse
+    adaptive, the engine's compressed uplink): concatenate the per-mode
+    bucket outputs/stats in sorted order and gather them through the
+    inverse of the stable ``order`` permutation. Returns ``(x_hat, stats,
+    inv)`` — ``stats`` without ``mode_idx`` (callers attach their own), and
+    ``inv`` so callers can scatter extra per-bucket arrays the same way.
+    """
+    inv = np.empty(num_clients, np.int64)
+    inv[order] = np.arange(num_clients)
+    inv = jnp.asarray(inv)
+    x_hat = jnp.take(jnp.concatenate(parts_x, axis=0), inv, axis=0)
+    ds, tx, be, nb, boa = (
+        jnp.take(jnp.concatenate([getattr(st, f) for st in parts_st]), inv)
+        for f in ("data_symbols", "transmissions", "bit_errors", "n_bits",
+                  "bits_on_air")
+    )
+    return x_hat, TxStats(ds, tx, be, nb, bits_on_air=boa), inv
+
+
 def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec):
     """Sort/gather/scatter mixed-mode dispatch over concrete mode counts.
 
@@ -551,7 +601,7 @@ def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec):
         # the select dispatch's empty vmap output instead of concatenating
         # zero buckets.
         empty = jnp.zeros((0,), jnp.float32)
-        return x, TxStats(empty, empty, empty, empty)
+        return x, TxStats(empty, empty, empty, empty, bits_on_air=empty)
     order = np.argsort(mode_np, kind="stable")
     counts = np.bincount(mode_np, minlength=len(cfgs))
     starts = np.concatenate([[0], np.cumsum(counts)])
@@ -578,16 +628,11 @@ def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec):
         parts_x.append(xh[:count])
         parts_st.append(TxStats(st.data_symbols[:count],
                                 st.transmissions[:count],
-                                st.bit_errors[:count], st.n_bits[:count]))
-    inv = np.empty(num_clients, np.int64)
-    inv[order] = np.arange(num_clients)
-    inv = jnp.asarray(inv)
-    x_hat = jnp.take(jnp.concatenate(parts_x, axis=0), inv, axis=0)
-    fields = (
-        jnp.take(jnp.concatenate([getattr(st, f) for st in parts_st]), inv)
-        for f in ("data_symbols", "transmissions", "bit_errors", "n_bits")
-    )
-    return x_hat, TxStats(*fields)
+                                st.bit_errors[:count], st.n_bits[:count],
+                                bits_on_air=st.bits_on_air[:count]))
+    x_hat, stats, _ = _scatter_bucket_parts(parts_x, parts_st, order,
+                                            num_clients)
+    return x_hat, stats
 
 
 def _select_adaptive(x, keys, cfgs, mode_idx, snr_vec):
@@ -904,3 +949,41 @@ def transmit_pytree_broadcast_adaptive(tree: Any, key: jax.Array, cfgs,
     flat_hat, stats = transmit_broadcast_adaptive(
         flat, key, cfgs, mode_idx, snr_db=snr_db, dispatch=dispatch)
     return _unflatten_broadcast_tree(flat_hat, spec), stats
+
+
+def transmit_sparse(values: jax.Array, indices: jax.Array, dim: int,
+                    key: jax.Array, cfg: TransportConfig, compression=None, *,
+                    snr_db=None):
+    """Transmit one client's sparse ``(values, indices)`` payload.
+
+    The compressed uplink (see the module docstring's "Sparse uplinks"):
+    the ``(k,)`` value payload rides the configured transport under ``key``
+    and the ``(k,)`` index header rides protected bits on the header key
+    lane; the receiver scatters the values back to a dense ``(dim,)``
+    vector. ``compression`` is a
+    :class:`repro.compress.sparsify.CompressionConfig` choosing the header
+    protection (default config if ``None``). Returns ``(x_hat_dense,
+    stats)`` with combined header+payload :class:`TxStats` (including
+    ``bits_on_air``). Delegates to :func:`repro.compress.framing.transmit_sparse`.
+    """
+    from repro.compress import framing as framing_lib
+
+    return framing_lib.transmit_sparse(values, indices, dim, key, cfg,
+                                       compression, snr_db=snr_db)
+
+
+def transmit_sparse_batch(values: jax.Array, indices: jax.Array, dim: int,
+                          key: jax.Array, cfg: TransportConfig,
+                          compression=None, *, snr_db=None, client_offset=0):
+    """Batched :func:`transmit_sparse` under the shared fold_in key schedule.
+
+    Client ``i`` uses ``fold_in(key, client_offset + i)`` — bit-identical
+    to a per-client loop of :func:`transmit_sparse`, exactly as
+    :func:`transmit_batch` is to :func:`transmit_flat`. Delegates to
+    :func:`repro.compress.framing.transmit_sparse_batch`.
+    """
+    from repro.compress import framing as framing_lib
+
+    return framing_lib.transmit_sparse_batch(
+        values, indices, dim, key, cfg, compression, snr_db=snr_db,
+        client_offset=client_offset)

@@ -34,6 +34,24 @@ computes its payload from its own corrupted copy. The broadcast reuses the
 round's uplink base key on the downlink key lane
 (``transport.DOWNLINK_KEY_LANE``), so uplink draws are unchanged — with
 ``downlink=None`` every result is bit-identical to the downlink-free loops.
+
+Compressed uplinks (beyond-paper; Ma et al. 2404.11035, Amiri & Gündüz
+1907.09769)
+-----------------------------------------------------------------------
+``compression=CompressionConfig(...)`` (or a scenario whose ``compression``
+is set) replaces each round's dense uplink with the sparse wire
+(:mod:`repro.compress`): every client accumulates an error-feedback
+residual, selects ``k`` coordinates of ``residual + payload`` (top-k /
+rand-k / threshold), and transmits the values through the configured
+transport plus a protected index header. The EF residual is carried across
+rounds per client inside the engine — dropped clients keep their whole
+accumulation (they never transmitted) — and the selection/transport keys
+derive from the same per-client fold_in keys as the dense engine, so every
+dispatch (driver-less, select, bucketed) sees the same selection. Under a
+scenario, ``PolicyConfig.compress_ratios`` makes the slot budget
+CSI-adaptive per mode (bucketed dispatch only — ragged per-mode budgets
+cannot live in one fused trace). ``compression=None`` leaves every code
+path and every random draw bit-identical to the dense engine.
 """
 
 from __future__ import annotations
@@ -45,6 +63,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import framing as framing_lib
+from repro.compress import sparsify as sparsify_lib
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import cnn
@@ -57,6 +77,7 @@ __all__ = [
     "RoundEngine",
     "resolve_scenario",
     "resolve_downlink",
+    "resolve_compression",
     "dropout_weighted_mean",
     "record_link_round",
     "link_telemetry",
@@ -78,8 +99,11 @@ class FLResult:
     # mean_snr_db, mean_est_db, mode_counts, n_active, n_stragglers,
     # airtime_s} (mode_counts indexes the driver's mode table); runs with a
     # downlink leg add {downlink_airtime_s, downlink_ber[, and for adaptive
-    # downlinks downlink_mode_counts]} — driver-less downlink runs append
-    # records with the downlink fields only. [] otherwise.
+    # downlinks downlink_mode_counts]}; compressed runs add
+    # {comp_ratio (mean kept fraction), comp_bits_on_air (active clients'
+    # on-air bits this round), comp_residual_norm (mean per-client L2 of
+    # the EF residual)} — driver-less downlink/compressed runs append
+    # records with just their own fields. [] otherwise.
     link: list = dataclasses.field(default_factory=list)
 
 
@@ -112,6 +136,20 @@ def resolve_downlink(downlink, driver):
         return downlink
     if driver is not None:
         return driver.scenario.downlink
+    return None
+
+
+def resolve_compression(compression, driver):
+    """``compression=`` argument -> the run's ``CompressionConfig`` (or ``None``).
+
+    An explicit argument wins; otherwise a scenario-driven run inherits the
+    scenario's ``compression`` field. ``None`` means dense uplinks —
+    bit-identical to the pre-compression engine.
+    """
+    if compression is not None:
+        return compression
+    if driver is not None:
+        return driver.scenario.compression
     return None
 
 
@@ -388,7 +426,7 @@ class RoundEngine:
                  eval_every: int = 2,
                  timings: latency_lib.PhyTimings | None = None,
                  scenario=None, adaptive_dispatch: str = "bucketed",
-                 downlink=None):
+                 downlink=None, compression=None):
         self.algo = algorithm
         self.client_x, self.client_y = client_x, client_y
         self.test_x, self.test_y = test_x, test_y
@@ -428,6 +466,40 @@ class RoundEngine:
         self.dl_air_scale = None
         self.dl_cfg = (None if self.downlink is None
                        else self._downlink_transport_cfg())
+
+        self.compression = resolve_compression(compression, self.driver)
+        self._ef_residual = None
+        self._comp_ks = None
+        self._comp_dim = self._comp_k = 0
+        if self.compression is not None:
+            comp = self.compression
+            self._comp_dim = int(sum(
+                l.size for l in jax.tree_util.tree_leaves(self.params)))
+            self._comp_k = sparsify_lib.resolve_k(comp, self._comp_dim)
+            if self.driver is not None:
+                from repro.link import policy as policy_lib
+
+                pol = self.driver.scenario.policy
+                if comp.k is not None:
+                    # An explicit absolute budget wins everywhere
+                    # (resolve_k's rule): the policy's ratio column applies
+                    # only to ratio-derived budgets, so bucketed and select
+                    # dispatches agree on the slots per client.
+                    self._comp_ks = (self._comp_k,) * len(pol.modes)
+                else:
+                    if (pol.compress_ratios is not None
+                            and self.dispatch != "bucketed"):
+                        raise ValueError(
+                            "PolicyConfig.compress_ratios (per-mode slot "
+                            "budgets) needs adaptive_dispatch='bucketed' — "
+                            "a fused select round cannot trace ragged "
+                            "per-mode selections")
+                    self._comp_ks = policy_lib.compress_k_table(
+                        pol, self._comp_dim, comp.ratio)
+            # The EF residual is carried even with error_feedback=False (as
+            # zeros) so the jitted round signatures stay uniform.
+            self._ef_residual = jnp.zeros(
+                (self.num_clients, self._comp_dim), jnp.float32)
 
         self._build_round_fns()
         if self.driver is not None:
@@ -537,6 +609,7 @@ class RoundEngine:
     def _build_round_fns(self):
         algo, tcfg, driver = self.algo, self.transport_cfg, self.driver
         dl, M = self.downlink, self.num_clients
+        comp, D, kbase = self.compression, self._comp_dim, self._comp_k
 
         @jax.jit
         def round_step(params, aux, xb, yb, key):
@@ -558,6 +631,41 @@ class RoundEngine:
             return params, aux, stats, dstats
 
         self._round_step = round_step
+
+        def _sel_keys(key):
+            # rand-k selection keys ride the per-client transport key on the
+            # reserved lane; deterministic methods need none.
+            if comp.method != "randk":
+                return None
+            return sparsify_lib.selection_keys(key, M)
+
+        if comp is not None:
+
+            @jax.jit
+            def round_step_comp(params, aux, xb, yb, key, residual):
+                # Driver-less *compressed* round, one fused program: EF
+                # accumulate -> select -> sparse uplink -> scatter -> mean.
+                dstats = None
+                if dl is None:
+                    payload = algo.payload(params, xb, yb)
+                else:
+                    recv, dstats = transport_lib.transmit_pytree_broadcast(
+                        params, key, self.dl_cfg, M)
+                    payload = algo.payload_from(recv, xb, yb)
+                flat, spec = transport_lib._flatten_client_tree(payload)
+                vals, idx, residual = sparsify_lib.ef_select_batch(
+                    residual, flat, kbase, comp, _sel_keys(key))
+                hat_flat, stats = algo.wrap_uplink(
+                    vals,
+                    lambda v: framing_lib.transmit_sparse_batch(
+                        v, idx, D, key, tcfg, comp))
+                hat = transport_lib._unflatten_client_tree(hat_flat, spec)
+                agg = jax.tree_util.tree_map(
+                    lambda g: jnp.mean(g, axis=0), hat)
+                params, aux = algo.apply(params, aux, agg)
+                return params, aux, stats, dstats, residual
+
+            self._round_step_comp = round_step_comp
 
         @jax.jit
         def eval_acc(params):
@@ -593,6 +701,40 @@ class RoundEngine:
             return params, aux, stats, lstate, rnd, dstats
 
         self._round_step_link = round_step_link
+
+        if comp is not None:
+
+            @jax.jit
+            def round_step_link_comp(params, aux, xb, yb, key, lstate,
+                                     prev_mode, prev_est, residual):
+                # Select dispatch, compressed: one fused program — link
+                # pipeline -> [broadcast ->] payload -> EF select -> sparse
+                # vmapped-switch uplink -> dropout-weighted aggregate.
+                # Uniform slot budget (per-mode budgets are bucketed-only).
+                k_link, k_tx = jax.random.split(key)
+                lstate, rnd = driver.round(lstate, prev_mode, prev_est,
+                                           k_link)
+                dstats = None
+                if dl is None:
+                    payload = algo.payload(params, xb, yb)
+                else:
+                    recv, dstats = self._broadcast_scenario(params, k_tx, rnd)
+                    payload = algo.payload_from(recv, xb, yb)
+                flat, spec = transport_lib._flatten_client_tree(payload)
+                vals, idx, residual = sparsify_lib.ef_select_batch(
+                    residual, flat, kbase, comp, _sel_keys(k_tx),
+                    active=rnd.active)
+                hat_flat, stats = algo.wrap_uplink(
+                    vals,
+                    lambda v: framing_lib.transmit_sparse_batch_adaptive(
+                        v, idx, D, k_tx, select_mode_cfgs(driver), rnd.mode,
+                        comp, snr_db=rnd.snr_db, dispatch="select"))
+                hat = transport_lib._unflatten_client_tree(hat_flat, spec)
+                agg = dropout_weighted_mean(hat, rnd.active)
+                params, aux = algo.apply(params, aux, agg)
+                return params, aux, stats, lstate, rnd, dstats, residual
+
+            self._round_step_link_comp = round_step_link_comp
 
         @jax.jit
         def link_round(lstate, prev_mode, prev_est, key):
@@ -641,11 +783,138 @@ class RoundEngine:
 
         self._round_step_link_bucketed = round_step_link_bucketed
 
+        if comp is None:
+            return
+
+        if comp.error_feedback:
+            accumulate = jax.jit(lambda r, f: r + f)
+            residual_update = jax.jit(
+                lambda acc, sent, act: acc - sent * act[:, None])
+        else:
+            accumulate = jax.jit(lambda r, f: f)
+            residual_update = jax.jit(
+                lambda acc, sent, act: jnp.zeros_like(acc))
+
+        def round_step_link_bucketed_comp(params, aux, xb, yb, key, lstate,
+                                          prev_mode, prev_est, residual):
+            # Bucketed dispatch, compressed: the mode vector syncs to the
+            # host so each mode bucket selects with its *own* slot budget
+            # (the CSI-adaptive compress_ratios column) and runs its sparse
+            # batch once, around the jitted compute steps.
+            k_link, k_tx = jax.random.split(key)
+            lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
+            mode_np = np.asarray(rnd.mode)
+            dstats = None
+            if dl is None:
+                payload = payload_shared(params, xb, yb)
+            else:
+                dl_mode = None
+                if dl.adaptive:
+                    dl_mode = np.asarray(self._downlink_modes(
+                        np.asarray(rnd.est_db)))
+                recv, dstats = self._broadcast_scenario(
+                    params, k_tx, rnd, dl_mode=dl_mode, dispatch="bucketed")
+                payload = payload_per_client(recv, xb, yb)
+            flat, spec = transport_lib._flatten_client_tree(payload)
+            acc = accumulate(residual, flat)
+            dense_hat, stats, sent = self._sparse_bucketed_uplink(
+                acc, k_tx, mode_np, rnd.snr_db)
+            residual = residual_update(acc, sent, rnd.active)
+            hat = transport_lib._unflatten_client_tree(dense_hat, spec)
+            params, aux = apply_update(params, aux, hat, rnd.active)
+            return params, aux, stats, lstate, rnd, dstats, residual
+
+        self._round_step_link_bucketed_comp = round_step_link_bucketed_comp
+
+    def _sparse_bucketed_uplink(self, acc, key, mode_np, snr_db):
+        """Per-mode-budget sparse uplink over host-side mode buckets.
+
+        The compressed counterpart of the bucketed dispatch: clients are
+        stable-argsorted by mode; each mode's bucket selects ``k_m``
+        coordinates of its accumulated payload (``k_m`` from the policy's
+        ``compress_ratios`` column), rides the algorithm's uplink wrapper
+        (per-client ``max_abs`` scaling composes per bucket), and transmits
+        through its own mode config; results scatter back to client order.
+        Keys ride the *client index*, so each row is bit-identical to a
+        per-client ``transmit_sparse`` call. Returns ``(dense_hat (M, D),
+        stats, sent (M, D))`` — ``sent`` is the transmitter-side scatter
+        of the selected values, the quantity error feedback subtracts.
+        """
+        comp, algo, driver = self.compression, self.algo, self.driver
+        cfgs, ks = driver.mode_cfgs, self._comp_ks
+        M, D = acc.shape
+        if M == 0:
+            empty = jnp.zeros((0,), jnp.float32)
+            stats = transport_lib.TxStats(
+                empty, empty, empty, empty,
+                mode_idx=jnp.zeros((0,), jnp.int32), bits_on_air=empty)
+            return acc, stats, acc
+        snr_vec = transport_lib._resolve_batch_snr(cfgs[0], M, snr_db)
+        keys = transport_lib.client_keys(key, M)
+        order = np.argsort(mode_np, kind="stable")
+        counts = np.bincount(mode_np, minlength=len(cfgs))
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        parts_x, parts_sent, parts_st = [], [], []
+        for m, cfg in enumerate(cfgs):
+            count = int(counts[m])
+            if count == 0:
+                continue
+            rows = jnp.asarray(order[starts[m]: starts[m] + count])
+            xb = jnp.take(acc, rows, axis=0)
+            kb = jnp.take(keys, rows, axis=0)
+            sb = None if snr_vec is None else jnp.take(snr_vec, rows)
+            sel = None
+            if comp.method == "randk":
+                sel = jax.vmap(lambda kk: jax.random.fold_in(
+                    kk, sparsify_lib.SELECT_KEY_LANE))(kb)
+            vals, sidx = sparsify_lib.select_batch(xb, ks[m], comp, sel)
+            parts_sent.append(sparsify_lib.scatter_dense_batch(vals, sidx, D))
+            fn = framing_lib._sparse_fn(cfg, comp, D, sb is not None)
+            hat_m, st_m = algo.wrap_uplink(
+                vals,
+                lambda v, sidx=sidx, kb=kb, sb=sb, fn=fn: (
+                    fn(v, sidx, kb) if sb is None else fn(v, sidx, kb, sb)))
+            parts_x.append(hat_m)
+            parts_st.append(st_m)
+        dense_hat, stats, inv = transport_lib._scatter_bucket_parts(
+            parts_x, parts_st, order, M)
+        sent = jnp.take(jnp.concatenate(parts_sent, axis=0), inv, axis=0)
+        stats.mode_idx = jnp.asarray(mode_np, jnp.int32)
+        return dense_hat, stats, sent
+
+    def _compression_record(self, res, r, stats, rnd, scenario_rec):
+        """Attach/append one round's compression telemetry.
+
+        Records the mean kept fraction (per-mode budgets resolve through
+        the round's mode vector), the active cohort's total bits on air,
+        and the mean per-client L2 norm of the EF residual. Returns the
+        record so a downlink leg in the same round can share it.
+        """
+        rec = scenario_rec
+        if rec is None:
+            rec = {"round": r}
+            res.link.append(rec)
+        if rnd is not None and self._comp_ks is not None:
+            k_vec = np.asarray(self._comp_ks)[np.asarray(rnd.mode)]
+        else:
+            k_vec = np.full(self.num_clients, self._comp_k)
+        active = (np.asarray(rnd.active) if rnd is not None
+                  else np.ones(self.num_clients, np.float32))
+        boa = np.asarray(stats.bits_on_air, np.float32)
+        rec["comp_ratio"] = float(k_vec.mean() / max(self._comp_dim, 1))
+        rec["comp_bits_on_air"] = float((boa * active).sum())
+        # Reduce on device: pulling only the scalar avoids a per-round
+        # (num_clients, dim) device-to-host transfer for telemetry.
+        rec["comp_residual_norm"] = float(jnp.sqrt(jnp.mean(jnp.sum(
+            self._ef_residual ** 2, axis=1))))
+        return rec
+
     # --------------------------------------------------------------- run
 
     def run(self) -> FLResult:
         """Drive ``n_rounds`` rounds and return the :class:`FLResult`."""
         algo, driver, timings = self.algo, self.driver, self.timings
+        comp = self.compression
         params, aux, key = self.params, self.aux, self._key
         rng = np.random.default_rng(self.seed)
         res = FLResult([], [], [], 0.0, 0.0)
@@ -655,9 +924,15 @@ class RoundEngine:
             key, rk = jax.random.split(key)
             xb, yb = algo.sample(rng, self.client_x, self.client_y)
             scenario_rec = None
+            rnd = None
             if driver is None:
-                params, aux, stats, dstats = self._round_step(
-                    params, aux, xb, yb, rk)
+                if comp is None:
+                    params, aux, stats, dstats = self._round_step(
+                        params, aux, xb, yb, rk)
+                else:
+                    (params, aux, stats, dstats,
+                     self._ef_residual) = self._round_step_comp(
+                        params, aux, xb, yb, rk, self._ef_residual)
                 # TDMA uplink: total airtime is the sum over clients.
                 per_client_air = latency_lib.round_airtime(
                     stats, timings, self.transport_cfg.mode)
@@ -666,17 +941,29 @@ class RoundEngine:
                     # airtime from the cohort-mean E[tx] to its own value.
                     per_client_air = per_client_air * self.ecrt_air_scale
             else:
-                step = (self._round_step_link_bucketed
-                        if self.dispatch == "bucketed"
-                        else self._round_step_link)
-                params, aux, stats, self.lstate, rnd, dstats = step(
-                    params, aux, xb, yb, rk, self.lstate, self.prev_mode,
-                    self.prev_est)
+                if comp is None:
+                    step = (self._round_step_link_bucketed
+                            if self.dispatch == "bucketed"
+                            else self._round_step_link)
+                    params, aux, stats, self.lstate, rnd, dstats = step(
+                        params, aux, xb, yb, rk, self.lstate, self.prev_mode,
+                        self.prev_est)
+                else:
+                    step = (self._round_step_link_bucketed_comp
+                            if self.dispatch == "bucketed"
+                            else self._round_step_link_comp)
+                    (params, aux, stats, self.lstate, rnd, dstats,
+                     self._ef_residual) = step(
+                        params, aux, xb, yb, rk, self.lstate, self.prev_mode,
+                        self.prev_est, self._ef_residual)
                 self.prev_mode, self.prev_est = rnd.mode, rnd.est_db
                 per_client_air = record_link_round(
                     res, r, driver, stats, rnd, timings)
                 scenario_rec = res.link[-1]
             cum_air += float(jnp.sum(per_client_air))
+            if comp is not None:
+                scenario_rec = self._compression_record(
+                    res, r, stats, rnd, scenario_rec)
             if dstats is not None:
                 cum_air += self._downlink_air_record(
                     res, r, dstats, scenario_rec)

@@ -49,6 +49,7 @@ def run_fedavg(
     scenario=None,
     adaptive_dispatch: str = "bucketed",
     downlink=None,
+    compression=None,
 ) -> FLResult:
     """FedAvg over the simulated uplink: ``local_steps`` SGD steps per
     client per round, weight deltas on the wire.
@@ -66,5 +67,5 @@ def run_fedavg(
         algo, transport_cfg, client_x, client_y, test_x, test_y,
         n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
-        downlink=downlink,
+        downlink=downlink, compression=compression,
     ).run()

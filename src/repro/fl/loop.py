@@ -59,6 +59,7 @@ def run_fl(
     scenario=None,
     adaptive_dispatch: str = "bucketed",
     downlink=None,
+    compression=None,
 ) -> FLResult:
     """FedSGD over the simulated wireless uplink (paper Sec. II eq. (4)-(6)).
 
@@ -79,6 +80,11 @@ def run_fl(
       downlink: optional ``DownlinkConfig`` enabling the noisy broadcast
         leg (defaults to the scenario's ``downlink`` field; ``None`` = the
         historical error-free downlink, bit-identical to pre-engine runs).
+      compression: optional ``repro.compress.CompressionConfig`` enabling
+        sparse (top-k/rand-k/threshold + error-feedback) uplinks over the
+        sparse wire format (defaults to the scenario's ``compression``
+        field; ``None`` = dense uplinks, bit-identical to the
+        pre-compression engine).
 
     Returns:
       :class:`~repro.fl.engine.FLResult`.
@@ -88,5 +94,5 @@ def run_fl(
         algo, transport_cfg, client_x, client_y, test_x, test_y,
         n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
-        downlink=downlink,
+        downlink=downlink, compression=compression,
     ).run()

@@ -140,7 +140,7 @@ def approx_channel_transmit(x: jax.Array, key: jax.Array, cfg, *, snr_db=None):
         interpret=default_interpret(),
     )
     n = x.shape[0]
-    stats = transport_lib._stats(n * (wb // k), 1, errs, n * wb)
+    stats = transport_lib._stats(n * (wb // k), 1, errs, n * wb, n * wb)
     return x_hat.astype(jnp.float32), stats
 
 
@@ -239,6 +239,6 @@ def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg,
     ones = jnp.ones((c,), jnp.float32)
     stats = transport_lib.TxStats(
         ones * (n * (wb // k)), ones, errs.astype(jnp.float32),
-        ones * (n * wb),
+        ones * (n * wb), bits_on_air=ones * (n * wb),
     )
     return x_hat.astype(jnp.float32), stats

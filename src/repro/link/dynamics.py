@@ -200,4 +200,12 @@ DYNAMICS_PRESETS: dict[str, LinkDynamicsConfig] = {
         mean_snr_db=14.0, spread_db=3.0,
         fast_rho=0.8, fast_std_db=2.0,
         onoff=True, p_block=0.08, p_recover=0.35, off_penalty_db=18.0),
+    # narrowband low-rate IoT: low operating point, slow drift, shallow
+    # blockage — the regime where sparse (compressed) uplinks pay off most
+    # (Ma et al., arXiv:2404.11035)
+    "iot-lowrate": LinkDynamicsConfig(
+        mean_snr_db=6.0, spread_db=2.0,
+        fast_rho=0.9, fast_std_db=1.5,
+        shadow_rho=0.98, shadow_std_db=2.0,
+        onoff=True, p_block=0.05, p_recover=0.5, off_penalty_db=12.0),
 }

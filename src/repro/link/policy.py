@@ -43,6 +43,7 @@ __all__ = [
     "downlink_mode",
     "ecrt_anchor_snr_db",
     "build_mode_cfgs",
+    "compress_k_table",
 ]
 
 # Re-exported for table builders; defined next to the calibrator so the FL
@@ -74,6 +75,15 @@ class PolicyConfig:
     )
     thresholds_db: tuple = (6.0, 16.0, 26.0)
     hysteresis_db: float = 2.0
+    # CSI-adaptive compression column: per-mode sparsification ratio used
+    # when the FL run enables gradient compression (repro.compress) — a
+    # fraction of coordinates kept, one entry per mode, typically deeper
+    # compression (smaller ratio) in the protected low-SNR modes where
+    # airtime is most expensive. None = one flat ratio from the
+    # CompressionConfig. Consumed by the engine's *bucketed* dispatch only
+    # (per-mode slot budgets are ragged, which a fused select round cannot
+    # trace).
+    compress_ratios: tuple | None = None
 
     def __post_init__(self):
         if len(self.thresholds_db) != len(self.modes) - 1:
@@ -83,6 +93,17 @@ class PolicyConfig:
             )
         if list(self.thresholds_db) != sorted(self.thresholds_db):
             raise ValueError(f"thresholds must ascend: {self.thresholds_db}")
+        if self.compress_ratios is not None:
+            if len(self.compress_ratios) != len(self.modes):
+                raise ValueError(
+                    f"compress_ratios needs one entry per mode "
+                    f"({len(self.modes)}), got {len(self.compress_ratios)}"
+                )
+            if any(not 0.0 < r <= 1.0 for r in self.compress_ratios):
+                raise ValueError(
+                    f"compress_ratios must lie in (0, 1]: "
+                    f"{self.compress_ratios}"
+                )
 
 
 def fixed_policy(mode: str, modulation: str = "qpsk") -> PolicyConfig:
@@ -144,6 +165,21 @@ def ecrt_anchor_snr_db(cfg: PolicyConfig, fallback_db: float) -> float:
     """
     return float(cfg.thresholds_db[0]) if cfg.thresholds_db else float(
         fallback_db)
+
+
+def compress_k_table(cfg: PolicyConfig, dim: int,
+                     default_ratio: float) -> tuple:
+    """Per-mode sparse slot budgets for a ``dim``-coordinate payload.
+
+    Materializes the CSI-adaptive compression column: mode ``i`` keeps
+    ``max(1, round(ratio_i * dim))`` coordinates, where ``ratio_i`` comes
+    from ``cfg.compress_ratios`` (or ``default_ratio`` for every mode when
+    the column is unset). The engine's bucketed round dispatches each mode
+    bucket with its own budget.
+    """
+    ratios = (cfg.compress_ratios if cfg.compress_ratios is not None
+              else (default_ratio,) * len(cfg.modes))
+    return tuple(max(1, min(dim, int(round(r * dim)))) for r in ratios)
 
 
 def build_mode_cfgs(base: transport_lib.TransportConfig, cfg: PolicyConfig,

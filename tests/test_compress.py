@@ -1,0 +1,401 @@
+"""Compression subsystem contracts: EF identity, deterministic selection,
+sparse framing, batched ≡ per-client equivalence, policy/scenario plumbing,
+and the FL engine's compressed rounds."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import framing as FR
+from repro.compress import sparsify as SP
+from repro.compress.sparsify import CompressionConfig
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.link import policy as P
+from repro.link import scenario as S
+
+KEY = jax.random.PRNGKey(0)
+DIM = 300
+
+
+def _acc_pair(dim=DIM, seed=1):
+    res = jax.random.normal(jax.random.fold_in(KEY, seed), (dim,)) * 0.1
+    grad = jax.random.normal(jax.random.fold_in(KEY, seed + 1), (dim,))
+    return res, grad
+
+
+# -------------------------------------------------------------- sparsifiers
+
+
+def test_topk_tie_break_is_lower_index():
+    x = jnp.array([1.0, -1.0, 0.5, 1.0, -1.0, 0.25])
+    vals, idx = SP.select_topk(x, 3)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 1, 3])
+    np.testing.assert_array_equal(np.asarray(vals), [1.0, -1.0, 1.0])
+
+
+@pytest.mark.parametrize("method", ["topk", "randk", "threshold"])
+def test_selection_deterministic_across_jit(method):
+    """Selection must resolve identically inside and outside jit — the
+    bucketed (host) and select (traced) dispatches share one selection."""
+    cfg = CompressionConfig(method=method, threshold=0.5)
+    _, x = _acc_pair()
+    # duplicated magnitudes force the tie-break to matter
+    x = jnp.concatenate([x[:DIM // 2], x[:DIM // 2]])
+    key = jax.random.fold_in(KEY, 9)
+    eager = SP.select(x, 17, cfg, key)
+    jitted = jax.jit(lambda a, kk: SP.select(a, 17, cfg, kk))(x, key)
+    for a, b in zip(eager, jitted):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("method", ["topk", "randk", "threshold"])
+def test_ef_identity_bit_exact(method):
+    """transmitted + residual ≡ accumulated gradient, bit for bit."""
+    cfg = CompressionConfig(method=method, threshold=0.3)
+    res, grad = _acc_pair()
+    key = jax.random.fold_in(KEY, 3)
+    vals, idx, new_res = SP.ef_select(res, grad, 23, cfg, key)
+    acc = res + grad
+    recon = SP.scatter_dense(vals, idx, DIM) + new_res
+    np.testing.assert_array_equal(
+        np.asarray(recon).view(np.uint32), np.asarray(acc).view(np.uint32))
+
+
+def test_ef_identity_batch_matches_loop():
+    cfg = CompressionConfig()
+    M, k = 5, 12
+    res = jax.random.normal(jax.random.fold_in(KEY, 4), (M, DIM)) * 0.1
+    grads = jax.random.normal(jax.random.fold_in(KEY, 5), (M, DIM))
+    vb, ib, rb = SP.ef_select_batch(res, grads, k, cfg)
+    for i in range(M):
+        v, ix, r = SP.ef_select(res[i], grads[i], k, cfg)
+        np.testing.assert_array_equal(np.asarray(vb[i]), np.asarray(v))
+        np.testing.assert_array_equal(np.asarray(ib[i]), np.asarray(ix))
+        np.testing.assert_array_equal(np.asarray(rb[i]), np.asarray(r))
+
+
+def test_ef_dropped_client_keeps_accumulation():
+    """active=0 means the client never transmitted: its residual must hold
+    the whole accumulated gradient, not lose the selected mass."""
+    cfg = CompressionConfig()
+    res, grad = _acc_pair(seed=7)
+    _, _, r_active = SP.ef_select(res, grad, 16, cfg, active=jnp.float32(1.0))
+    _, _, r_dropped = SP.ef_select(res, grad, 16, cfg, active=jnp.float32(0.0))
+    np.testing.assert_array_equal(np.asarray(r_dropped), np.asarray(res + grad))
+    assert not np.array_equal(np.asarray(r_active), np.asarray(r_dropped))
+
+
+def test_threshold_zeroes_small_slots_and_keeps_them_in_residual():
+    cfg = CompressionConfig(method="threshold", threshold=10.0)
+    res, grad = _acc_pair(seed=11)
+    vals, idx, new_res = SP.ef_select(res, grad, 16, cfg)
+    assert np.all(np.asarray(vals) == 0.0)  # nothing clears a 10.0 floor
+    np.testing.assert_array_equal(np.asarray(new_res), np.asarray(res + grad))
+
+
+def test_no_error_feedback_discards_remainder():
+    cfg = CompressionConfig(error_feedback=False)
+    res, grad = _acc_pair(seed=13)
+    vals, idx, new_res = SP.ef_select(res, grad, 16, cfg)
+    assert np.all(np.asarray(new_res) == 0.0)
+    # selection ignores the residual entirely
+    v2, i2 = SP.select_topk(grad, 16)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i2))
+
+
+def test_compression_config_validation():
+    with pytest.raises(ValueError, match="method"):
+        CompressionConfig(method="magic")
+    with pytest.raises(ValueError, match="header"):
+        CompressionConfig(header="hope")
+    with pytest.raises(ValueError, match="ratio"):
+        CompressionConfig(ratio=0.0)
+    with pytest.raises(ValueError, match="k must be"):
+        CompressionConfig(k=0)
+    assert SP.resolve_k(CompressionConfig(ratio=0.02), 1000) == 20
+    assert SP.resolve_k(CompressionConfig(k=7), 1000) == 7
+    assert SP.resolve_k(CompressionConfig(ratio=1e-9), 1000) == 1
+
+
+# ------------------------------------------------------------------ framing
+
+
+def test_index_pack_roundtrip():
+    idx = jnp.array([0, 1, 5, 17, DIM - 1], jnp.int32)
+    words = FR.pack_index_bits(idx, DIM)
+    back = FR.unpack_index_bits(words, idx.shape[0], DIM)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(idx))
+    assert FR.index_bits(1) == 1 and FR.index_bits(2) == 1
+    assert FR.index_bits(3) == 2 and FR.index_bits(1 << 15) == 15
+
+
+@pytest.mark.parametrize("header", ["gray", "ecrt", "perfect"])
+def test_header_exact_at_high_snr(header):
+    cfg = T.TransportConfig(mode="approx",
+                            channel=CH.ChannelConfig(snr_db=60.0))
+    ccfg = CompressionConfig(header=header)
+    idx = jnp.sort(jax.random.permutation(KEY, DIM)[:24]).astype(jnp.int32)
+    idx_rx, (sym, xtx, errs, nbits, boa) = FR.transmit_header(
+        idx, DIM, jax.random.fold_in(KEY, 21), cfg, ccfg)
+    np.testing.assert_array_equal(np.asarray(idx_rx), np.asarray(idx))
+    assert float(errs) == 0.0
+    assert float(sym) > 0 and float(boa) >= float(nbits) > 0
+
+
+def test_gray_header_uses_most_protected_positions():
+    """At moderate SNR on 256-QAM the Gray-MSB header BER must sit well
+    below the raw payload BER of the same constellation: header bits ride
+    b0/b1 only."""
+    cfg = T.TransportConfig(mode="naive", modulation="256qam",
+                            channel=CH.ChannelConfig(snr_db=18.0))
+    ccfg = CompressionConfig(header="gray")
+    k = 512
+    idx = jnp.sort(jax.random.permutation(KEY, 1 << 15)[:k]).astype(jnp.int32)
+    _, (sym, _, errs, nbits, _) = FR.transmit_header(
+        idx, 1 << 15, jax.random.fold_in(KEY, 22), cfg, ccfg)
+    header_ber = float(errs) / float(nbits)
+    vals = jax.random.uniform(KEY, (k,), minval=-0.9, maxval=0.9)
+    _, st = T.transmit_flat(vals, jax.random.fold_in(KEY, 23), cfg)
+    payload_ber = float(st.ber)
+    assert header_ber < payload_ber / 2
+
+
+def test_scatter_received_drops_out_of_range():
+    vals = jnp.array([1.0, 2.0, 3.0])
+    idx = jnp.array([2, 99, 4], jnp.int32)
+    out = np.asarray(FR.scatter_received(vals, idx, 10))
+    assert out[2] == 1.0 and out[4] == 3.0 and out.sum() == 4.0
+
+
+def test_sparse_stats_units_and_bits_on_air():
+    """Combined stats: symbols/bits sum both legs; bits_on_air of the dense
+    uplink equals offered bits, the sparse uplink's is far smaller."""
+    cfg = T.TransportConfig(mode="approx",
+                            channel=CH.ChannelConfig(snr_db=12.0))
+    dense = jax.random.uniform(KEY, (DIM,), minval=-0.9, maxval=0.9)
+    _, dstat = T.transmit_flat(dense, KEY, cfg)
+    assert float(dstat.bits_on_air) == float(dstat.n_bits) == DIM * 32
+    k = 15
+    vals, idx = SP.select_topk(dense, k)
+    _, sstat = T.transmit_sparse(vals, idx, DIM, KEY, cfg)
+    b = FR.index_bits(DIM)
+    # value leg: k words * 16 sym (qpsk); header: ceil(k*b/2) symbols
+    assert float(sstat.data_symbols) == k * 16 + -(-k * b // 2)
+    assert float(sstat.n_bits) == k * 32 + k * b
+    assert float(sstat.bits_on_air) < 0.1 * float(dstat.bits_on_air)
+
+
+def test_transmit_sparse_batch_equals_per_client_loop():
+    """The batched sparse uplink under the fold_in schedule is bit-identical
+    to a per-client transmit_sparse loop — values, stats, everything."""
+    cfg = T.TransportConfig(mode="approx",
+                            channel=CH.ChannelConfig(snr_db=10.0))
+    ccfg = CompressionConfig(header="gray")
+    M, k = 6, 11
+    acc = jax.random.normal(KEY, (M, DIM))
+    vals, idx = SP.select_batch(acc, k, ccfg)
+    snr = jnp.linspace(6.0, 18.0, M)
+    xb, sb = T.transmit_sparse_batch(vals, idx, DIM, KEY, cfg, ccfg,
+                                     snr_db=snr)
+    for i in range(M):
+        xi, si = T.transmit_sparse(vals[i], idx[i], DIM,
+                                   jax.random.fold_in(KEY, i), cfg, ccfg,
+                                   snr_db=snr[i])
+        np.testing.assert_array_equal(
+            np.asarray(xb[i]).view(np.uint32),
+            np.asarray(xi).view(np.uint32))
+        for f in ("data_symbols", "transmissions", "bit_errors", "n_bits",
+                  "bits_on_air"):
+            np.testing.assert_array_equal(np.asarray(getattr(sb, f)[i]),
+                                          np.asarray(getattr(si, f)))
+
+
+def test_sparse_adaptive_bucketed_equals_select():
+    """Mixed-mode sparse dispatch: bucketed ≡ select ≡ per-client, sharing
+    the dense engine's fold_in contract."""
+    cfgs = P.build_mode_cfgs(
+        T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0)),
+        P.PolicyConfig(), ecrt_expected_tx=2.0)
+    ccfg = CompressionConfig()
+    M, k = 8, 9
+    acc = jax.random.normal(KEY, (M, DIM))
+    vals, idx = SP.select_batch(acc, k, ccfg)
+    mode = np.array([0, 1, 2, 3, 3, 1, 0, 2], np.int32)
+    snr = jnp.linspace(4.0, 30.0, M)
+    a, sa = FR.transmit_sparse_batch_adaptive(
+        vals, idx, DIM, KEY, cfgs, mode, ccfg, snr_db=snr, dispatch="select")
+    b, sb2 = FR.transmit_sparse_batch_adaptive(
+        vals, idx, DIM, KEY, cfgs, mode, ccfg, snr_db=snr,
+        dispatch="bucketed")
+    np.testing.assert_array_equal(
+        np.asarray(a).view(np.uint32), np.asarray(b).view(np.uint32))
+    for f in ("data_symbols", "transmissions", "bit_errors", "n_bits",
+              "bits_on_air", "mode_idx"):
+        np.testing.assert_array_equal(np.asarray(getattr(sa, f)),
+                                      np.asarray(getattr(sb2, f)))
+    xi, _ = T.transmit_sparse(vals[2], idx[2], DIM,
+                              jax.random.fold_in(KEY, 2), cfgs[2], ccfg,
+                              snr_db=snr[2])
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(xi))
+
+
+def test_perfect_mode_sparse_reconstruction_exact():
+    cfg = T.TransportConfig(mode="perfect")
+    ccfg = CompressionConfig(header="perfect")
+    vals = jnp.array([0.5, -0.25, 0.125])
+    idx = jnp.array([3, 7, 250], jnp.int32)
+    dense, st = T.transmit_sparse(vals, idx, DIM, KEY, cfg, ccfg)
+    np.testing.assert_array_equal(np.asarray(dense),
+                                  np.asarray(SP.scatter_dense(vals, idx, DIM)))
+    assert float(st.bit_errors) == 0.0
+
+
+# ---------------------------------------------------------- policy/scenario
+
+
+def test_policy_compress_ratios_validation():
+    with pytest.raises(ValueError, match="one entry per mode"):
+        P.PolicyConfig(compress_ratios=(0.1, 0.2))
+    with pytest.raises(ValueError, match=r"\(0, 1\]"):
+        P.PolicyConfig(compress_ratios=(0.1, 0.2, 0.5, 1.5))
+    pc = P.PolicyConfig(compress_ratios=(0.01, 0.02, 0.05, 0.1))
+    assert P.compress_k_table(pc, 1000, 0.5) == (10, 20, 50, 100)
+    flat = P.PolicyConfig()
+    assert P.compress_k_table(flat, 1000, 0.05) == (50,) * 4
+
+
+def test_iot_lowrate_preset_has_compression_defaults():
+    scen = S.get_scenario("iot-lowrate")
+    assert scen.compression is not None
+    assert scen.compression.method == "topk"
+    assert scen.policy.compress_ratios is not None
+    assert len(scen.policy.compress_ratios) == len(scen.policy.modes)
+    # deeper compression in the protected low-SNR modes
+    assert scen.policy.compress_ratios[0] < scen.policy.compress_ratios[-1]
+
+
+# ------------------------------------------------------------ FL engine
+
+
+def _world():
+    from repro.data import synth_mnist
+    from repro.fl import partition
+
+    (img, lab), (ti, tl) = synth_mnist.train_test(60, 16, seed=0)
+    parts = partition.non_iid_partition(img, lab, n_clients=4)
+    cx, cy = partition.stack_clients(parts, per_client=24)
+    return cx, cy, ti, tl
+
+
+@pytest.mark.slow
+def test_run_fl_compressed_smoke_and_telemetry():
+    """Driver-less compressed FedSGD: telemetry fields present, airtime far
+    below the dense run's, accuracy finite."""
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.fl.loop import run_fl
+
+    cx, cy, ti, tl = _world()
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(mode="approx",
+                           channel=CH.ChannelConfig(snr_db=10.0))
+    kw = dict(n_rounds=3, batch_per_round=8, eval_every=2, seed=3)
+    dense = run_fl(cfg, tc, cx, cy, ti, tl, **kw)
+    comp = run_fl(cfg, tc, cx, cy, ti, tl,
+                  compression=CompressionConfig(ratio=0.05), **kw)
+    assert np.isfinite(comp.final_accuracy)
+    assert comp.airtime_s[-1] < dense.airtime_s[-1] / 5
+    assert len(comp.link) == 3
+    for rec in comp.link:
+        assert rec["comp_ratio"] == pytest.approx(0.05, abs=1e-3)
+        assert rec["comp_bits_on_air"] > 0
+        assert rec["comp_residual_norm"] > 0  # EF holds untransmitted mass
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_run_fl_scenario_compressed(dispatch):
+    """Scenario-driven compressed rounds under both dispatches; the
+    bucketed arm exercises the CSI-adaptive per-mode slot budgets."""
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.fl.loop import run_fl
+
+    cx, cy, ti, tl = _world()
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    if dispatch == "bucketed":
+        scen = dataclasses.replace(S.get_scenario("iot-lowrate"),
+                                   ecrt_expected_tx=2.0)
+        comp = None  # scenario default compression kicks in
+    else:
+        scen = dataclasses.replace(S.get_scenario("vehicular"),
+                                   ecrt_expected_tx=2.0)
+        comp = CompressionConfig(ratio=0.05)
+    res = run_fl(cfg, tc, cx, cy, ti, tl, n_rounds=3, batch_per_round=8,
+                 eval_every=2, seed=7, scenario=scen,
+                 adaptive_dispatch=dispatch, compression=comp)
+    assert np.isfinite(res.final_accuracy)
+    assert len(res.link) == 3
+    for rec in res.link:
+        assert "comp_ratio" in rec and "comp_bits_on_air" in rec
+        assert sum(rec["mode_counts"]) == 4
+
+
+@pytest.mark.slow
+def test_explicit_k_agrees_across_dispatches():
+    """An explicit CompressionConfig.k is an absolute budget everywhere:
+    the bucketed (default) dispatch must not fall back to the ratio-derived
+    per-mode table — bits on air agree with the select dispatch."""
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.fl.loop import run_fl
+
+    cx, cy, ti, tl = _world()
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(S.get_scenario("vehicular"),
+                               ecrt_expected_tx=2.0)
+    comp = CompressionConfig(method="topk", k=5)
+    kw = dict(n_rounds=2, batch_per_round=8, eval_every=1, seed=11,
+              scenario=scen, compression=comp)
+    rb = run_fl(cfg, tc, cx, cy, ti, tl, adaptive_dispatch="bucketed", **kw)
+    rs = run_fl(cfg, tc, cx, cy, ti, tl, adaptive_dispatch="select", **kw)
+    for tb, ts in zip(rb.link, rs.link):
+        assert tb["comp_bits_on_air"] == ts["comp_bits_on_air"]
+    assert rb.accuracy == rs.accuracy
+
+
+@pytest.mark.slow
+def test_compress_ratios_need_bucketed_dispatch():
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.fl.loop import run_fl
+
+    cx, cy, ti, tl = _world()
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(S.get_scenario("iot-lowrate"),
+                               ecrt_expected_tx=2.0)
+    with pytest.raises(ValueError, match="bucketed"):
+        run_fl(cfg, tc, cx, cy, ti, tl, n_rounds=1, batch_per_round=8,
+               seed=7, scenario=scen, adaptive_dispatch="select")
+
+
+@pytest.mark.slow
+def test_run_fedavg_compressed_with_max_abs():
+    """max_abs scaling composes with the sparse uplink: the per-client
+    scale is computed over the *selected* values."""
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.fl.fedavg import run_fedavg
+
+    cx, cy, ti, tl = _world()
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(mode="approx",
+                           channel=CH.ChannelConfig(snr_db=10.0))
+    res = run_fedavg(cfg, tc, cx, cy, ti, tl, n_rounds=2, local_steps=2,
+                     batch_per_step=6, eval_every=1, seed=5,
+                     scale_mode="max_abs",
+                     compression=CompressionConfig(ratio=0.05))
+    assert np.isfinite(res.final_accuracy)
+    assert all("comp_bits_on_air" in rec for rec in res.link)

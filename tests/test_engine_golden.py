@@ -62,6 +62,32 @@ def test_fedsgd_driverless_matches_golden(cfg, world):
                      golden.golden_run_fl(cfg, tc, cx, cy, ti, tl, **kw))
 
 
+def test_compression_none_is_bit_identical(cfg, world):
+    """The compression subsystem must be invisible when off: an explicit
+    ``compression=None`` reproduces the golden pre-compression engine bit
+    for bit (same draws, same airtime, same telemetry)."""
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="approx", channel=CH.ChannelConfig(snr_db=10.0))
+    kw = dict(n_rounds=3, batch_per_round=8, eval_every=2, seed=3)
+    assert_identical(
+        run_fl(cfg, tc, cx, cy, ti, tl, compression=None, **kw),
+        golden.golden_run_fl(cfg, tc, cx, cy, ti, tl, **kw))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_compression_none_scenario_is_bit_identical(cfg, world, dispatch):
+    """Scenario-driven rounds with ``compression=None`` stay pinned to the
+    golden engine under both dispatches."""
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="approx", channel=CH.ChannelConfig(snr_db=10.0))
+    kw = dict(n_rounds=2, batch_per_round=8, eval_every=1, seed=7,
+              scenario=_scenario(), adaptive_dispatch=dispatch)
+    assert_identical(
+        run_fl(cfg, tc, cx, cy, ti, tl, compression=None, **kw),
+        golden.golden_run_fl(cfg, tc, cx, cy, ti, tl, **kw))
+
+
 def test_fedavg_driverless_matches_golden(cfg, world):
     """Covers the analytic-ECRT pricing path + max_abs scaling driver-less."""
     cx, cy, ti, tl = world

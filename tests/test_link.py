@@ -245,7 +245,7 @@ def test_ecrt_expected_tx_single_source(monkeypatch):
 def test_scenario_registry():
     names = S.list_scenarios()
     for expected in ("static", "pedestrian", "vehicular", "shadowed-urban",
-                     "bursty", "iot-flaky"):
+                     "bursty", "iot-flaky", "iot-lowrate"):
         assert expected in names
         assert S.get_scenario(expected).name == expected
     with pytest.raises(KeyError, match="registered"):

@@ -402,7 +402,8 @@ def _preset_round_modes(preset: str, num_clients: int):
 
 
 @pytest.mark.parametrize("preset", ["static", "pedestrian", "vehicular",
-                                    "shadowed-urban", "bursty"])
+                                    "shadowed-urban", "bursty",
+                                    "iot-lowrate"])
 @pytest.mark.parametrize("wire_dtype", ["float32", "bfloat16"])
 def test_bucketed_equals_select_across_presets(preset, wire_dtype):
     """Bucketed ≡ select, bit for bit, on mode mixes drawn from every
