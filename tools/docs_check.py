@@ -1,9 +1,11 @@
-"""Documentation gate for the core + link + fl packages (``make docs-check``).
+"""Documentation gate for the core/link/fl/compress packages
+(``make docs-check``).
 
 Fails (exit 1) when a public module under ``src/repro/core/``,
-``src/repro/link/``, or ``src/repro/fl/`` lacks a module docstring, or a
-public (non-underscore) top-level function in one of those modules lacks a
-function docstring. Kept dependency-free: pure ``ast``.
+``src/repro/link/``, ``src/repro/fl/``, or ``src/repro/compress/`` lacks a
+module docstring, or a public (non-underscore) top-level function in one of
+those modules lacks a function docstring. Kept dependency-free: pure
+``ast``.
 """
 
 from __future__ import annotations
@@ -13,7 +15,7 @@ import pathlib
 import sys
 
 _SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-PACKAGES = [_SRC / "core", _SRC / "link", _SRC / "fl"]
+PACKAGES = [_SRC / "core", _SRC / "link", _SRC / "fl", _SRC / "compress"]
 
 
 def check_module(path: pathlib.Path) -> list[str]:
