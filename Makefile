@@ -4,7 +4,7 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench-link bench-fl bench-compress docs-check
+.PHONY: test bench-smoke bench-link bench-fl bench-compress bench-async docs-check
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -37,7 +37,14 @@ bench-fl:
 bench-compress:
 	$(PY) -m benchmarks.run --only compression
 
-# Fails if a public module (or public function) under
+# Buffered-async (FedBuff) vs synchronous FL under heavy straggling on
+# metro-rush; asserts the buffered arm reaches sync final accuracy in
+# <= 0.6x the event-clock time and writes BENCH_async_fl.json (uploaded
+# as a CI artifact).
+bench-async:
+	$(PY) -m benchmarks.run --only async_fl
+
+# Fails if a public module (or public function/class) under
 # src/repro/{core,link,fl,compress} lacks a docstring.
 docs-check:
 	$(PY) tools/docs_check.py

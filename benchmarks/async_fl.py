@@ -1,0 +1,150 @@
+"""Buffered-async vs synchronous FL under heavy straggling (FedBuff study).
+
+Two arms on the ``metro-rush`` scenario (vehicular fading + 15% compute
+stragglers at 20x slowdown + idle gaps), same world/seed, both driven by
+the buffered engine so they share one event-clock model:
+
+  ``sync``      ``buffer_k = M`` — every aggregation waits for the whole
+                cohort, i.e. the synchronous barrier priced on the event
+                clock (each round costs the *slowest* client's compute +
+                arrival).
+  ``buffered``  ``buffer_k = M // 4`` with polynomial staleness weights —
+                the server folds the buffer every K arrivals; stragglers
+                land late and staleness-damped, and fresh waves dispatch at
+                every aggregation, so 4x the model versions in the same
+                event time.
+
+The comparison is **event-time-matched, not round-matched**: the buffered
+arm runs 4x the versions and traces accuracy vs the event clock. Headline
+(the suite's gate, mirrored in ``BENCH_async_fl.json``): the buffered
+arm's curve reaches the sync arm's *final* accuracy (within 0.02) in at
+most ``0.6x`` the sync arm's total event-clock time — buffering converts
+straggler stalls into extra model versions. Emits CSV lines + the JSON
+artifact (uploaded by the ``bench-async`` CI job). Standalone:
+
+    PYTHONPATH=src python -m benchmarks.async_fl [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, fl_world
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import latency as latency_lib
+from repro.core import transport as T
+from repro.fl.async_engine import run_fl_buffered
+from repro.link import dynamics as dynamics_lib
+from repro.link import scenario as scenario_lib
+
+JSON_PATH = "BENCH_async_fl.json"
+ACC_TOL = 0.02  # "reaches sync accuracy" tolerance
+TIME_FACTOR = 0.6  # the gate's bar: buffered event time <= 0.6x sync's
+
+
+def _first_win(res, target_acc: float, time_budget: float):
+    """Earliest eval point reaching ``target_acc`` within the event-clock
+    ``time_budget``; ``(round, accuracy, event_s)`` dict or ``None``."""
+    for r, acc, t in zip(res.rounds, res.accuracy, res.event_s):
+        if acc >= target_acc and t <= time_budget:
+            return {"round": int(r), "accuracy": float(acc),
+                    "event_s": float(t)}
+    return None
+
+
+def run(quick: bool = True, seed: int = 0) -> dict:
+    """Run both arms on metro-rush and assert the 0.6x event-time gate."""
+    n_clients = 12 if quick else 40
+    sync_rounds = 16 if quick else 40
+    buffered_rounds = 4 * sync_rounds
+    buffer_k = max(2, n_clients // 4)
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05 if quick else 0.01)
+    tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(scenario_lib.get_scenario("metro-rush"),
+                               ecrt_expected_tx=2.0)
+    kw = dict(batch_per_round=32, eval_every=4, seed=seed, scenario=scen)
+
+    report = {"clients": n_clients, "scenario": scen.name,
+              "buffer_k": buffer_k, "arms": {}}
+    arms = {
+        "sync": dict(n_rounds=sync_rounds, buffer_k=None),
+        "buffered": dict(n_rounds=buffered_rounds, buffer_k=buffer_k,
+                         staleness="polynomial"),
+    }
+    results = {}
+    for arm, akw in arms.items():
+        res = run_fl_buffered(cfg, tcfg, cx, cy, ti, tl, **akw, **kw)
+        results[arm] = res
+        emit(f"async_fl/{arm}", res.wall_s * 1e6,
+             f"final_acc={res.final_accuracy:.3f} rounds={akw['n_rounds']} "
+             f"event_clock={res.event_s[-1]:.1f}s "
+             f"airtime={res.airtime_s[-1]:.2f}s")
+        report["arms"][arm] = {
+            "final_acc": float(res.final_accuracy),
+            "rounds": akw["n_rounds"],
+            "buffer_k": akw["buffer_k"] or n_clients,
+            "event_clock_s": float(res.event_s[-1]),
+            "airtime_s": float(res.airtime_s[-1]),
+            "accuracy_curve": [float(a) for a in res.accuracy],
+            "event_curve": [float(t) for t in res.event_s],
+            "wall_s": float(res.wall_s),
+        }
+
+    # Reference figure: what one *fully synchronous* TDMA barrier costs on
+    # this compute model (max compute + summed airtime), vs the event
+    # clock's contention-free arrival model.
+    key = jax.random.fold_in(jax.random.PRNGKey(seed),
+                             dynamics_lib.COMPUTE_KEY_LANE)
+    speed = dynamics_lib.client_speed_factors(key, n_clients, scen.compute)
+    comp_s = dynamics_lib.compute_times(jax.random.PRNGKey(seed + 1),
+                                        scen.compute, n_clients, speed)
+    mean_air = results["sync"].link[0]["airtime_s"] / n_clients
+    barrier = latency_lib.sync_round_duration(
+        np.asarray(comp_s), np.full(n_clients, mean_air))
+    emit("async_fl/tdma_barrier", 0.0,
+         f"one_sync_round={barrier:.2f}s (max_compute + sum_airtime)")
+    report["tdma_barrier_s"] = float(barrier)
+
+    sync = report["arms"]["sync"]
+    target = sync["final_acc"] - ACC_TOL
+    budget = sync["event_clock_s"] * TIME_FACTOR
+    win = _first_win(results["buffered"], target, budget)
+    report["arms"]["buffered"]["win_vs_sync"] = win
+    report["buffered_matches_sync_in_0p6x_time"] = win is not None
+    emit("async_fl/buffered-vs-sync", 0.0,
+         f"target_acc={target:.3f} time_budget={budget:.1f}s "
+         + (f"win@round={win['round']} acc={win['accuracy']:.3f} "
+            f"t={win['event_s']:.1f}s" if win else "win=False"))
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("async_fl/json", 0.0, f"wrote {JSON_PATH}")
+    if win is None:  # the suite doubles as a gate (see benchmarks/run.py)
+        raise AssertionError(
+            "expected the buffered arm to reach sync final accuracy "
+            f"(within {ACC_TOL}) in <= {TIME_FACTOR}x the sync arm's "
+            "event-clock time on metro-rush; see BENCH_async_fl.json")
+    return report
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.async_fl``."""
+    ap = argparse.ArgumentParser(
+        description="buffered-async vs sync FL under straggling")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale profile (40 clients, 40 sync rounds)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,8 @@ SUITES = {
                  "uplink-vs-downlink error budget (Qu et al. asymmetry)"),
     "compression": ("benchmarks.compression",
                     "sparse top-k+EF uplink accuracy-vs-airtime Pareto"),
+    "async_fl": ("benchmarks.async_fl",
+                 "buffered-async vs sync FL under straggling (FedBuff)"),
 }
 
 

@@ -24,6 +24,12 @@ the approx pipeline and indices on protected Gray-MSB bits. The telemetry
 grows compression-ratio / EF-residual-norm / bits-on-air columns (a
 scenario whose policy sets ``compress_ratios`` — e.g. ``iot-lowrate`` —
 compresses deeper in the low-SNR modes).
+
+``--buffered K`` switches to the asynchronous FedBuff-style engine
+(``repro.fl.async_engine``): clients run on their own event clocks (compute
+time + airtime; scenarios like ``metro-rush`` add churn and idle gaps) and
+the server aggregates every K arrivals with polynomially staleness-damped
+weights. The telemetry's ``round`` column then counts dispatched waves.
 """
 
 import argparse
@@ -35,16 +41,22 @@ from repro.core import channel as CH
 from repro.core import transport as T
 from repro.data import synth_mnist
 from repro.fl import partition
+from repro.fl.async_engine import run_fl_buffered
 from repro.fl.loop import run_fl
 from repro.link import policy as policy_lib
 from repro.link import scenario as scenario_lib
 
 
-def _run(cfg, tcfg, data, scen, rounds, compression=None):
+def _run(cfg, tcfg, data, scen, rounds, compression=None, buffer_k=None):
     cx, cy, ti, tl = data
-    return run_fl(cfg, tcfg, cx, cy, ti, tl, n_rounds=rounds,
-                  batch_per_round=32, eval_every=max(2, rounds // 10),
-                  scenario=scen, compression=compression)
+    kw = dict(n_rounds=rounds, batch_per_round=32,
+              eval_every=max(2, rounds // 10), scenario=scen,
+              compression=compression)
+    if buffer_k is not None:
+        return run_fl_buffered(cfg, tcfg, cx, cy, ti, tl,
+                               buffer_k=buffer_k, staleness="polynomial",
+                               **kw)
+    return run_fl(cfg, tcfg, cx, cy, ti, tl, **kw)
 
 
 def main():
@@ -64,6 +76,10 @@ def main():
                     help="sparse top-k + error-feedback uplinks keeping this "
                          "fraction of coordinates (e.g. 0.02 = 50x fewer "
                          "slots); indices ride protected Gray-MSB bits")
+    ap.add_argument("--buffered", type=int, default=None, metavar="K",
+                    help="asynchronous FedBuff-style engine: aggregate "
+                         "every K arrivals with staleness-damped weights "
+                         "instead of closing a synchronous round barrier")
     args = ap.parse_args()
 
     (img, lab), (ti, tl) = synth_mnist.train_test(300, 60)
@@ -96,7 +112,11 @@ def main():
               f"header {compression.header}")
     print()
 
-    res = _run(cfg, tcfg, data, scen, args.rounds, compression)
+    if args.buffered is not None:
+        print(f"buffered async engine: aggregate every K={args.buffered} "
+              "arrivals, polynomial staleness weights\n")
+    res = _run(cfg, tcfg, data, scen, args.rounds, compression,
+               buffer_k=args.buffered)
     dl_cols = "  dl airtime   dl BER" if scen.downlink is not None else ""
     cp_cols = ("    kept  res.norm  bits-on-air" if compression is not None
                else "")
@@ -112,8 +132,9 @@ def main():
         print(f"{t['round']:5d} {t['mean_snr_db']:8.1f}dB "
               f"{t['mean_est_db']:7.1f}dB {t['n_active']:6d} "
               f"{t['airtime_s'] * 1e3:8.2f}ms{dl}{cp}  {t['mode_counts']}")
+    clock = (f" event_clock={res.event_s[-1]:.2f}s" if res.event_s else "")
     print(f"\nadaptive: final_acc={res.final_accuracy:.3f} "
-          f"airtime={res.airtime_s[-1]:.2f}s wall={res.wall_s:.0f}s")
+          f"airtime={res.airtime_s[-1]:.2f}s{clock} wall={res.wall_s:.0f}s")
 
     if args.compare:
         for arm, pol in (("fixed approx/qpsk",
@@ -122,7 +143,7 @@ def main():
                           policy_lib.fixed_policy("ecrt", "qpsk"))):
             r = _run(cfg, tcfg, data,
                      dataclasses.replace(scen, policy=pol), args.rounds,
-                     compression)
+                     compression, buffer_k=args.buffered)
             print(f"{arm}: final_acc={r.final_accuracy:.3f} "
                   f"airtime={r.airtime_s[-1]:.2f}s")
 

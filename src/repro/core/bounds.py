@@ -30,6 +30,8 @@ __all__ = ["ActivationInfo", "ACTIVATIONS", "LayerSpec", "gradient_bound", "cert
 
 @dataclasses.dataclass(frozen=True)
 class ActivationInfo:
+    """Worst-case activation bounds used by the gradient certificate."""
+
     name: str
     output_bound: float  # sup |a| (inf -> depends on input)
     deriv_bound: float  # sup |sigma'|
@@ -45,6 +47,8 @@ ACTIVATIONS = {
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
+    """One fully-connected layer of the certified stack (input->output)."""
+
     fan_out: int  # neurons in this layer (summation width seen from below)
     activation: str = "sigmoid"
     weight_bound: float = 1.0

@@ -59,6 +59,7 @@ class ChannelConfig:
 
     @property
     def large_scale_gain(self) -> float:
+        """Mean received power ``p * d^-alpha`` (linear path-loss model)."""
         return self.tx_power * self.distance ** (-self.pathloss_exp)
 
     @property

@@ -41,6 +41,7 @@ class LdpcCode:
 
     @property
     def k(self) -> int:
+        """Information bits per codeword (rate-1/2: ``n // 2``)."""
         return self.n // 2
 
     @functools.cached_property
@@ -48,11 +49,13 @@ class LdpcCode:
         return _build_matrices(self.n, self.z, self.seed)
 
     @property
-    def H(self) -> np.ndarray:  # (n-k, n) uint8 parity-check matrix
+    def H(self) -> np.ndarray:
+        """``(n-k, n)`` uint8 parity-check matrix."""
         return self._matrices[0]
 
     @property
-    def P(self) -> np.ndarray:  # (n-k, k) uint8: parity = P @ m  (mod 2)
+    def P(self) -> np.ndarray:
+        """``(n-k, k)`` uint8 generator part: ``parity = P @ m (mod 2)``."""
         return self._matrices[1]
 
 

@@ -39,6 +39,7 @@ from repro.core import transport as transport_lib
 
 __all__ = ["DEFAULT_CALIB_CODEWORDS", "DEFAULT_CALIB_MAX_TX", "PhyTimings",
            "round_airtime", "round_airtime_adaptive", "broadcast_airtime",
+           "arrival_times", "sync_round_duration",
            "calibrate_ecrt", "ecrt_expected_tx_curve", "interp_expected_tx",
            "ecrt_expected_tx_profile"]
 
@@ -53,6 +54,8 @@ DEFAULT_CALIB_MAX_TX = 6
 
 @dataclasses.dataclass(frozen=True)
 class PhyTimings:
+    """PHY timing constants that convert transport stats into airtime."""
+
     symbol_rate: float = 13e6  # complex symbols / s (52 subcarriers / 4us)
     t_overhead: float = 200e-6  # preamble + SIFS + ACK per transmission
     fec_encode_overhead: float = 0.05  # fractional airtime stall for FEC proc
@@ -120,6 +123,44 @@ def broadcast_airtime(per_client_air, mode_idx=None) -> float:
         return float(air.max())
     modes = np.asarray(mode_idx).reshape(-1)
     return float(sum(float(air[modes == m].max()) for m in np.unique(modes)))
+
+
+def arrival_times(t_dispatch: float, compute_s, air_s,
+                  downlink_s: float = 0.0) -> np.ndarray:
+    """Event-clock upload-arrival times of one dispatched wave (float64).
+
+    A client dispatched at event time ``t_dispatch`` first receives the
+    broadcast (``downlink_s``, the wall time the PS spends on the wave's
+    downlink leg — zero without one), computes locally for ``compute_s[i]``
+    seconds, then occupies the uplink for ``air_s[i]`` seconds; its update
+    lands at the sum. The event clock is host-side float64 — arrival
+    *ordering* drives the buffered engine's aggregation schedule, so the
+    accumulation must not lose float32 bits across thousands of events.
+    Dropped clients (``air_s[i] == 0``) get their ready-again time from the
+    same formula.
+    """
+    return (np.float64(t_dispatch) + np.float64(downlink_s)
+            + np.asarray(compute_s, np.float64)
+            + np.asarray(air_s, np.float64))
+
+
+def sync_round_duration(compute_s, air_s, active=None) -> float:
+    """Wall-clock seconds of one synchronous (barrier) round.
+
+    Every active client computes in parallel, then the TDMA uplink
+    serializes transmissions: the barrier closes at
+    ``max_i(compute_i) + sum_i(air_i)`` over active clients. The honest
+    yardstick the buffered engine's wall-clock claims are measured
+    against (``benchmarks/async_fl.py``).
+    """
+    comp = np.asarray(compute_s, np.float64).reshape(-1)
+    air = np.asarray(air_s, np.float64).reshape(-1)
+    if active is not None:
+        act = np.asarray(active, bool).reshape(-1)
+        comp, air = comp[act], air[act]
+    if comp.size == 0:
+        return 0.0
+    return float(comp.max() + air.sum())
 
 
 def calibrate_ecrt(

@@ -53,14 +53,17 @@ class ModScheme:
 
     @property
     def bits_per_axis(self) -> int:
+        """Bits per I/Q axis (``k / 2`` for square QAM)."""
         return self.bits_per_symbol // 2
 
     @property
-    def levels(self) -> int:  # L: PAM levels per axis
+    def levels(self) -> int:
+        """``L``: PAM levels per axis."""
         return 1 << self.bits_per_axis
 
     @property
-    def points(self) -> int:  # M = L^2
+    def points(self) -> int:
+        """``M = L^2`` constellation points."""
         return 1 << self.bits_per_symbol
 
     @property

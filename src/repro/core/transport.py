@@ -132,6 +132,8 @@ DOWNLINK_KEY_LANE = 1 << 20
 
 @dataclasses.dataclass(frozen=True)
 class TransportConfig:
+    """One uplink transport: wire mode, modulation, channel, and FEC knobs."""
+
     mode: str = "approx"  # perfect | naive | approx | ecrt
     modulation: str = "qpsk"
     channel: channel_lib.ChannelConfig = dataclasses.field(
@@ -156,6 +158,7 @@ class TransportConfig:
 
     @property
     def scheme(self) -> mod_lib.ModScheme:
+        """The resolved :class:`~repro.core.modulation.ModScheme`."""
         return mod_lib.MOD_SCHEMES[self.modulation]
 
 
@@ -207,6 +210,7 @@ class TxStats:
 
     @property
     def ber(self) -> jax.Array:
+        """End-to-end payload bit-error rate (``bit_errors / n_bits``)."""
         return self.bit_errors / jnp.maximum(self.n_bits, 1)
 
 

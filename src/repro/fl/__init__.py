@@ -1,12 +1,15 @@
 """Federated-learning loops over the simulated wireless links.
 
 ``engine`` is the unified round driver (Algorithm strategies x scenario
-dispatches x uplink/downlink legs); ``loop``/``fedavg`` are the thin
+dispatches x uplink/downlink legs); ``async_engine`` replaces its barrier
+with a FedBuff-style buffered event loop; ``loop``/``fedavg`` are the thin
 algorithm entry points; ``cnn``/``partition`` are the paper's model and
 non-iid data split.
 """
 
 from repro.fl import cnn, partition
+from repro.fl.async_engine import (AsyncRoundEngine, run_fedavg_buffered,
+                                   run_fl_buffered, staleness_weight)
 from repro.fl.engine import FedAvg, FedSGD, FLResult, RoundEngine
 from repro.fl.fedavg import run_fedavg
 from repro.fl.loop import run_fl

@@ -105,6 +105,12 @@ class FLResult:
     # the EF residual)} — driver-less downlink/compressed runs append
     # records with just their own fields. [] otherwise.
     link: list = dataclasses.field(default_factory=list)
+    # Event-clock timestamps (seconds) of each eval point, parallel to
+    # ``rounds``/``accuracy``. Only the buffered asynchronous engine
+    # (``fl.async_engine``) fills this — the synchronous engine has no
+    # event clock and leaves it empty, keeping its results bit-comparable
+    # to pre-async runs.
+    event_s: list = dataclasses.field(default_factory=list)
 
 
 def resolve_scenario(scenario, transport_cfg):

@@ -36,11 +36,78 @@ __all__ = [
     "LinkDynamicsConfig",
     "LinkState",
     "DYNAMICS_PRESETS",
+    "COMPUTE_KEY_LANE",
+    "EVENT_KEY_LANE",
+    "ComputeTimeConfig",
+    "ArrivalConfig",
     "jakes_rho",
     "init_state",
     "step",
     "trajectory",
+    "client_speed_factors",
+    "compute_times",
+    "churn_step",
+    "idle_gaps",
 ]
+
+# Reserved fold_in lanes for the event layer (asynchronous FL). Uplink
+# transport keys fold_in the client index directly (transport.client_keys),
+# the downlink/header legs use transport.DOWNLINK_KEY_LANE (1 << 20) /
+# HEADER_KEY_LANE (1 << 21), and rand-k selection uses
+# sparsify.SELECT_KEY_LANE ((1 << 21) + 1). The event layer claims two more
+# disjoint lanes off the same per-wave base key, so enabling compute-time /
+# churn draws never perturbs any channel, header, or selection draw:
+#
+# * ``COMPUTE_KEY_LANE + i`` — client ``i``'s compute-time draw this wave
+#   (and, on the run's base key, its frozen speed factor).
+# * ``EVENT_KEY_LANE + i`` — client ``i``'s churn (join/leave) uniform;
+#   ``EVENT_KEY_LANE + (1 << 20) + i`` its post-upload idle gap (a fixed
+#   sub-lane offset, so both stay batching-independent).
+#
+# Each client draws from its own folded key, so the draws are independent
+# of cohort batching: evaluating a subset of clients is bit-identical to
+# slicing the full-cohort evaluation.
+COMPUTE_KEY_LANE = 1 << 22
+EVENT_KEY_LANE = 3 << 21
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeTimeConfig:
+    """Per-client local-computation time model for event-driven FL rounds.
+
+    A client dispatched at event time ``t`` finishes local work at
+    ``t + mean_s * speed_i * exp(jitter * z) * straggler``, where
+    ``speed_i = exp(speed_spread * z_i)`` is a frozen per-client lognormal
+    speed factor (persistently slow devices, not just per-wave noise),
+    ``z`` is a fresh per-(wave, client) standard normal, and ``straggler``
+    is ``straggler_factor`` with probability ``straggler_prob`` (else 1) —
+    the heavy tail FedBuff-style buffering is designed to escape. The
+    defaults are degenerate (every client takes exactly ``mean_s`` seconds
+    every wave), which the synchronous-equivalence tests rely on.
+    """
+
+    mean_s: float = 1.0  # mean local-computation time per wave
+    speed_spread: float = 0.0  # lognormal spread of the frozen speed factor
+    jitter: float = 0.0  # per-wave lognormal jitter
+    straggler_prob: float = 0.0  # P(compute straggler) per wave per client
+    straggler_factor: float = 10.0  # compute slowdown when straggling
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    """Client availability between waves of an event-driven FL run.
+
+    ``mean_idle_s`` is the mean of the exponential idle gap a client waits
+    after finishing an upload before it may be dispatched again (Poisson
+    re-arrivals). ``p_leave``/``p_rejoin`` is a per-dispatch-attempt Markov
+    churn process: a joined client leaves with ``p_leave``, a departed one
+    rejoins with ``p_rejoin``. Clients already in flight finish their
+    upload regardless — churn only gates *new* dispatches.
+    """
+
+    mean_idle_s: float = 0.0
+    p_leave: float = 0.0
+    p_rejoin: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +240,92 @@ def trajectory(key: jax.Array, cfg: LinkDynamicsConfig, num_clients: int,
 
     _, snrs = jax.lax.scan(body, state, jax.random.split(k_scan, n_rounds))
     return snrs
+
+
+def client_speed_factors(key: jax.Array, num_clients: int,
+                         cfg: ComputeTimeConfig) -> jax.Array:
+    """Frozen per-client lognormal speed multipliers, ``(num_clients,)``.
+
+    Callers pass ``fold_in(run_key, COMPUTE_KEY_LANE)`` so the draw rides a
+    reserved lane of the run's base key without consuming a split (the
+    synchronous key schedule is untouched). ``speed_spread = 0`` yields
+    exactly 1.0 for every client (``exp(±0.0) == 1.0`` in float32).
+    """
+    def one(i):
+        k = jax.random.fold_in(key, COMPUTE_KEY_LANE + i)
+        return jax.random.normal(k, (), jnp.float32)
+
+    z = jax.vmap(one)(jnp.arange(num_clients))
+    # The barrier pins the draw/arithmetic fusion boundary so the result is
+    # bit-identical eager vs jitted (XLA otherwise reassociates the fused
+    # exp chain by a ULP).
+    z = jax.lax.optimization_barrier(z)
+    return jnp.exp(cfg.speed_spread * z)
+
+
+def compute_times(key: jax.Array, cfg: ComputeTimeConfig, num_clients: int,
+                  speed: jax.Array | None = None) -> jax.Array:
+    """Per-(wave, client) local-computation seconds, ``(num_clients,)``.
+
+    Client ``i`` draws from ``fold_in(key, COMPUTE_KEY_LANE + i)`` (``key``
+    is the wave's round key), so the draw is bit-stable across dispatches
+    and independent of how the cohort is batched: computing a prefix (or
+    any subset) of clients equals slicing the full-cohort result. With the
+    default (degenerate) config the result is exactly ``mean_s`` for every
+    client — the synchronous-equivalence invariant.
+    """
+    def one(i):
+        k = jax.random.fold_in(key, COMPUTE_KEY_LANE + i)
+        kz, ku = jax.random.split(k)
+        return (jax.random.normal(kz, (), jnp.float32),
+                jax.random.uniform(ku, (), jnp.float32))
+
+    z, u = jax.vmap(one)(jnp.arange(num_clients))
+    # Bit-stability barrier: see client_speed_factors.
+    z, u = jax.lax.optimization_barrier((z, u))
+    slow = jnp.where(u < cfg.straggler_prob, cfg.straggler_factor, 1.0)
+    t = cfg.mean_s * jnp.exp(cfg.jitter * z) * slow
+    if speed is not None:
+        t = t * speed
+    return t
+
+
+def churn_step(key: jax.Array, joined: jax.Array,
+               cfg: ArrivalConfig) -> jax.Array:
+    """One dispatch attempt's join/leave update; ``(num_clients,)`` 0/1.
+
+    Client ``i``'s uniform rides ``fold_in(key, EVENT_KEY_LANE + i)`` —
+    per-client lanes, so the churn of any subset is independent of the
+    rest of the cohort.
+    """
+    def one(i):
+        k = jax.random.fold_in(key, EVENT_KEY_LANE + i)
+        return jax.random.uniform(k, (), jnp.float32)
+
+    u = jax.vmap(one)(jnp.arange(joined.shape[0]))
+    j = jnp.asarray(joined) > 0
+    return jnp.where(j, u >= cfg.p_leave, u < cfg.p_rejoin).astype(jnp.float32)
+
+
+def idle_gaps(key: jax.Array, num_clients: int,
+              cfg: ArrivalConfig) -> jax.Array:
+    """Per-client exponential post-upload idle gaps (seconds).
+
+    Offset by a fixed sub-lane (``1 << 20``, far above any plausible cohort
+    size) inside the event lane so a wave's idle draws never collide with
+    its churn uniforms — a *constant* offset, so slicing a full-cohort draw
+    equals drawing the subcohort (batching independence, like every other
+    per-client lane). ``mean_idle_s = 0`` yields exactly zero (immediate
+    re-availability).
+    """
+    def one(i):
+        k = jax.random.fold_in(key, EVENT_KEY_LANE + (1 << 20) + i)
+        return jax.random.exponential(k, (), jnp.float32)
+
+    g = jax.vmap(one)(jnp.arange(num_clients))
+    # Bit-stability barrier: see client_speed_factors.
+    g = jax.lax.optimization_barrier(g)
+    return g * cfg.mean_idle_s
 
 
 # Named mobility profiles (round interval ~1 s assumed for the rho values;

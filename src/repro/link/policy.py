@@ -120,7 +120,8 @@ def initial_mode(snr_est_db: jax.Array, cfg: PolicyConfig) -> jax.Array:
 
 
 def choose_mode(snr_est_db: jax.Array, prev_mode: jax.Array,
-                cfg: PolicyConfig) -> jax.Array:
+                cfg: PolicyConfig, observed: jax.Array | None = None
+                ) -> jax.Array:
     """Per-client mode for this round given noisy CSI and the previous mode.
 
     With half-window ``h = hysteresis_db / 2``: ``up`` counts thresholds
@@ -129,13 +130,25 @@ def choose_mode(snr_est_db: jax.Array, prev_mode: jax.Array,
     ``up <= down`` always, and ``clip(prev, up, down)`` is exactly
     "move only when the margin is decisive, else keep the current mode".
     Pure jnp — broadcasts over any leading shape.
+
+    ``observed`` (0/1, broadcastable to the client shape) marks which
+    clients actually took part this round. Unobserved clients keep
+    ``prev_mode`` untouched — their hysteresis band must survive
+    participation gaps (an asynchronous wave only refreshes the CSI of the
+    clients it dispatched; letting a stale estimate clip an absent client's
+    mode would flap it on re-entry). ``observed=None`` (every synchronous
+    round) is bit-identical to the pre-mask behavior.
     """
     thr = jnp.asarray(cfg.thresholds_db, jnp.float32)
     snr = jnp.asarray(snr_est_db, jnp.float32)[..., None]
     h = cfg.hysteresis_db / 2.0
     up = jnp.sum(snr >= thr + h, axis=-1).astype(jnp.int32)
     down = jnp.sum(snr >= thr - h, axis=-1).astype(jnp.int32)
-    return jnp.clip(jnp.asarray(prev_mode, jnp.int32), up, down)
+    prev = jnp.asarray(prev_mode, jnp.int32)
+    mode = jnp.clip(prev, up, down)
+    if observed is None:
+        return mode
+    return jnp.where(jnp.asarray(observed) > 0, mode, prev)
 
 
 def downlink_mode(snr_est_db: jax.Array, cfg: PolicyConfig,

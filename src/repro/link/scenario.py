@@ -105,6 +105,13 @@ class Scenario:
     # bit-identical to pre-compression behavior. Per-mode slot budgets come
     # from ``policy.compress_ratios`` (the CSI-adaptive column).
     compression: CompressionConfig | None = None
+    # Event-layer defaults for the buffered (asynchronous) engine: how long
+    # local computation takes per wave and how clients churn/idle between
+    # waves. Both are ignored by the synchronous engine; ``compute=None``
+    # resolves to the degenerate constant-time model and ``arrival=None``
+    # means always-available clients with no idle gaps.
+    compute: dynamics_lib.ComputeTimeConfig | None = None
+    arrival: dynamics_lib.ArrivalConfig | None = None
     description: str = ""
 
 
@@ -223,15 +230,25 @@ class ScenarioDriver:
         return state, mode0, op_point
 
     def round(self, state: dynamics_lib.LinkState, prev_mode: jax.Array,
-              prev_est_db: jax.Array, key: jax.Array
+              prev_est_db: jax.Array, key: jax.Array,
+              observed: jax.Array | None = None
               ) -> tuple[dynamics_lib.LinkState, LinkRound]:
-        """One link round: dynamics -> estimator -> policy -> availability."""
+        """One link round: dynamics -> estimator -> policy -> availability.
+
+        ``observed`` (0/1 per client, or ``None`` = everyone) marks the
+        clients actually dispatched this wave: unobserved clients keep
+        their previous mode (``policy.choose_mode``'s participation mask),
+        so hysteresis state survives the participation gaps of a buffered
+        asynchronous run. ``None`` is bit-identical to the synchronous
+        behavior.
+        """
         scen = self.scenario
         k_dyn, k_est, k_drop, k_strag = jax.random.split(key, 4)
         state, snr = dynamics_lib.step(state, k_dyn, scen.dynamics)
         est = estimator_lib.step_estimate(snr, prev_est_db, k_est,
                                           scen.estimator)
-        mode = policy_lib.choose_mode(est, prev_mode, scen.policy)
+        mode = policy_lib.choose_mode(est, prev_mode, scen.policy,
+                                      observed=observed)
         shape = snr.shape
         active = jax.random.bernoulli(
             k_drop, 1.0 - scen.dropout_prob, shape).astype(jnp.float32)
@@ -344,3 +361,22 @@ _preset("iot-lowrate",
         description="narrowband low-SNR IoT links; top-k+EF sparse uplinks "
                     "on by default, compressed deepest in the protected "
                     "low-SNR modes (CSI-adaptive ratio column)")
+_preset("metro-rush", dyn="vehicular",
+        dropout_prob=0.05, straggler_prob=0.10, straggler_slowdown=3.0,
+        compute=dynamics_lib.ComputeTimeConfig(
+            mean_s=0.5, speed_spread=0.4, jitter=0.3,
+            straggler_prob=0.15, straggler_factor=20.0),
+        arrival=dynamics_lib.ArrivalConfig(mean_idle_s=0.25),
+        description="rush-hour metro cell: vehicular links, heavy-tailed "
+                    "compute stragglers (20x spells), Poisson re-arrival "
+                    "gaps — the buffered engine's home turf")
+_preset("global-churn", dyn="shadowed-urban",
+        dropout_prob=0.05,
+        compute=dynamics_lib.ComputeTimeConfig(
+            mean_s=1.0, speed_spread=0.5, jitter=0.2,
+            straggler_prob=0.05, straggler_factor=8.0),
+        arrival=dynamics_lib.ArrivalConfig(
+            mean_idle_s=1.0, p_leave=0.10, p_rejoin=0.30),
+        description="planet-scale cohort: urban-canyon shadowing with "
+                    "clients leaving and rejoining between waves (EF "
+                    "residuals and hysteresis state must survive the gaps)")

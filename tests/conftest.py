@@ -4,7 +4,8 @@ The property tests (``test_float_codec``, ``test_modulation``,
 ``test_kernels``) are written against the real `hypothesis` API. When the
 package is unavailable (hermetic CI images pin only jax + pytest), we install
 a minimal deterministic stand-in *before collection*: same decorator surface
-(`given`, `settings`, `strategies.lists/floats/integers/sampled_from`), but
+(`given`, `settings`,
+`strategies.lists/floats/integers/sampled_from/booleans/tuples`), but
 examples are drawn from a fixed per-test PRNG seeded by the test name, with
 boundary values injected first. No shrinking — a failing example prints its
 arguments via the assertion itself.
@@ -87,6 +88,24 @@ class _SampledFrom(_Strategy):
         return rng.choice(self.items)
 
 
+class _Booleans(_Strategy):
+    def example(self, rng, i):
+        # Both values first, then random.
+        if i < 2:
+            return bool(i)
+        return rng.random() < 0.5
+
+
+class _Tuples(_Strategy):
+    def __init__(self, *elems):
+        self.elems = elems
+
+    def example(self, rng, i):
+        # Boundary-first elementwise on the first examples, then random.
+        return tuple(e.example(rng, i if i < 2 else 3 + rng.randint(0, 7))
+                     for e in self.elems)
+
+
 class _Lists(_Strategy):
     def __init__(self, elem, min_size=0, max_size=10):
         self.elem, self.lo, self.hi = elem, int(min_size), int(max_size)
@@ -133,6 +152,8 @@ def _install_hypothesis_stub() -> None:
     )
     st.sampled_from = _SampledFrom
     st.lists = lambda elem, min_size=0, max_size=10, **kw: _Lists(elem, min_size, max_size)
+    st.booleans = lambda **kw: _Booleans()
+    st.tuples = _Tuples
 
     hyp = types.ModuleType("hypothesis")
     hyp.given = _stub_given

@@ -1,0 +1,171 @@
+"""Degenerate-equivalence gate for the buffered asynchronous engine.
+
+The load-bearing invariant of ``repro.fl.async_engine``: with simultaneous
+arrivals (the default degenerate ``ComputeTimeConfig`` — every client's
+compute time is exactly ``mean_s``, no churn), ``buffer_k`` equal to the
+cohort size (the ``buffer_k=None`` default), and constant staleness
+weights, every wave is one full synchronous round and the buffered engine
+must be **bit-identical** to the synchronous ``RoundEngine`` — same
+accuracy trajectory, same cumulative airtime, same per-round link/
+compression/downlink telemetry — for FedSGD and FedAvg, driver-less and
+scenario-driven, under both adaptive dispatches, with and without the
+compressed uplink and the noisy downlink leg. Any change to the wave key
+schedule, the member-mask plumbing, or the aggregation arithmetic shows up
+here as a float mismatch.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.compress.sparsify import CompressionConfig
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.data import synth_mnist
+from repro.fl import partition
+from repro.fl.async_engine import run_fedavg_buffered, run_fl_buffered
+from repro.fl.fedavg import run_fedavg
+from repro.fl.loop import run_fl
+from repro.link import scenario as S
+
+
+@pytest.fixture(scope="module")
+def world():
+    (img, lab), (ti, tl) = synth_mnist.train_test(60, 16, seed=0)
+    parts = partition.non_iid_partition(img, lab, n_clients=4)
+    cx, cy = partition.stack_clients(parts, per_client=24)
+    return cx, cy, ti, tl
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(cnn_config(), lr=0.1)
+
+
+def _tc():
+    return T.TransportConfig(mode="approx",
+                             channel=CH.ChannelConfig(snr_db=10.0))
+
+
+def _scenario():
+    # Explicit ecrt_expected_tx skips LDPC calibration; dropout exercises
+    # the buffer's drain-flush path (dropped clients never arrive, so the
+    # wave aggregates short of buffer_k — exactly the weighted sync round).
+    return dataclasses.replace(S.get_scenario("vehicular"),
+                               ecrt_expected_tx=2.0, dropout_prob=0.1)
+
+
+def assert_identical(a, b):
+    """Bit-exact FLResult comparison (everything but wall-clock time)."""
+    assert a.rounds == b.rounds
+    assert a.accuracy == b.accuracy  # float lists: exact equality intended
+    assert a.airtime_s == b.airtime_s
+    assert a.final_accuracy == b.final_accuracy
+    assert a.link == b.link  # per-round telemetry dicts, exact
+    # The sync engine has no event clock; the async one must have one
+    # timestamp per eval point.
+    assert a.event_s == []
+    assert len(b.event_s) == len(b.rounds)
+
+
+KW = dict(n_rounds=3, batch_per_round=8, eval_every=2, seed=3)
+AKW = dict(n_rounds=3, local_steps=2, batch_per_step=6,
+           scale_mode="max_abs", eval_every=2, seed=5)
+
+
+def test_fedsgd_driverless_degenerate_is_sync(cfg, world):
+    cx, cy, ti, tl = world
+    assert_identical(run_fl(cfg, _tc(), cx, cy, ti, tl, **KW),
+                     run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, **KW))
+
+
+def test_fedavg_driverless_degenerate_is_sync(cfg, world):
+    cx, cy, ti, tl = world
+    tc = T.TransportConfig(mode="ecrt", channel=CH.ChannelConfig(snr_db=6.0),
+                           simulate_fec=False, ecrt_expected_tx=1.3)
+    assert_identical(run_fedavg(cfg, tc, cx, cy, ti, tl, **AKW),
+                     run_fedavg_buffered(cfg, tc, cx, cy, ti, tl, **AKW))
+
+
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_fedsgd_scenario_degenerate_is_sync(cfg, world, dispatch):
+    cx, cy, ti, tl = world
+    kw = dict(scenario=_scenario(), adaptive_dispatch=dispatch, **KW)
+    assert_identical(run_fl(cfg, _tc(), cx, cy, ti, tl, **kw),
+                     run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, **kw))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_fedavg_scenario_degenerate_is_sync(cfg, world, dispatch):
+    cx, cy, ti, tl = world
+    kw = dict(scenario=_scenario(), adaptive_dispatch=dispatch, **AKW)
+    assert_identical(run_fedavg(cfg, _tc(), cx, cy, ti, tl, **kw),
+                     run_fedavg_buffered(cfg, _tc(), cx, cy, ti, tl, **kw))
+
+
+def test_compressed_driverless_degenerate_is_sync(cfg, world):
+    """EF residual state must thread through the wave functions without
+    perturbing the degenerate schedule."""
+    cx, cy, ti, tl = world
+    comp = CompressionConfig(method="topk", ratio=0.25)
+    assert_identical(
+        run_fl(cfg, _tc(), cx, cy, ti, tl, compression=comp, **KW),
+        run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, compression=comp, **KW))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_compressed_scenario_degenerate_is_sync(cfg, world, dispatch):
+    """Member-masked EF (``active = member * rnd.active``) must reduce to
+    the synchronous dropout-masked EF when every client is a member."""
+    cx, cy, ti, tl = world
+    comp = CompressionConfig(method="randk", ratio=0.25)
+    kw = dict(scenario=_scenario(), adaptive_dispatch=dispatch,
+              compression=comp, **KW)
+    assert_identical(run_fl(cfg, _tc(), cx, cy, ti, tl, **kw),
+                     run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, **kw))
+
+
+def test_downlink_driverless_degenerate_is_sync(cfg, world):
+    cx, cy, ti, tl = world
+    dl = S.DownlinkConfig(mode="approx", snr_offset_db=6.0)
+    assert_identical(
+        run_fl(cfg, _tc(), cx, cy, ti, tl, downlink=dl, **KW),
+        run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, downlink=dl, **KW))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dispatch", ["bucketed", "select"])
+def test_downlink_scenario_degenerate_is_sync(cfg, world, dispatch):
+    """The adaptive broadcast leg (CSI-picked downlink modes) rides the
+    same wave key and must not disturb the degenerate schedule."""
+    cx, cy, ti, tl = world
+    dl = S.DownlinkConfig(mode="approx", snr_offset_db=6.0, adaptive=True)
+    kw = dict(scenario=_scenario(), adaptive_dispatch=dispatch,
+              downlink=dl, **KW)
+    assert_identical(run_fl(cfg, _tc(), cx, cy, ti, tl, **kw),
+                     run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, **kw))
+
+
+def test_explicit_buffer_k_equal_cohort_matches_default(cfg, world):
+    """``buffer_k=M`` spelled explicitly is the same engine as the
+    ``None`` default."""
+    cx, cy, ti, tl = world
+    a = run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, buffer_k=4, **KW)
+    b = run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, **KW)
+    assert a.accuracy == b.accuracy
+    assert a.airtime_s == b.airtime_s
+    assert a.event_s == b.event_s
+
+
+def test_small_buffer_diverges_from_sync(cfg, world):
+    """Sanity check that the gate can fail: K < cohort under per-client
+    airtime spread actually changes the trajectory (otherwise the
+    equivalence assertions above would be vacuous)."""
+    cx, cy, ti, tl = world
+    s = run_fl(cfg, _tc(), cx, cy, ti, tl, **KW)
+    b = run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, buffer_k=1, **KW)
+    assert b.rounds == s.rounds
+    assert b.accuracy != s.accuracy

@@ -1,0 +1,215 @@
+"""Property battery for the buffered engine's aggregation + event layer.
+
+Three families, per the async-engine contract:
+
+* **buffer algebra** — ``weighted_buffer_mean`` is invariant to the order
+  updates arrived in (entries are canonicalized by wave id before any
+  float op), staleness weights are non-negative / 1 at zero staleness /
+  non-increasing, and a buffer of identical payloads aggregates to that
+  payload regardless of the weights (the normalization property);
+* **arrival determinism** — compute-time, churn, and idle draws are
+  bit-stable between jit and eager and independent of cohort batching
+  (``draws(key, M)[:m] == draws(key, m)``: every client folds its own
+  index, so who else is in the wave cannot perturb a client's draw);
+* **schedule stability** — the buffered engine's event clock is
+  reproducible: same seed, same ``FLResult`` (timestamps included).
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+stub in ``conftest.py`` (which these tests' ``booleans``/``tuples``
+strategies extend).
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fl.async_engine import (STALENESS_KINDS, staleness_weight,
+                                   weighted_buffer_mean)
+from repro.link import dynamics as D
+
+# ------------------------------------------------------------ buffer algebra
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=5),
+       st.integers(min_value=0, max_value=10_000))
+def test_weighted_buffer_mean_permutation_invariant(n_waves, seed):
+    """Arrival order must not change the aggregate, bit for bit."""
+    rng = np.random.default_rng(seed)
+    entries = []
+    for w in range(n_waves):
+        hat = {"g": jnp.asarray(rng.standard_normal((4, 6)), jnp.float32)}
+        wvec = jnp.asarray(
+            rng.random(4) * (rng.random(4) < 0.7), jnp.float32)
+        entries.append((w, hat, wvec))
+    ref = weighted_buffer_mean(entries)
+    shuffled = list(entries)
+    random.Random(seed).shuffle(shuffled)
+    out = weighted_buffer_mean(shuffled)
+    assert jnp.array_equal(ref["g"], out["g"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(STALENESS_KINDS),
+       st.integers(min_value=0, max_value=100),
+       st.floats(min_value=0.1, max_value=2.0))
+def test_staleness_weight_contract(kind, s, alpha):
+    """Non-negative, exactly 1 at s=0, non-increasing in s; the constant
+    kind is exactly 1 everywhere (the synchronous-equivalence setting)."""
+    w = float(staleness_weight(s, kind, alpha))
+    assert w >= 0.0
+    assert float(staleness_weight(0, kind, alpha)) == 1.0
+    assert w <= float(staleness_weight(max(s - 1, 0), kind, alpha)) + 1e-7
+    if kind == "constant":
+        assert w == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.tuples(st.sampled_from(STALENESS_KINDS), st.booleans()),
+       st.integers(min_value=0, max_value=10_000))
+def test_identical_updates_aggregate_to_identity(kind_full, seed):
+    """A buffer of waves all carrying payload X aggregates to X under any
+    staleness weighting — the weights normalize away."""
+    kind, full_mask = kind_full
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((1, 8)), jnp.float32)
+    hat = jnp.repeat(x, 4, axis=0)
+    entries = []
+    for w in range(3):
+        mask = np.ones(4, np.float32)
+        if not full_mask:
+            mask[rng.integers(0, 4)] = 0.0
+        om = float(staleness_weight(w, kind, 0.5))
+        entries.append((w, {"g": hat}, jnp.asarray(mask * np.float32(om))))
+    out = weighted_buffer_mean(entries)
+    np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(x[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_staleness_weight_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        staleness_weight(1, "exponential")
+
+
+def test_weighted_buffer_mean_zero_weights_is_zero():
+    """All-dropped buffer: the model must not move (zeros, not NaN)."""
+    hat = {"g": jnp.ones((3, 5), jnp.float32)}
+    out = weighted_buffer_mean([(0, hat, jnp.zeros(3, jnp.float32))])
+    assert jnp.array_equal(out["g"], jnp.zeros(5, jnp.float32))
+
+
+# ------------------------------------------------------- arrival determinism
+
+_COMPUTE_CFG = D.ComputeTimeConfig(mean_s=0.5, speed_spread=0.4, jitter=0.3,
+                                   straggler_prob=0.2, straggler_factor=5.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=12))
+def test_compute_times_batching_independent(key_seed, m):
+    """A client's compute draw depends on (key, client index) only —
+    slicing the full-cohort draw equals drawing the subcohort."""
+    key = jax.random.PRNGKey(key_seed)
+    full = D.compute_times(key, _COMPUTE_CFG, 12)
+    sub = D.compute_times(key, _COMPUTE_CFG, m)
+    assert jnp.array_equal(full[:m], sub)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_compute_times_jit_matches_eager(key_seed):
+    key = jax.random.PRNGKey(key_seed)
+    eager = D.compute_times(key, _COMPUTE_CFG, 8)
+    jitted = jax.jit(lambda k: D.compute_times(k, _COMPUTE_CFG, 8))(key)
+    assert jnp.array_equal(eager, jitted)
+    assert bool(jnp.all(eager > 0))
+
+
+def test_compute_times_degenerate_is_exactly_mean():
+    """The default config is the synchronous-equivalence model: every
+    client computes in exactly ``mean_s`` seconds, no randomness."""
+    key = jax.random.PRNGKey(7)
+    t = D.compute_times(key, D.ComputeTimeConfig(), 6)
+    assert jnp.array_equal(t, jnp.full(6, 1.0, jnp.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.integers(min_value=1, max_value=10))
+def test_idle_gaps_batching_independent(key_seed, m):
+    cfg = D.ArrivalConfig(mean_idle_s=2.0)
+    key = jax.random.PRNGKey(key_seed)
+    full = D.idle_gaps(key, 10, cfg)
+    assert jnp.array_equal(full[:m], D.idle_gaps(key, m, cfg))
+    assert bool(jnp.all(full >= 0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.lists(st.booleans(), min_size=1, max_size=10))
+def test_churn_step_batching_independent(key_seed, joined_bits):
+    """Churn flips ride per-client fold_in lanes too: a client's fate is
+    independent of the cohort it is drawn with."""
+    cfg = D.ArrivalConfig(p_leave=0.3, p_rejoin=0.4)
+    key = jax.random.PRNGKey(key_seed)
+    joined = jnp.asarray(np.array(joined_bits, np.float32))
+    m = joined.shape[0]
+    padded = jnp.concatenate([joined, jnp.zeros(3, jnp.float32)])
+    full = D.churn_step(key, padded, cfg)
+    sub = D.churn_step(key, joined, cfg)
+    assert jnp.array_equal(full[:m], sub)
+    assert set(np.asarray(sub).tolist()) <= {0.0, 1.0}
+
+
+def test_speed_factors_frozen_and_positive():
+    key = jax.random.PRNGKey(3)
+    cfg = D.ComputeTimeConfig(speed_spread=0.5)
+    a = D.client_speed_factors(key, 8, cfg)
+    b = D.client_speed_factors(key, 8, cfg)
+    assert jnp.array_equal(a, b)
+    assert bool(jnp.all(a > 0))
+    # No spread -> exactly 1 (degenerate homogeneity).
+    ones = D.client_speed_factors(key, 8, D.ComputeTimeConfig())
+    assert jnp.array_equal(ones, jnp.ones(8, jnp.float32))
+
+
+# ------------------------------------------------------- schedule stability
+
+
+@pytest.mark.slow
+def test_buffered_run_reproducible():
+    """Same seed, same buffered run — accuracy, airtime, and the event
+    clock are all deterministic despite host-side heap scheduling."""
+    import dataclasses
+
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.core import channel as CH
+    from repro.core import transport as T
+    from repro.data import synth_mnist
+    from repro.fl import partition
+    from repro.fl.async_engine import run_fl_buffered
+    from repro.link import scenario as S
+
+    (img, lab), (ti, tl) = synth_mnist.train_test(60, 16, seed=0)
+    parts = partition.non_iid_partition(img, lab, n_clients=4)
+    cx, cy = partition.stack_clients(parts, per_client=24)
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(mode="approx",
+                           channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(S.get_scenario("metro-rush"),
+                               ecrt_expected_tx=2.0)
+    kw = dict(n_rounds=4, batch_per_round=8, eval_every=2, seed=11,
+              scenario=scen, buffer_k=2, staleness="polynomial")
+    a = run_fl_buffered(cfg, tc, cx, cy, ti, tl, **kw)
+    b = run_fl_buffered(cfg, tc, cx, cy, ti, tl, **kw)
+    assert a.accuracy == b.accuracy
+    assert a.airtime_s == b.airtime_s
+    assert a.event_s == b.event_s
+    assert len(a.event_s) == len(a.rounds)
+    assert all(t2 >= t1 for t1, t2 in zip(a.event_s, a.event_s[1:]))

@@ -89,6 +89,78 @@ def test_ef_dropped_client_keeps_accumulation():
     assert not np.array_equal(np.asarray(r_active), np.asarray(r_dropped))
 
 
+def test_ef_identity_accumulates_across_participation_gaps():
+    """transmitted + residual ≡ accumulated identity over a *history* with
+    gaps: a client that participates intermittently must end with
+    ``sum(sent) + residual == sum(participated grads)`` — no gradient mass
+    is created or lost while it sits out (buffered-engine semantics: a
+    non-participating wave leaves the residual untouched)."""
+    cfg = CompressionConfig()
+    M, k, n_waves = 3, 12, 6
+    participation = np.array([[1, 0, 1, 0, 0, 1],
+                              [1, 1, 1, 1, 1, 1],
+                              [0, 0, 0, 1, 0, 1]], np.float32)
+    res = jnp.zeros((M, DIM), jnp.float32)
+    total_sent = np.zeros((M, DIM), np.float32)
+    total_grad = np.zeros((M, DIM), np.float32)
+    for w in range(n_waves):
+        grads = jax.random.normal(jax.random.fold_in(KEY, 100 + w), (M, DIM))
+        member = jnp.asarray(participation[:, w])
+        vals, idx, new_res = SP.ef_select_batch(res, grads, k, cfg,
+                                                active=member)
+        new_res = jnp.where(member[:, None] > 0, new_res, res)
+        sent = np.asarray(SP.scatter_dense_batch(vals, idx, DIM))
+        total_sent += sent * participation[:, w][:, None]
+        total_grad += np.asarray(grads) * participation[:, w][:, None]
+        res = new_res
+    np.testing.assert_allclose(total_sent + np.asarray(res), total_grad,
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_ef_residual_bit_exact_across_buffered_gaps():
+    """Engine-level gap contract: drive the buffered engine's compressed
+    wave function directly with member masks. A client absent for R waves
+    re-enters with its accumulated residual **bit-exact** — the masked
+    wave computation (its rows are mask fodder) must not perturb it."""
+    from repro.configs.mnist_cnn import config as cnn_config
+    from repro.fl.async_engine import AsyncRoundEngine
+    from repro.fl.engine import FedSGD
+
+    cx, cy, ti, tl = _world()
+    cfg = dataclasses.replace(cnn_config(), lr=0.1)
+    tc = T.TransportConfig(mode="approx",
+                           channel=CH.ChannelConfig(snr_db=10.0))
+    eng = AsyncRoundEngine(FedSGD(cfg, batch_per_round=8), tc, cx, cy, ti,
+                           tl, n_rounds=1, seed=3,
+                           compression=CompressionConfig(ratio=0.25))
+    rng = np.random.default_rng(0)
+    params, residual = eng.params, eng._ef_residual
+    absent = 2
+    member = np.ones(eng.num_clients, np.float32)
+    member[absent] = 0.0
+    frozen = np.asarray(residual[absent]).copy()
+    key = jax.random.PRNGKey(42)
+    for w in range(3):  # R = 3 waves with client 2 out
+        key, rk = jax.random.split(key)
+        xb, yb = eng.algo.sample(rng, cx, cy)
+        _, _, _, residual = eng._wave_plain_comp(
+            params, xb, yb, rk, residual, jnp.asarray(member))
+        np.testing.assert_array_equal(
+            np.asarray(residual[absent]).view(np.uint32),
+            frozen.view(np.uint32))
+    # Members actually accumulated state meanwhile.
+    assert not np.array_equal(np.asarray(residual[0]),
+                              np.zeros_like(frozen))
+    # Re-entry wave: the absent client transmits from its (intact)
+    # accumulated residual and its row finally moves.
+    key, rk = jax.random.split(key)
+    xb, yb = eng.algo.sample(rng, cx, cy)
+    _, _, _, res_back = eng._wave_plain_comp(
+        params, xb, yb, rk, residual, jnp.ones(eng.num_clients, jnp.float32))
+    assert not np.array_equal(np.asarray(res_back[absent]), frozen)
+
+
 def test_threshold_zeroes_small_slots_and_keeps_them_in_residual():
     cfg = CompressionConfig(method="threshold", threshold=10.0)
     res, grad = _acc_pair(seed=11)

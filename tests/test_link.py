@@ -124,6 +124,40 @@ def test_hysteresis_holds_mode_inside_window():
     assert int(P.choose_mode(jnp.array([4.9]), prev_hi, pc)[0]) == 0
 
 
+def test_choose_mode_observed_mask_holds_absent_clients():
+    """Regression: a client that sat out a wave reported no CSI, so its
+    hysteresis state must freeze — ``observed=0`` returns ``prev_mode``
+    verbatim even when the (stale or garbage) estimate would demand a
+    switch. Without the mask, one crashed CSI reading while absent would
+    flap the mode the client re-enters with."""
+    pc = P.PolicyConfig(hysteresis_db=2.0)
+    prev = jnp.array([3, 0, 2], dtype=jnp.int32)
+    crashed = jnp.array([-40.0, 60.0, 14.0])  # would move every client
+    observed = jnp.array([0.0, 0.0, 1.0])
+    m = P.choose_mode(crashed, prev, pc, observed=observed)
+    np.testing.assert_array_equal(np.asarray(m[:2]), np.asarray(prev[:2]))
+    assert int(m[2]) == 1  # the observed client still adapts (14 dB -> m1)
+    # observed=None keeps the historical unmasked behavior bit-for-bit.
+    np.testing.assert_array_equal(
+        np.asarray(P.choose_mode(crashed, prev, pc)),
+        np.asarray(P.choose_mode(crashed, prev, pc,
+                                 observed=jnp.ones(3))))
+
+
+def test_choose_mode_observed_no_flap_after_gap():
+    """In-band CSI across a participation gap: holding the mode while
+    absent, then re-entering at the same SNR, must land back on the mode
+    the client left with (no transient flap from the gap itself)."""
+    pc = P.PolicyConfig(hysteresis_db=2.0)
+    mode = jnp.array([1], dtype=jnp.int32)
+    snr = jnp.array([6.5])  # inside the 6 +- 1 hysteresis window
+    for _ in range(4):  # absent waves: whatever CSI says, mode holds
+        mode = P.choose_mode(jnp.array([-30.0]), mode, pc,
+                             observed=jnp.zeros(1))
+    back = P.choose_mode(snr, mode, pc, observed=jnp.ones(1))
+    assert int(back[0]) == 1
+
+
 def test_policy_can_jump_multiple_modes():
     pc = P.PolicyConfig()
     m = P.choose_mode(jnp.array([35.0]), jnp.array([0], jnp.int32), pc)

@@ -3,9 +3,11 @@
 
 Fails (exit 1) when a public module under ``src/repro/core/``,
 ``src/repro/link/``, ``src/repro/fl/``, or ``src/repro/compress/`` lacks a
-module docstring, or a public (non-underscore) top-level function in one of
-those modules lacks a function docstring. Kept dependency-free: pure
-``ast``.
+module docstring, or a public (non-underscore) top-level function or class
+in one of those modules lacks its own docstring. Public *methods* of
+public classes are also checked (dunder methods other than ``__init__``
+are exempt; ``__init__`` may document itself in the class docstring
+instead, the repo's prevailing style). Kept dependency-free: pure ``ast``.
 """
 
 from __future__ import annotations
@@ -31,6 +33,21 @@ def check_module(path: pathlib.Path) -> list[str]:
                 problems.append(
                     f"{path}:{node.lineno}: public function "
                     f"`{node.name}` missing docstring")
+        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            if ast.get_docstring(node) is None:
+                problems.append(
+                    f"{path}:{node.lineno}: public class "
+                    f"`{node.name}` missing docstring")
+            for sub in node.body:
+                if not isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                    continue
+                if sub.name.startswith("_"):  # incl. __init__: the class
+                    continue                  # docstring documents it
+                if ast.get_docstring(sub) is None:
+                    problems.append(
+                        f"{path}:{sub.lineno}: public method "
+                        f"`{node.name}.{sub.name}` missing docstring")
     return problems
 
 
