@@ -4,7 +4,8 @@
 PY := python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke bench-link bench-fl bench-compress bench-async docs-check
+.PHONY: test bench-smoke bench-link bench-fl bench-compress bench-async \
+        bench-obs docs-check
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -44,7 +45,16 @@ bench-compress:
 bench-async:
 	$(PY) -m benchmarks.run --only async_fl
 
+# Observability smoke: a 5-round buffered metro-rush run with the JSONL
+# ledger, the Perfetto trace recorder, and the phase timers attached;
+# asserts the ledger schema-validates and reproduces FLResult.link
+# bit-identically, the trace carries >= 4 track types, and a sink-free
+# twin run is numerically identical. Then schema-validates the artifact.
+bench-obs:
+	$(PY) -m benchmarks.run --only obs
+	$(PY) -m tools.bench_schema BENCH_obs.json
+
 # Fails if a public module (or public function/class) under
-# src/repro/{core,link,fl,compress} lacks a docstring.
+# src/repro/{core,link,fl,compress,obs} or tools/ lacks a docstring.
 docs-check:
 	$(PY) tools/docs_check.py

@@ -29,11 +29,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 
 import jax
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, fl_world
 from repro.configs.mnist_cnn import config as cnn_config
 from repro.core import channel as CH
@@ -44,6 +44,7 @@ from repro.link import dynamics as dynamics_lib
 from repro.link import scenario as scenario_lib
 
 JSON_PATH = "BENCH_async_fl.json"
+LEDGER_PATH = "BENCH_async_fl_ledger.jsonl"  # CI artifact (bench-async job)
 ACC_TOL = 0.02  # "reaches sync accuracy" tolerance
 TIME_FACTOR = 0.6  # the gate's bar: buffered event time <= 0.6x sync's
 
@@ -73,15 +74,18 @@ def run(quick: bool = True, seed: int = 0) -> dict:
 
     report = {"clients": n_clients, "scenario": scen.name,
               "buffer_k": buffer_k, "arms": {}}
+    # The buffered arm carries the run ledger (repro.obs): the JSONL file
+    # is schema-validated below and uploaded as a CI artifact.
     arms = {
         "sync": dict(n_rounds=sync_rounds, buffer_k=None),
         "buffered": dict(n_rounds=buffered_rounds, buffer_k=buffer_k,
-                         staleness="polynomial"),
+                         staleness="polynomial", ledger=LEDGER_PATH),
     }
     results = {}
     for arm, akw in arms.items():
         res = run_fl_buffered(cfg, tcfg, cx, cy, ti, tl, **akw, **kw)
         results[arm] = res
+        akw.pop("ledger", None)  # not a report field
         emit(f"async_fl/{arm}", res.wall_s * 1e6,
              f"final_acc={res.final_accuracy:.3f} rounds={akw['n_rounds']} "
              f"event_clock={res.event_s[-1]:.1f}s "
@@ -123,8 +127,22 @@ def run(quick: bool = True, seed: int = 0) -> dict:
          + (f"win@round={win['round']} acc={win['accuracy']:.3f} "
             f"t={win['event_s']:.1f}s" if win else "win=False"))
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    # Ledger gate: the buffered arm's JSONL must validate against the obs
+    # schema and reproduce the run's link telemetry bit-identically.
+    from repro.obs import ledger as obs_ledger
+
+    problems = obs_ledger.validate_ledger(LEDGER_PATH)
+    if problems:
+        raise AssertionError(
+            f"run ledger failed schema validation: {problems}")
+    if obs_ledger.read_ledger(LEDGER_PATH).link != results["buffered"].link:
+        raise AssertionError(
+            "run ledger round-trip does not reproduce FLResult.link")
+    report["ledger"] = LEDGER_PATH
+    emit("async_fl/ledger", 0.0,
+         f"wrote {LEDGER_PATH} (schema-valid, link round-trip exact)")
+
+    common.write_bench_json(JSON_PATH, report)
     emit("async_fl/json", 0.0, f"wrote {JSON_PATH}")
     if win is None:  # the suite doubles as a gate (see benchmarks/run.py)
         raise AssertionError(

@@ -1,31 +1,120 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+``timeit`` reports the steady-state median *and* the first (compile) call
+separately — JAX wall times are bimodal and one number conflates tracing +
+XLA compilation with execution. ``emit`` keeps the historical CSV line and
+mirrors it as a machine-readable JSONL record; ``bench_meta`` /
+``write_bench_json`` stamp every ``BENCH_*.json`` with the same provenance
+block the FL run ledger carries (``tools/bench_schema.py`` validates it).
+"""
 
 from __future__ import annotations
 
-import dataclasses
+import json
+import os
 import time
 
 import jax
 import numpy as np
 
+# JSONL sidecar for emit(): one record per CSV line. Overridable so the
+# harness (benchmarks.run) can point every suite of one invocation at one
+# file; empty value disables the sidecar.
+RECORDS_ENV = "BENCH_RECORDS_PATH"
+DEFAULT_RECORDS_PATH = "BENCH_records.jsonl"
 
-def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (blocking on results)."""
-    for _ in range(warmup):
+
+class Timing(float):
+    """``timeit``'s return value: *is* the steady-state median (µs), so
+    every pre-existing caller keeps working, and carries the first-call
+    (trace + compile) time as ``first_us``."""
+
+    first_us: float
+
+    def __new__(cls, steady_us: float, first_us: float):
+        self = super().__new__(cls, steady_us)
+        self.first_us = float(first_us)
+        return self
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> Timing:
+    """Steady-state median wall time per call in microseconds (blocking on
+    results), with the first call — tracing + XLA compile included — kept
+    separately on the returned :class:`Timing`'s ``first_us``."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    first_us = (time.perf_counter() - t0) * 1e6
+    for _ in range(max(warmup - 1, 0)):
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return Timing(float(np.median(ts)), first_us)
+
+
+def records_path() -> str | None:
+    """Where ``emit`` mirrors its CSV lines (``None`` = sidecar disabled)."""
+    path = os.environ.get(RECORDS_ENV, DEFAULT_RECORDS_PATH)
+    return path or None
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
+    """One benchmark result: the historical CSV line on stdout plus a
+    machine-readable JSONL record (with the compile/steady split when
+    ``us_per_call`` came from :func:`timeit`) in the sidecar file."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    path = records_path()
+    if path is None:
+        return
+    rec = {"name": name, "us_per_call": float(us_per_call),
+           "derived": derived}
+    if isinstance(us_per_call, Timing):
+        rec["first_us"] = us_per_call.first_us
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+        f.flush()
+
+
+def reset_records(path: str | None = None) -> None:
+    """Truncate the emit sidecar (the harness calls this once per
+    invocation so records never accumulate across runs)."""
+    path = records_path() if path is None else path
+    if path is not None:
+        open(path, "w").close()
+
+
+def bench_meta() -> dict:
+    """The provenance block every ``BENCH_*.json`` carries — identical in
+    shape to the FL run ledger's manifest ``provenance`` (jax/numpy/python
+    versions, platform, backend, git sha, UTC timestamp)."""
+    from repro.obs import ledger as obs_ledger
+
+    return obs_ledger.provenance()
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Write one suite's ``BENCH_*.json`` with the shared ``meta``
+    provenance block stamped in (suites pass their report payload;
+    ``tools/bench_schema.py`` validates the result)."""
+    out = dict(payload)
+    out["meta"] = bench_meta()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, default=_scalar)
+        f.write("\n")
+
+
+def _scalar(obj):
+    """JSON fallback for numpy scalars in suite reports."""
+    if hasattr(obj, "item"):
+        return obj.item()
+    raise TypeError(f"not JSON-serializable: {type(obj).__name__}")
 
 
 def fl_world(n_clients: int = 40, per_client: int = 96, seed: int = 0):
+    """Small synthetic FL world shared by the FL-level suites: non-IID
+    client shards plus the held-out eval set."""
     from repro.data import synth_mnist
     from repro.fl import partition
 

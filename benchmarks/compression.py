@@ -29,8 +29,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 
+from benchmarks import common
 from benchmarks.common import emit, fl_world
 from repro.compress import CompressionConfig
 from repro.configs.mnist_cnn import config as cnn_config
@@ -123,8 +123,7 @@ def run(quick: bool = True, seed: int = 0) -> dict:
         report["scenarios"][scen_name] = scen_report
     report["topk_matches_dense_at_fifth_airtime"] = bool(gate_ok)
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    common.write_bench_json(JSON_PATH, report)
     emit("compression/json", 0.0, f"wrote {JSON_PATH}")
     if not gate_ok:  # the suite doubles as a gate (see benchmarks/run.py)
         raise AssertionError(

@@ -28,8 +28,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 
+from benchmarks import common
 from benchmarks.common import emit, fl_world
 from repro.configs.mnist_cnn import config as cnn_config
 from repro.core import channel as CH
@@ -92,8 +92,7 @@ def run(quick: bool = True, snr_db: float = 10.0, seed: int = 0) -> dict:
          f"downlink_worse={asymmetric}")
     report["downlink_worse_than_uplink"] = bool(asymmetric)
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    common.write_bench_json(JSON_PATH, report)
     emit("fl_round/json", 0.0, f"wrote {JSON_PATH}")
     if not asymmetric:  # the suite doubles as a gate (see benchmarks/run.py)
         raise AssertionError(

@@ -33,12 +33,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, fl_world, timeit
 from repro.configs.mnist_cnn import config as cnn_config
 from repro.core import channel as CH
@@ -207,8 +207,7 @@ def run(quick: bool = True, dispatch: str = "both",
              f"pareto={pareto}")
         report["arms"][f"{scen_name}/pareto"] = bool(pareto)
 
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    common.write_bench_json(JSON_PATH, report)
     emit("link/json", 0.0, f"wrote {JSON_PATH}")
     return results
 
@@ -233,8 +232,7 @@ def main() -> None:
             dispatch_clients=args.clients, dispatch_floats=args.floats)
     else:
         rec = dispatch_speedup(args.clients, args.floats, which=args.dispatch)
-        with open(JSON_PATH, "w") as f:
-            json.dump({"dispatch": rec}, f, indent=2)
+        common.write_bench_json(JSON_PATH, {"dispatch": rec})
         emit("link/json", 0.0, f"wrote {JSON_PATH}")
 
 

@@ -1,0 +1,135 @@
+"""Observability smoke: ledger + Perfetto trace on a short buffered run.
+
+Drives a 5-aggregation buffered FedSGD run on the ``metro-rush`` scenario
+with every sink attached — the JSONL run ledger, the Chrome/Perfetto trace
+recorder, and the phase timers — and gates on the acceptance axes of the
+obs layer:
+
+* the ledger schema-validates (``repro.obs.ledger.validate_ledger``) and
+  its round records reproduce ``FLResult.link`` **bit-identically**;
+* a twin run with no sinks attached produces the same accuracy / airtime /
+  link numbers (observers must not perturb the run);
+* the exported trace is loadable Chrome trace-event JSON with at least 4
+  distinct track types (waves, client compute/uplink spans, aggregations,
+  buffer fill);
+* the phase timers saw every phase and split the first (compile) call out
+  of the steady state.
+
+Emits CSV lines + ``BENCH_obs.json`` (with the shared ``meta`` provenance
+block) and leaves ``BENCH_obs_ledger.jsonl`` / ``BENCH_obs_trace.json`` on
+disk for inspection (load the trace at ``https://ui.perfetto.dev``).
+Standalone: ``PYTHONPATH=src python -m benchmarks.obs_smoke``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from benchmarks import common
+from benchmarks.common import emit, fl_world
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import transport as T
+from repro.fl.async_engine import run_fl_buffered
+from repro.link import scenario as scenario_lib
+from repro.obs import PhaseTimers, TraceRecorder
+from repro.obs import ledger as obs_ledger
+
+JSON_PATH = "BENCH_obs.json"
+LEDGER_PATH = "BENCH_obs_ledger.jsonl"
+TRACE_PATH = "BENCH_obs_trace.json"
+MIN_TRACK_TYPES = 4  # waves + client spans + aggregations + buffer fill
+
+
+def run(quick: bool = True, seed: int = 0) -> dict:
+    """Run the instrumented + bare twin runs and assert the obs gates."""
+    n_clients = 8 if quick else 24
+    n_rounds = 5
+    cx, cy, ti, tl = fl_world(n_clients=n_clients)
+    cfg = dataclasses.replace(cnn_config(), lr=0.05)
+    tcfg = T.TransportConfig(channel=CH.ChannelConfig(snr_db=10.0))
+    scen = dataclasses.replace(scenario_lib.get_scenario("metro-rush"),
+                               ecrt_expected_tx=2.0)
+    kw = dict(batch_per_round=32, eval_every=2, seed=seed, scenario=scen,
+              n_rounds=n_rounds, buffer_k=max(2, n_clients // 4),
+              staleness="polynomial")
+
+    trace = TraceRecorder(TRACE_PATH)
+    timers = PhaseTimers()
+    res = run_fl_buffered(cfg, tcfg, cx, cy, ti, tl, **kw,
+                          ledger=LEDGER_PATH, trace=trace,
+                          phase_timers=timers)
+    emit("obs/run", res.wall_s * 1e6,
+         f"rounds={n_rounds} final_acc={res.final_accuracy:.3f} "
+         f"waves={len(res.records)} events={len(trace.events)}")
+
+    problems = obs_ledger.validate_ledger(LEDGER_PATH)
+    if problems:
+        raise AssertionError(f"ledger schema problems: {problems}")
+    data = obs_ledger.read_ledger(LEDGER_PATH)
+    if data.link != res.link:
+        raise AssertionError(
+            "ledger round-trip does not reproduce FLResult.link")
+    emit("obs/ledger", 0.0,
+         f"wrote {LEDGER_PATH} rounds={len(data.rounds)} "
+         f"events={len(data.events)} (schema-valid, link exact)")
+
+    with open(TRACE_PATH) as f:
+        chrome = json.load(f)
+    tracks = sorted(trace.track_types())
+    if len(tracks) < MIN_TRACK_TYPES:
+        raise AssertionError(
+            f"trace has track types {tracks}, need >= {MIN_TRACK_TYPES}")
+    if not chrome.get("traceEvents"):
+        raise AssertionError("exported trace has no traceEvents")
+    emit("obs/trace", 0.0,
+         f"wrote {TRACE_PATH} events={len(chrome['traceEvents'])} "
+         f"tracks={'+'.join(tracks)}")
+
+    phases = timers.summary()
+    for phase in ("sample", "wave", "telemetry", "eval"):
+        if phase not in phases or phases[phase]["calls"] < 1:
+            raise AssertionError(f"phase timers missed phase {phase!r}")
+    wave = phases["wave"]
+    emit("obs/timers", wave["steady_median_s"] * 1e6,
+         f"wave_first={wave['first_s'] * 1e3:.0f}ms "
+         f"calls={wave['calls']}")
+
+    # Observer-neutrality gate: the bare twin must match bit-for-bit.
+    bare = run_fl_buffered(cfg, tcfg, cx, cy, ti, tl, **kw)
+    same = (bare.accuracy == res.accuracy
+            and bare.airtime_s == res.airtime_s
+            and bare.event_s == res.event_s and bare.link == res.link)
+    if not same:
+        raise AssertionError(
+            "attaching obs sinks changed the run's numeric results")
+    emit("obs/neutrality", 0.0, "sinks-on == sinks-off (bit-identical)")
+
+    report = {
+        "clients": n_clients, "rounds": n_rounds, "scenario": scen.name,
+        "ledger": LEDGER_PATH, "trace": TRACE_PATH,
+        "ledger_rounds": len(data.rounds), "ledger_events": len(data.events),
+        "track_types": tracks, "phases": phases,
+        "sinks_are_neutral": same,
+    }
+    common.write_bench_json(JSON_PATH, report)
+    emit("obs/json", 0.0, f"wrote {JSON_PATH}")
+    return report
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.obs_smoke``."""
+    ap = argparse.ArgumentParser(
+        description="ledger + trace + timers smoke on a buffered run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="larger cohort (24 clients)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

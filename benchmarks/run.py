@@ -30,6 +30,8 @@ SUITES = {
                     "sparse top-k+EF uplink accuracy-vs-airtime Pareto"),
     "async_fl": ("benchmarks.async_fl",
                  "buffered-async vs sync FL under straggling (FedBuff)"),
+    "obs": ("benchmarks.obs_smoke",
+            "run ledger + Perfetto trace + phase timers smoke"),
 }
 
 
@@ -45,6 +47,11 @@ def main() -> None:
         print(f"valid suites: {', '.join(SUITES)}", file=sys.stderr)
         raise SystemExit(2)
 
+    from benchmarks import common
+
+    # One emit-record sidecar per invocation (benchmarks/common.emit
+    # appends; without the reset, records would accumulate across runs).
+    common.reset_records()
     print("name,us_per_call,derived")
     failed = []
     for name in picks:

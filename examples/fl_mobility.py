@@ -30,6 +30,15 @@ compresses deeper in the low-SNR modes).
 time + airtime; scenarios like ``metro-rush`` add churn and idle gaps) and
 the server aggregates every K arrivals with polynomially staleness-damped
 weights. The telemetry's ``round`` column then counts dispatched waves.
+
+``--ledger PATH`` attaches the JSONL run ledger (``repro.obs``): a config/
+provenance manifest followed by every round record and eval point, flushed
+as written — summarize or diff ledgers with ``python -m tools.report``.
+With ``--buffered``, ``--trace PATH`` additionally exports a Chrome/
+Perfetto trace of the event clock (dispatch waves, per-client compute and
+uplink spans, buffer fill, aggregations) and ``--timers`` prints per-phase
+wall-clock timers with the first (compile) call split from steady state.
+None of the three changes the run's numbers.
 """
 
 import argparse
@@ -45,17 +54,20 @@ from repro.fl.async_engine import run_fl_buffered
 from repro.fl.loop import run_fl
 from repro.link import policy as policy_lib
 from repro.link import scenario as scenario_lib
+from repro.obs import PhaseTimers, TraceRecorder
 
 
-def _run(cfg, tcfg, data, scen, rounds, compression=None, buffer_k=None):
+def _run(cfg, tcfg, data, scen, rounds, compression=None, buffer_k=None,
+         **obs_kw):
     cx, cy, ti, tl = data
     kw = dict(n_rounds=rounds, batch_per_round=32,
               eval_every=max(2, rounds // 10), scenario=scen,
-              compression=compression)
+              compression=compression, **obs_kw)
     if buffer_k is not None:
         return run_fl_buffered(cfg, tcfg, cx, cy, ti, tl,
                                buffer_k=buffer_k, staleness="polynomial",
                                **kw)
+    kw.pop("trace", None)  # event traces exist only on the event clock
     return run_fl(cfg, tcfg, cx, cy, ti, tl, **kw)
 
 
@@ -80,7 +92,21 @@ def main():
                     help="asynchronous FedBuff-style engine: aggregate "
                          "every K arrivals with staleness-damped weights "
                          "instead of closing a synchronous round barrier")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="write a JSONL run ledger (manifest + per-round "
+                         "records + eval curve); inspect it with "
+                         "`python -m tools.report PATH`")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --buffered: export a Chrome/Perfetto event "
+                         "trace of the run (load at ui.perfetto.dev)")
+    ap.add_argument("--timers", action="store_true",
+                    help="collect per-phase wall-clock timers (first/"
+                         "compile call split from steady state) and print "
+                         "the table")
     args = ap.parse_args()
+    if args.trace is not None and args.buffered is None:
+        ap.error("--trace requires --buffered (spans live on the async "
+                 "engine's event clock)")
 
     (img, lab), (ti, tl) = synth_mnist.train_test(300, 60)
     parts = partition.non_iid_partition(img, lab, n_clients=args.clients)
@@ -115,8 +141,16 @@ def main():
     if args.buffered is not None:
         print(f"buffered async engine: aggregate every K={args.buffered} "
               "arrivals, polynomial staleness weights\n")
+    obs_kw = {}
+    if args.ledger is not None:
+        obs_kw["ledger"] = args.ledger
+    if args.trace is not None:
+        obs_kw["trace"] = TraceRecorder(args.trace)
+    timers = PhaseTimers() if args.timers else None
+    if timers is not None:
+        obs_kw["phase_timers"] = timers
     res = _run(cfg, tcfg, data, scen, args.rounds, compression,
-               buffer_k=args.buffered)
+               buffer_k=args.buffered, **obs_kw)
     dl_cols = "  dl airtime   dl BER" if scen.downlink is not None else ""
     cp_cols = ("    kept  res.norm  bits-on-air" if compression is not None
                else "")
@@ -135,6 +169,13 @@ def main():
     clock = (f" event_clock={res.event_s[-1]:.2f}s" if res.event_s else "")
     print(f"\nadaptive: final_acc={res.final_accuracy:.3f} "
           f"airtime={res.airtime_s[-1]:.2f}s{clock} wall={res.wall_s:.0f}s")
+    if timers is not None:
+        print("\n" + timers.report())
+    if args.ledger is not None:
+        print(f"\nledger: {args.ledger} "
+              f"(summarize: python -m tools.report {args.ledger})")
+    if args.trace is not None:
+        print(f"trace: {args.trace} (load at https://ui.perfetto.dev)")
 
     if args.compare:
         for arm, pol in (("fixed approx/qpsk",

@@ -213,6 +213,32 @@ class TxStats:
         """End-to-end payload bit-error rate (``bit_errors / n_bits``)."""
         return self.bit_errors / jnp.maximum(self.n_bits, 1)
 
+    def round_summary(self) -> dict:
+        """Cohort-level aggregates as plain Python floats — the
+        ``uplink_*`` field group of :class:`repro.obs.records.RoundRecord`.
+
+        Sums/means the per-client fields to the host once (a device
+        transfer), so the observability layer calls this only when a sink
+        is attached; all units follow the class docstring (``uplink_ber``
+        is the cohort's pooled payload BER, total errors over total offered
+        bits).
+        """
+        symbols = np.asarray(self.data_symbols, np.float64)
+        bits = np.asarray(self.n_bits, np.float64)
+        errors = np.asarray(self.bit_errors, np.float64)
+        out = {
+            "uplink_symbols": float(symbols.sum()),
+            "uplink_bits": float(bits.sum()),
+            "uplink_bit_errors": float(errors.sum()),
+            "uplink_ber": float(errors.sum() / max(bits.sum(), 1.0)),
+            "uplink_mean_tx": float(
+                np.mean(np.asarray(self.transmissions, np.float64))),
+        }
+        if self.bits_on_air is not None:
+            out["uplink_bits_on_air"] = float(
+                np.asarray(self.bits_on_air, np.float64).sum())
+        return out
+
 
 def _stats(data_symbols, transmissions, bit_errors, n_bits,
            bits_on_air=None) -> TxStats:

@@ -70,6 +70,8 @@ from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import engine as engine_lib
 from repro.link import dynamics as dynamics_lib
+from repro.obs import records as obs_records_lib
+from repro.obs import trace as obs_trace_lib
 
 __all__ = [
     "STALENESS_KINDS",
@@ -163,13 +165,19 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                  seed: int = 0, eval_every: int = 2,
                  timings: latency_lib.PhyTimings | None = None,
                  scenario=None, adaptive_dispatch: str = "bucketed",
-                 downlink=None, compression=None):
+                 downlink=None, compression=None, ledger=None, trace=None,
+                 phase_timers=None):
         super().__init__(
             algorithm, transport_cfg, client_x, client_y, test_x, test_y,
             n_rounds=n_rounds, seed=seed, eval_every=eval_every,
             timings=timings, scenario=scenario,
             adaptive_dispatch=adaptive_dispatch, downlink=downlink,
-            compression=compression)
+            compression=compression, ledger=ledger,
+            phase_timers=phase_timers)
+        # Perfetto trace sink (repro.obs.trace): a path or a TraceRecorder.
+        # Like the ledger, a pure observer of host values the event loop
+        # already computed.
+        self.trace = obs_trace_lib.as_trace(trace)
         M = self.num_clients
         self.buffer_k = M if buffer_k is None else int(buffer_k)
         if not 1 <= self.buffer_k <= M:
@@ -194,6 +202,38 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
             jax.random.fold_in(self._key, dynamics_lib.COMPUTE_KEY_LANE),
             M, self.compute_cfg)
         self._build_wave_fns()
+
+    # ------------------------------------------------------- observability
+
+    def _manifest(self) -> dict:
+        """The synchronous manifest plus the buffering axis; the config
+        fingerprint re-derives over the buffer/staleness/event-layer
+        configs so async runs never collide with their sync twins."""
+        from repro.obs import ledger as obs_ledger_lib
+
+        man = super()._manifest()
+        man["engine"] = "async"
+        man["buffer_k"] = self.buffer_k
+        man["staleness"] = self.staleness
+        man["staleness_alpha"] = self.staleness_alpha
+        man["fingerprint"] = obs_ledger_lib.config_fingerprint(
+            man["fingerprint"], self.buffer_k, self.staleness,
+            self.staleness_alpha, self.compute_cfg, self.arrival_cfg)
+        return man
+
+    def _emit_event(self, ev: obs_records_lib.EventRecord) -> None:
+        """Fan one event-clock record out to the attached sinks (callers
+        gate on ``_obs_events`` so uninstrumented runs build no records)."""
+        if self.ledger is not None:
+            self.ledger.write_event(ev)
+        if self.trace is not None:
+            self.trace.add(ev)
+
+    @property
+    def _obs_events(self) -> bool:
+        """Whether any sink wants the event stream."""
+        return (self.trace is not None
+                or (self.ledger is not None and self.ledger.events))
 
     # ----------------------------------------------------------- wave fns
 
@@ -431,12 +471,15 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
         """Drive ``n_rounds`` buffered aggregations; returns ``FLResult``
         with ``event_s`` timestamps alongside the usual curves."""
         algo, driver, timings = self.algo, self.driver, self.timings
-        comp = self.compression
+        comp, tm = self.compression, self.phase_timers
+        obs_events = self._obs_events
         M, K = self.num_clients, self.buffer_k
         params, aux, key = self.params, self.aux, self._key
         rng = np.random.default_rng(self.seed)
         res = engine_lib.FLResult([], [], [], 0.0, 0.0)
         t0 = time.time()
+        if self.ledger is not None:
+            self.ledger.write_manifest(self._manifest())
 
         cum_air = 0.0
         t_now = 0.0
@@ -461,65 +504,75 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                 return False
             key, rk = jax.random.split(key)
             if self.arrival_cfg is not None:
+                prev_joined = joined.copy()
                 joined[:] = np.asarray(dynamics_lib.churn_step(
                     rk, jnp.asarray(joined), self.arrival_cfg))
+                if obs_events:
+                    for i in np.nonzero(prev_joined != joined)[0]:
+                        self._emit_event(obs_records_lib.EventRecord(
+                            t=t_now,
+                            kind="join" if joined[i] > 0 else "leave",
+                            client=int(i)))
                 idle = (joined > 0) & ~in_flight & (ready_t <= t_now)
                 if not idle.any():
                     return False
             member_np = idle.astype(np.float32)
             member = jnp.asarray(member_np)
-            xb, yb = algo.sample(rng, self.client_x, self.client_y)
-            scenario_rec = None
+            with tm.scope("sample"):
+                xb, yb = algo.sample(rng, self.client_x, self.client_y)
             rnd = None
             if driver is None:
-                if comp is None:
-                    hat, stats, dstats = self._wave_plain(params, xb, yb, rk)
-                else:
-                    hat, stats, dstats, self._ef_residual = \
-                        self._wave_plain_comp(params, xb, yb, rk,
-                                              self._ef_residual, member)
-                per_air = latency_lib.round_airtime(
-                    stats, timings, self.transport_cfg.mode)
-                if self.ecrt_air_scale is not None:
-                    per_air = per_air * self.ecrt_air_scale
-                per_air = per_air * member
+                with tm.scope("wave"):
+                    if comp is None:
+                        hat, stats, dstats = self._wave_plain(
+                            params, xb, yb, rk)
+                    else:
+                        hat, stats, dstats, self._ef_residual = \
+                            self._wave_plain_comp(params, xb, yb, rk,
+                                                  self._ef_residual, member)
+                rec = obs_records_lib.RoundRecord(round=next_wave)
+                with tm.scope("telemetry"):
+                    per_air = latency_lib.round_airtime(
+                        stats, timings, self.transport_cfg.mode)
+                    if self.ecrt_air_scale is not None:
+                        per_air = per_air * self.ecrt_air_scale
+                    per_air = per_air * member
                 active = member
             else:
-                if comp is None:
-                    step = (self._wave_link_bucketed
-                            if self.dispatch == "bucketed"
-                            else self._wave_link)
-                    (hat, stats, self.lstate, rnd, dstats,
-                     self.prev_est) = step(
-                        params, xb, yb, rk, self.lstate, self.prev_mode,
-                        self.prev_est, member)
-                else:
-                    step = (self._wave_link_bucketed_comp
-                            if self.dispatch == "bucketed"
-                            else self._wave_link_comp)
-                    (hat, stats, self.lstate, rnd, dstats,
-                     self._ef_residual, self.prev_est) = step(
-                        params, xb, yb, rk, self.lstate, self.prev_mode,
-                        self.prev_est, self._ef_residual, member)
+                with tm.scope("wave"):
+                    if comp is None:
+                        step = (self._wave_link_bucketed
+                                if self.dispatch == "bucketed"
+                                else self._wave_link)
+                        (hat, stats, self.lstate, rnd, dstats,
+                         self.prev_est) = step(
+                            params, xb, yb, rk, self.lstate, self.prev_mode,
+                            self.prev_est, member)
+                    else:
+                        step = (self._wave_link_bucketed_comp
+                                if self.dispatch == "bucketed"
+                                else self._wave_link_comp)
+                        (hat, stats, self.lstate, rnd, dstats,
+                         self._ef_residual, self.prev_est) = step(
+                            params, xb, yb, rk, self.lstate, self.prev_mode,
+                            self.prev_est, self._ef_residual, member)
                 self.prev_mode = rnd.mode
-                per_air = driver.airtime(stats, rnd, timings) * member
-                res.link.append(engine_lib.link_telemetry(
-                    next_wave, rnd, per_air, len(driver.mode_cfgs)))
-                scenario_rec = res.link[-1]
+                with tm.scope("telemetry"):
+                    per_air = driver.airtime(stats, rnd, timings) * member
+                    rec = obs_records_lib.scenario_round_record(
+                        next_wave, rnd, per_air, len(driver.mode_cfgs))
                 active = member * rnd.active
             cum_air += float(jnp.sum(per_air))
             if comp is not None:
-                scenario_rec = self._compression_record(
-                    res, next_wave, stats, rnd, scenario_rec)
+                self._compression_record(rec, stats, rnd)
             dl_wait = 0.0
             if dstats is not None:
-                dl_wait = self._downlink_air_record(
-                    res, next_wave, dstats, scenario_rec)
+                dl_wait = self._downlink_air_record(rec, dstats)
                 cum_air += dl_wait
             comp_s = np.asarray(dynamics_lib.compute_times(
                 rk, self.compute_cfg, M, self._speed), np.float64)
-            arr = latency_lib.arrival_times(
-                t_now, comp_s, np.asarray(per_air, np.float64), dl_wait)
+            air_np = np.asarray(per_air, np.float64)
+            arr = latency_lib.arrival_times(t_now, comp_s, air_np, dl_wait)
             gaps = np.zeros(M, np.float64)
             if self.arrival_cfg is not None:
                 gaps = np.asarray(dynamics_lib.idle_gaps(
@@ -536,6 +589,25 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                     # Dropped: no uplink happened (air = 0), the client is
                     # back after its broadcast wait + compute time.
                     ready_t[i] = float(arr[i])
+            if obs_events:
+                members = np.nonzero(member_np > 0)[0]
+                arrived = [float(arr[i]) for i in members if active_b[i]]
+                self._emit_event(obs_records_lib.EventRecord(
+                    t=t_now, kind="wave", wave=next_wave,
+                    dur=(max(arrived) - t_now) if arrived else 0.0,
+                    value=float(len(members))))
+                for i in members:
+                    i = int(i)
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_now + dl_wait, kind="compute", wave=next_wave,
+                        client=i, dur=float(comp_s[i])))
+                    if active_b[i]:
+                        self._emit_event(obs_records_lib.EventRecord(
+                            t=t_now + dl_wait + float(comp_s[i]),
+                            kind="uplink", wave=next_wave, client=i,
+                            dur=float(air_np[i])))
+            rec.t_event = t_now
+            self._finish_record(res, rec, stats)
             waves[next_wave] = {
                 "hat": hat, "version": version,
                 "arrived": np.zeros(M, np.float32),
@@ -561,6 +633,13 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                     self.staleness_alpha))
                 entries.append((w, info["hat"],
                                 jnp.asarray(mask * np.float32(om)), mask, om))
+            if obs_events:
+                folded = sum(int(mask.sum()) for _, _, _, mask, _ in entries)
+                self._emit_event(obs_records_lib.EventRecord(
+                    t=t_now, kind="aggregate", version=version,
+                    value=float(folded)))
+                self._emit_event(obs_records_lib.EventRecord(
+                    t=t_now, kind="buffer", value=0.0))
             uniform_full = (
                 len(entries) == 1 and entries[0][4] > 0
                 and bool(entries[0][3].all()))
@@ -593,10 +672,14 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
             r = version
             version += 1
             if r % self.eval_every == 0 or r == self.n_rounds - 1:
+                with tm.scope("eval"):
+                    acc = float(self._eval_acc(params))
                 res.rounds.append(r)
-                res.accuracy.append(float(self._eval_acc(params)))
+                res.accuracy.append(acc)
                 res.airtime_s.append(cum_air)
                 res.event_s.append(t_now)
+                if self.ledger is not None:
+                    self.ledger.write_eval(r, acc, cum_air, event_s=t_now)
 
         dispatch()
         stalls = 0
@@ -621,6 +704,11 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                 in_flight[i] = False
                 ready_t[i] = t_arr + info["gaps"][i]
                 buffered += 1
+                if obs_events:
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_arr, kind="arrival", wave=w, client=int(i)))
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_arr, kind="buffer", value=float(buffered)))
                 continue
             # Empty buffer, nothing in flight: dispatch, or advance the
             # clock to the next ready client, or churn until someone
@@ -642,6 +730,9 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
         self.params, self.aux, self._key = params, aux, key
         res.wall_s = time.time() - t0
         res.final_accuracy = res.accuracy[-1]
+        self._finish_run(res)
+        if self.trace is not None and self.trace.path is not None:
+            self.trace.export()
         return res
 
 
@@ -653,7 +744,8 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
                     buffer_k: int | None = None,
                     staleness: str = "constant",
                     staleness_alpha: float = 0.5,
-                    compute=None, arrival=None) -> engine_lib.FLResult:
+                    compute=None, arrival=None, ledger=None, trace=None,
+                    phase_timers=None) -> engine_lib.FLResult:
     """Buffered (FedBuff-style) FedSGD over the simulated wireless uplink.
 
     The asynchronous counterpart of :func:`repro.fl.loop.run_fl` — same
@@ -663,6 +755,8 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
     ``compute``/``arrival`` event-layer overrides (defaulting to the
     scenario's fields). With ``buffer_k = None``, a degenerate compute
     model, and constant weights the result is bit-identical to ``run_fl``.
+    ``ledger``/``trace``/``phase_timers`` attach observability sinks
+    (:mod:`repro.obs`) without changing any numeric result.
     """
     algo = engine_lib.FedSGD(cfg, batch_per_round=batch_per_round)
     return AsyncRoundEngine(
@@ -671,7 +765,8 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
         staleness_alpha=staleness_alpha, compute=compute, arrival=arrival,
         seed=seed, eval_every=eval_every, timings=timings, scenario=scenario,
         adaptive_dispatch=adaptive_dispatch, downlink=downlink,
-        compression=compression,
+        compression=compression, ledger=ledger, trace=trace,
+        phase_timers=phase_timers,
     ).run()
 
 
@@ -684,10 +779,11 @@ def run_fedavg_buffered(cfg, transport_cfg, client_x, client_y, test_x,
                         buffer_k: int | None = None,
                         staleness: str = "constant",
                         staleness_alpha: float = 0.5,
-                        compute=None, arrival=None) -> engine_lib.FLResult:
+                        compute=None, arrival=None, ledger=None, trace=None,
+                        phase_timers=None) -> engine_lib.FLResult:
     """Buffered (FedBuff-style) FedAvg — the asynchronous counterpart of
     :func:`repro.fl.fedavg.run_fedavg`; see :func:`run_fl_buffered` for the
-    buffering arguments."""
+    buffering and observability arguments."""
     algo = engine_lib.FedAvg(cfg, local_steps=local_steps,
                              batch_per_step=batch_per_step,
                              scale_mode=scale_mode)
@@ -697,5 +793,6 @@ def run_fedavg_buffered(cfg, transport_cfg, client_x, client_y, test_x,
         staleness_alpha=staleness_alpha, compute=compute, arrival=arrival,
         seed=seed, eval_every=eval_every, timings=timings, scenario=scenario,
         adaptive_dispatch=adaptive_dispatch, downlink=downlink,
-        compression=compression,
+        compression=compression, ledger=ledger, trace=trace,
+        phase_timers=phase_timers,
     ).run()

@@ -68,6 +68,9 @@ from repro.compress import sparsify as sparsify_lib
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import cnn
+from repro.obs import ledger as obs_ledger_lib
+from repro.obs import records as obs_records_lib
+from repro.obs import timers as obs_timers_lib
 from repro.optim.sgd import sgd as make_sgd
 
 __all__ = [
@@ -95,7 +98,9 @@ class FLResult:
     airtime_s: list  # cumulative airtime: TDMA uplink sum (+ downlink leg)
     wall_s: float
     final_accuracy: float
-    # Per-round link telemetry. Scenario-driven runs append {round,
+    # Per-round link telemetry, as dicts — the historical view, preserved
+    # bit-identically (same keys, insertion order, values) now that the
+    # engines build typed records first. Scenario-driven runs append {round,
     # mean_snr_db, mean_est_db, mode_counts, n_active, n_stragglers,
     # airtime_s} (mode_counts indexes the driver's mode table); runs with a
     # downlink leg add {downlink_airtime_s, downlink_ber[, and for adaptive
@@ -105,6 +110,13 @@ class FLResult:
     # the EF residual)} — driver-less downlink/compressed runs append
     # records with just their own fields. [] otherwise.
     link: list = dataclasses.field(default_factory=list)
+    # Typed per-round telemetry: one ``repro.obs.records.RoundRecord`` per
+    # round (or per dispatched wave of the buffered engine), *including*
+    # rounds with no link fields. ``link`` above is the dict view of the
+    # records that have any (``rec.to_link_dict()``); the records carry
+    # observability-only extras (uplink BER aggregates, event-clock times)
+    # when a ledger is attached.
+    records: list = dataclasses.field(default_factory=list)
     # Event-clock timestamps (seconds) of each eval point, parallel to
     # ``rounds``/``accuracy``. Only the buffered asynchronous engine
     # (``fl.async_engine``) fills this — the synchronous engine has no
@@ -432,7 +444,8 @@ class RoundEngine:
                  eval_every: int = 2,
                  timings: latency_lib.PhyTimings | None = None,
                  scenario=None, adaptive_dispatch: str = "bucketed",
-                 downlink=None, compression=None):
+                 downlink=None, compression=None, ledger=None,
+                 phase_timers=None):
         self.algo = algorithm
         self.client_x, self.client_y = client_x, client_y
         self.test_x, self.test_y = test_x, test_y
@@ -441,6 +454,12 @@ class RoundEngine:
         self.eval_every = eval_every
         self.timings = timings or latency_lib.PhyTimings()
         self.num_clients = client_x.shape[0]
+        # Observability sinks (repro.obs). Pure observers: they only read
+        # values the round already produced, so attaching them changes no
+        # numeric result. ``ledger`` accepts a path or a RunLedger;
+        # ``phase_timers`` accepts a PhaseTimers (None = shared no-op).
+        self.ledger = obs_ledger_lib.as_ledger(ledger)
+        self.phase_timers = obs_timers_lib.resolve_timers(phase_timers)
 
         key = jax.random.PRNGKey(seed)
         key, pk = jax.random.split(key)
@@ -580,8 +599,9 @@ class RoundEngine:
         return transport_lib.transmit_pytree_broadcast(
             params, k_tx, self.dl_cfg, self.num_clients, snr_db=dl_snr)
 
-    def _downlink_air_record(self, res, r, dstats, scenario_rec):
-        """Price the round's broadcast and attach/append its telemetry.
+    def _downlink_air_record(self, rec, dstats):
+        """Price the round's broadcast and set its fields on ``rec`` (the
+        round's :class:`~repro.obs.records.RoundRecord`).
 
         Returns the seconds the PS spent broadcasting (each distinct mode is
         transmitted once — see ``latency.broadcast_airtime``).
@@ -598,14 +618,10 @@ class RoundEngine:
                 # rescale, as on the uplink.
                 air = air * self.dl_air_scale
             total = latency_lib.broadcast_airtime(air)
-        rec = scenario_rec
-        if rec is None:
-            rec = {"round": r}
-            res.link.append(rec)
-        rec["downlink_airtime_s"] = total
-        rec["downlink_ber"] = float(np.mean(np.asarray(dstats.ber)))
+        rec.downlink_airtime_s = total
+        rec.downlink_ber = float(np.mean(np.asarray(dstats.ber)))
         if dstats.mode_idx is not None:
-            rec["downlink_mode_counts"] = np.bincount(
+            rec.downlink_mode_counts = np.bincount(
                 np.asarray(dstats.mode_idx),
                 minlength=len(self.driver.mode_cfgs)).tolist()
         return total
@@ -888,18 +904,14 @@ class RoundEngine:
         stats.mode_idx = jnp.asarray(mode_np, jnp.int32)
         return dense_hat, stats, sent
 
-    def _compression_record(self, res, r, stats, rnd, scenario_rec):
-        """Attach/append one round's compression telemetry.
+    def _compression_record(self, rec, stats, rnd):
+        """Set one round's compression telemetry on ``rec`` (the round's
+        :class:`~repro.obs.records.RoundRecord`).
 
         Records the mean kept fraction (per-mode budgets resolve through
         the round's mode vector), the active cohort's total bits on air,
-        and the mean per-client L2 norm of the EF residual. Returns the
-        record so a downlink leg in the same round can share it.
+        and the mean per-client L2 norm of the EF residual.
         """
-        rec = scenario_rec
-        if rec is None:
-            rec = {"round": r}
-            res.link.append(rec)
         if rnd is not None and self._comp_ks is not None:
             k_vec = np.asarray(self._comp_ks)[np.asarray(rnd.mode)]
         else:
@@ -907,78 +919,154 @@ class RoundEngine:
         active = (np.asarray(rnd.active) if rnd is not None
                   else np.ones(self.num_clients, np.float32))
         boa = np.asarray(stats.bits_on_air, np.float32)
-        rec["comp_ratio"] = float(k_vec.mean() / max(self._comp_dim, 1))
-        rec["comp_bits_on_air"] = float((boa * active).sum())
+        rec.comp_ratio = float(k_vec.mean() / max(self._comp_dim, 1))
+        rec.comp_bits_on_air = float((boa * active).sum())
         # Reduce on device: pulling only the scalar avoids a per-round
         # (num_clients, dim) device-to-host transfer for telemetry.
-        rec["comp_residual_norm"] = float(jnp.sqrt(jnp.mean(jnp.sum(
+        rec.comp_residual_norm = float(jnp.sqrt(jnp.mean(jnp.sum(
             self._ef_residual ** 2, axis=1))))
-        return rec
+
+    # ------------------------------------------------------- observability
+
+    def _manifest(self) -> dict:
+        """The run-manifest line of an attached ledger: the config
+        fingerprint, the run's shape, config summaries, and the provenance
+        block (see :mod:`repro.obs.ledger`)."""
+        scen = None if self.driver is None else self.driver.scenario
+        man = {
+            "fingerprint": obs_ledger_lib.config_fingerprint(
+                type(self.algo).__name__, self._raw_transport_cfg, scen,
+                self.downlink, self.compression, self.dispatch,
+                self.n_rounds, self.num_clients, self.seed),
+            "engine": "sync",
+            "algorithm": self.algo.name,
+            "n_rounds": self.n_rounds,
+            "num_clients": self.num_clients,
+            "seed": self.seed,
+            "eval_every": self.eval_every,
+            "dispatch": self.dispatch,
+            "transport_mode": self.transport_cfg.mode,
+        }
+        if scen is not None:
+            from repro.link import policy as policy_lib
+
+            man["scenario"] = scen.name
+            man["mode_names"] = policy_lib.mode_names(scen.policy)
+        if self.downlink is not None:
+            man["downlink"] = dataclasses.asdict(self.downlink)
+        if self.compression is not None:
+            man["compression"] = dataclasses.asdict(self.compression)
+        man["provenance"] = obs_ledger_lib.provenance()
+        return man
+
+    def _finish_record(self, res, rec, stats):
+        """Tail bookkeeping of one round's :class:`RoundRecord`: fill the
+        observability-only ``uplink_*`` aggregates (ledger runs only — they
+        force a device->host sync the dict view never paid), append the
+        record, mirror its link-dict view, and write the ledger line."""
+        if self.ledger is not None and stats is not None:
+            for name, value in stats.round_summary().items():
+                setattr(rec, name, value)
+        res.records.append(rec)
+        if rec.has_link_fields():
+            res.link.append(rec.to_link_dict())
+        if self.ledger is not None:
+            self.ledger.write_round(rec)
+
+    def _finish_run(self, res) -> None:
+        """Close out the attached sinks at the end of :meth:`run`: the
+        ledger's summary line (with the phase-timer summary when one was
+        attached) and the ledger file itself."""
+        if self.ledger is None:
+            return
+        summary = {
+            "final_accuracy": res.final_accuracy,
+            "wall_s": res.wall_s,
+            "airtime_s": res.airtime_s[-1] if res.airtime_s else 0.0,
+            "n_evals": len(res.accuracy),
+        }
+        if res.event_s:
+            summary["event_s"] = res.event_s[-1]
+        phases = self.phase_timers.summary()
+        if phases:
+            summary["phases"] = phases
+        self.ledger.write_summary(summary)
+        self.ledger.close()
 
     # --------------------------------------------------------------- run
 
     def run(self) -> FLResult:
         """Drive ``n_rounds`` rounds and return the :class:`FLResult`."""
         algo, driver, timings = self.algo, self.driver, self.timings
-        comp = self.compression
+        comp, tm = self.compression, self.phase_timers
         params, aux, key = self.params, self.aux, self._key
         rng = np.random.default_rng(self.seed)
         res = FLResult([], [], [], 0.0, 0.0)
         t0 = time.time()
+        if self.ledger is not None:
+            self.ledger.write_manifest(self._manifest())
         cum_air = 0.0
         for r in range(self.n_rounds):
             key, rk = jax.random.split(key)
-            xb, yb = algo.sample(rng, self.client_x, self.client_y)
-            scenario_rec = None
+            with tm.scope("sample"):
+                xb, yb = algo.sample(rng, self.client_x, self.client_y)
             rnd = None
             if driver is None:
-                if comp is None:
-                    params, aux, stats, dstats = self._round_step(
-                        params, aux, xb, yb, rk)
-                else:
-                    (params, aux, stats, dstats,
-                     self._ef_residual) = self._round_step_comp(
-                        params, aux, xb, yb, rk, self._ef_residual)
-                # TDMA uplink: total airtime is the sum over clients.
-                per_client_air = latency_lib.round_airtime(
-                    stats, timings, self.transport_cfg.mode)
-                if self.ecrt_air_scale is not None:
-                    # Heterogeneous analytic ECRT: rescale each client's
-                    # airtime from the cohort-mean E[tx] to its own value.
-                    per_client_air = per_client_air * self.ecrt_air_scale
+                with tm.scope("round"):
+                    if comp is None:
+                        params, aux, stats, dstats = self._round_step(
+                            params, aux, xb, yb, rk)
+                    else:
+                        (params, aux, stats, dstats,
+                         self._ef_residual) = self._round_step_comp(
+                            params, aux, xb, yb, rk, self._ef_residual)
+                rec = obs_records_lib.RoundRecord(round=r)
+                with tm.scope("telemetry"):
+                    # TDMA uplink: total airtime is the sum over clients.
+                    per_client_air = latency_lib.round_airtime(
+                        stats, timings, self.transport_cfg.mode)
+                    if self.ecrt_air_scale is not None:
+                        # Heterogeneous analytic ECRT: rescale each client's
+                        # airtime from the cohort-mean E[tx] to its own value.
+                        per_client_air = per_client_air * self.ecrt_air_scale
             else:
-                if comp is None:
-                    step = (self._round_step_link_bucketed
-                            if self.dispatch == "bucketed"
-                            else self._round_step_link)
-                    params, aux, stats, self.lstate, rnd, dstats = step(
-                        params, aux, xb, yb, rk, self.lstate, self.prev_mode,
-                        self.prev_est)
-                else:
-                    step = (self._round_step_link_bucketed_comp
-                            if self.dispatch == "bucketed"
-                            else self._round_step_link_comp)
-                    (params, aux, stats, self.lstate, rnd, dstats,
-                     self._ef_residual) = step(
-                        params, aux, xb, yb, rk, self.lstate, self.prev_mode,
-                        self.prev_est, self._ef_residual)
+                with tm.scope("round"):
+                    if comp is None:
+                        step = (self._round_step_link_bucketed
+                                if self.dispatch == "bucketed"
+                                else self._round_step_link)
+                        params, aux, stats, self.lstate, rnd, dstats = step(
+                            params, aux, xb, yb, rk, self.lstate,
+                            self.prev_mode, self.prev_est)
+                    else:
+                        step = (self._round_step_link_bucketed_comp
+                                if self.dispatch == "bucketed"
+                                else self._round_step_link_comp)
+                        (params, aux, stats, self.lstate, rnd, dstats,
+                         self._ef_residual) = step(
+                            params, aux, xb, yb, rk, self.lstate,
+                            self.prev_mode, self.prev_est, self._ef_residual)
                 self.prev_mode, self.prev_est = rnd.mode, rnd.est_db
-                per_client_air = record_link_round(
-                    res, r, driver, stats, rnd, timings)
-                scenario_rec = res.link[-1]
+                with tm.scope("telemetry"):
+                    per_client_air = driver.airtime(stats, rnd, timings)
+                    rec = obs_records_lib.scenario_round_record(
+                        r, rnd, per_client_air, len(driver.mode_cfgs))
             cum_air += float(jnp.sum(per_client_air))
             if comp is not None:
-                scenario_rec = self._compression_record(
-                    res, r, stats, rnd, scenario_rec)
+                self._compression_record(rec, stats, rnd)
             if dstats is not None:
-                cum_air += self._downlink_air_record(
-                    res, r, dstats, scenario_rec)
+                cum_air += self._downlink_air_record(rec, dstats)
+            self._finish_record(res, rec, stats)
             if r % self.eval_every == 0 or r == self.n_rounds - 1:
-                acc = float(self._eval_acc(params))
+                with tm.scope("eval"):
+                    acc = float(self._eval_acc(params))
                 res.rounds.append(r)
                 res.accuracy.append(acc)
                 res.airtime_s.append(cum_air)
+                if self.ledger is not None:
+                    self.ledger.write_eval(r, acc, cum_air)
         self.params, self.aux, self._key = params, aux, key
         res.wall_s = time.time() - t0
         res.final_accuracy = res.accuracy[-1]
+        self._finish_run(res)
         return res

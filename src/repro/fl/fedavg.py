@@ -50,11 +50,14 @@ def run_fedavg(
     adaptive_dispatch: str = "bucketed",
     downlink=None,
     compression=None,
+    ledger=None,
+    phase_timers=None,
 ) -> FLResult:
     """FedAvg over the simulated uplink: ``local_steps`` SGD steps per
     client per round, weight deltas on the wire.
 
-    Mirrors :func:`repro.fl.loop.run_fl`'s arguments; the FedAvg-specific
+    Mirrors :func:`repro.fl.loop.run_fl`'s arguments (including the
+    ``ledger``/``phase_timers`` observability sinks); the FedAvg-specific
     ones are ``local_steps`` / ``batch_per_step`` (the local schedule) and
     ``scale_mode`` (the adaptive per-client delta scaling above). See the
     module and :mod:`repro.fl.engine` docstrings for scenarios, dispatches,
@@ -67,5 +70,6 @@ def run_fedavg(
         algo, transport_cfg, client_x, client_y, test_x, test_y,
         n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
-        downlink=downlink, compression=compression,
+        downlink=downlink, compression=compression, ledger=ledger,
+        phase_timers=phase_timers,
     ).run()

@@ -60,6 +60,8 @@ def run_fl(
     adaptive_dispatch: str = "bucketed",
     downlink=None,
     compression=None,
+    ledger=None,
+    phase_timers=None,
 ) -> FLResult:
     """FedSGD over the simulated wireless uplink (paper Sec. II eq. (4)-(6)).
 
@@ -85,6 +87,11 @@ def run_fl(
         sparse wire format (defaults to the scenario's ``compression``
         field; ``None`` = dense uplinks, bit-identical to the
         pre-compression engine).
+      ledger: optional JSONL run-ledger sink — a path or a
+        ``repro.obs.RunLedger``. Writes a run manifest, per-round records,
+        eval points, and a summary; changes no numeric result.
+      phase_timers: optional ``repro.obs.PhaseTimers`` collecting per-phase
+        wall-clock scopes (first/compile call split from steady state).
 
     Returns:
       :class:`~repro.fl.engine.FLResult`.
@@ -94,5 +101,6 @@ def run_fl(
         algo, transport_cfg, client_x, client_y, test_x, test_y,
         n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
-        downlink=downlink, compression=compression,
+        downlink=downlink, compression=compression, ledger=ledger,
+        phase_timers=phase_timers,
     ).run()

@@ -38,6 +38,7 @@ __all__ = [
     "DEFAULT_CALIB_MAX_TX",
     "PolicyConfig",
     "fixed_policy",
+    "mode_names",
     "initial_mode",
     "choose_mode",
     "downlink_mode",
@@ -110,6 +111,15 @@ def fixed_policy(mode: str, modulation: str = "qpsk") -> PolicyConfig:
     """A degenerate single-mode policy — the fixed-transport baseline arms
     of a link-adaptation comparison ride the same scenario machinery."""
     return PolicyConfig(modes=((mode, modulation),), thresholds_db=())
+
+
+def mode_names(cfg: PolicyConfig) -> list:
+    """Human-readable labels of the policy's mode table
+    (``["ecrt/qpsk", "approx/qpsk", ...]``) — the axis labels the
+    observability layer attaches to mode histograms (run-ledger manifests,
+    ``tools/report`` tables) so ``mode_counts`` vectors stay decodable
+    after the run."""
+    return ["/".join(m) for m in cfg.modes]
 
 
 def initial_mode(snr_est_db: jax.Array, cfg: PolicyConfig) -> jax.Array:

@@ -1,0 +1,55 @@
+"""Observability layer: typed records, run ledgers, traces, phase timers.
+
+The cross-cutting telemetry subsystem of the FL engines:
+
+* :mod:`repro.obs.records` — versioned :class:`RoundRecord` /
+  :class:`EventRecord` dataclasses both engines emit natively
+  (``FLResult.link`` stays available as a bit-identical dict view);
+* :mod:`repro.obs.ledger` — the JSONL :class:`RunLedger` sink (manifest
+  with config fingerprint + provenance, incremental per-round flushing) and
+  its reader/validator;
+* :mod:`repro.obs.trace` — the Chrome/Perfetto :class:`TraceRecorder` for
+  the async engine's event clock (waves, client spans, aggregations,
+  churn, buffer fill);
+* :mod:`repro.obs.timers` — :class:`PhaseTimers` wall-clock scopes with
+  first-call (compile) time split from the steady state.
+
+Everything here is an *observer*: attaching any sink to a run changes none
+of its numeric results (pinned by ``tests/test_obs.py``).
+"""
+
+from repro.obs.ledger import (  # noqa: F401
+    LedgerData,
+    RunLedger,
+    config_fingerprint,
+    provenance,
+    read_ledger,
+    validate_ledger,
+)
+from repro.obs.records import (  # noqa: F401
+    EVENT_KINDS,
+    LINK_FIELDS,
+    SCHEMA_VERSION,
+    EventRecord,
+    RoundRecord,
+)
+from repro.obs.timers import NULL_TIMERS, PhaseStat, PhaseTimers  # noqa: F401
+from repro.obs.trace import TraceRecorder  # noqa: F401
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "LINK_FIELDS",
+    "EVENT_KINDS",
+    "RoundRecord",
+    "EventRecord",
+    "RunLedger",
+    "LedgerData",
+    "read_ledger",
+    "validate_ledger",
+    "provenance",
+    "config_fingerprint",
+    "TraceRecorder",
+    "PhaseTimers",
+    "PhaseStat",
+    "NULL_TIMERS",
+]

@@ -1,0 +1,302 @@
+"""JSONL run ledger: durable, append-only telemetry for every FL run.
+
+A ledger is one JSON object per line, flushed as it is written so a crashed
+run keeps every completed round:
+
+    {"kind": "manifest", "schema": 1, "fingerprint": ..., "provenance": ...}
+    {"kind": "round", "round": 0, "mean_snr_db": ..., ...}
+    {"kind": "event", "t": 0.0, "event": "wave", ...}      (async engine)
+    {"kind": "eval", "round": 0, "accuracy": ..., ...}
+    {"kind": "summary", "final_accuracy": ..., "phases": ...}
+
+The **manifest** carries everything needed to compare two runs honestly:
+a config fingerprint (stable hash of the run's algorithm/transport/
+scenario/compression/downlink setup), the seed, and a provenance block
+(jax/numpy/python versions, platform, backend, git sha, UTC timestamp) —
+the same block ``benchmarks/common.bench_meta`` stamps into every
+``BENCH_*.json``. Round lines are :class:`~repro.obs.records.RoundRecord`
+serializations; event lines wrap
+:class:`~repro.obs.records.EventRecord`. ``read_ledger`` parses a file back
+into typed records and ``validate_ledger`` is the schema gate the obs
+benchmark smoke and the tests run.
+
+Attaching a ledger never changes a run's numbers: sinks only observe values
+the engine already computed (``tests/test_obs.py`` pins sink-on == sink-off
+bit equality).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform as platform_lib
+import subprocess
+import sys
+
+from repro.obs import records as records_lib
+
+__all__ = [
+    "provenance",
+    "config_fingerprint",
+    "RunLedger",
+    "as_ledger",
+    "LedgerData",
+    "read_ledger",
+    "validate_ledger",
+]
+
+# Manifest keys every ledger must carry (validate_ledger enforces these).
+MANIFEST_KEYS = ("kind", "schema", "fingerprint", "engine", "algorithm",
+                 "n_rounds", "num_clients", "seed", "provenance")
+PROVENANCE_KEYS = ("schema", "jax", "numpy", "python", "platform", "backend",
+                   "git_sha", "timestamp")
+
+
+def _git_sha() -> str | None:
+    """Current repo HEAD sha, or ``None`` outside a git checkout (the
+    ledger must never fail a run over provenance)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def provenance() -> dict:
+    """The environment block stamped into ledgers and ``BENCH_*.json``:
+    library versions, platform, accelerator backend, git sha, UTC time."""
+    import datetime
+
+    import jax
+    import numpy as np
+
+    return {
+        "schema": records_lib.SCHEMA_VERSION,
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "python": sys.version.split()[0],
+        "platform": platform_lib.platform(),
+        "backend": jax.default_backend(),
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
+def _canonical(obj) -> str:
+    """Deterministic string form of a config object for fingerprinting:
+    dataclasses render as sorted field dicts, containers recurse, leaves
+    fall back to ``repr``."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        fields = {f.name: _canonical(getattr(obj, f.name))
+                  for f in dataclasses.fields(obj)}
+        return f"{type(obj).__name__}({sorted(fields.items())})"
+    if isinstance(obj, dict):
+        return repr(sorted((k, _canonical(v)) for k, v in obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return repr([_canonical(v) for v in obj])
+    return repr(obj)
+
+
+def config_fingerprint(*objs) -> str:
+    """Stable 12-hex-digit digest of a run configuration.
+
+    Two runs with the same fingerprint were launched with the same
+    algorithm/transport/scenario/compression/downlink arguments — the
+    primary join key when diffing ledgers across PRs
+    (``python -m tools.report a.jsonl b.jsonl``).
+    """
+    text = "|".join(_canonical(o) for o in objs)
+    return hashlib.sha256(text.encode()).hexdigest()[:12]
+
+
+def _json_scalar(obj):
+    """``json.dumps`` fallback: engines keep telemetry values in whatever
+    host scalar type the pricing produced (numpy floats included) to stay
+    bit-identical with the dict era, so the ledger coerces at the wire."""
+    if hasattr(obj, "item"):  # numpy scalars / 0-d arrays
+        return obj.item()
+    raise TypeError(
+        f"ledger value of type {type(obj).__name__} is not JSON-serializable")
+
+
+class RunLedger:
+    """Append-only JSONL sink for one FL run (see module docstring).
+
+    ``events=False`` drops the per-event lines (the buffered engine can
+    emit thousands per run) while keeping manifest/round/eval/summary.
+    The file opens lazily on first write and every line is flushed, so a
+    crashed run keeps all completed records. Usable as a context manager;
+    the engines close it from ``run()``'s tail, and ``close`` is idempotent.
+    """
+
+    def __init__(self, path, *, events: bool = True):
+        self.path = os.fspath(path)
+        self.events = events
+        self._f = None
+        self._wrote_manifest = False
+
+    def _write(self, obj: dict) -> None:
+        if self._f is None:
+            self._f = open(self.path, "w")
+        self._f.write(json.dumps(obj, default=_json_scalar) + "\n")
+        self._f.flush()
+
+    def write_manifest(self, manifest: dict) -> None:
+        """First line of the ledger; later calls are ignored so an engine
+        re-run against the same ledger object cannot corrupt the header."""
+        if self._wrote_manifest:
+            return
+        out = {"kind": "manifest", "schema": records_lib.SCHEMA_VERSION}
+        out.update(manifest)
+        self._write(out)
+        self._wrote_manifest = True
+
+    def write_round(self, rec: records_lib.RoundRecord) -> None:
+        """One per-round (or per-wave) record line."""
+        self._write({"kind": "round", **rec.to_dict()})
+
+    def write_event(self, ev: records_lib.EventRecord) -> None:
+        """One event-clock line (no-op when ``events=False``)."""
+        if not self.events:
+            return
+        d = ev.to_dict()
+        d["event"] = d.pop("kind")
+        self._write({"kind": "event", **d})
+
+    def write_eval(self, rnd: int, accuracy: float, airtime_s: float,
+                   event_s: float | None = None) -> None:
+        """One accuracy-curve point (round, accuracy, cumulative airtime,
+        and — buffered engine only — the event-clock timestamp)."""
+        out = {"kind": "eval", "round": int(rnd),
+               "accuracy": float(accuracy), "airtime_s": float(airtime_s)}
+        if event_s is not None:
+            out["event_s"] = float(event_s)
+        self._write(out)
+
+    def write_summary(self, summary: dict) -> None:
+        """Final line: run outcome (final accuracy, wall time, phase-timer
+        summary, ...)."""
+        self._write({"kind": "summary", **summary})
+
+    def close(self) -> None:
+        """Close the file handle (idempotent)."""
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def as_ledger(ledger) -> RunLedger | None:
+    """``ledger=`` engine argument -> a :class:`RunLedger` (a path-like
+    opens a fresh ledger; an existing ledger object passes through)."""
+    if ledger is None or isinstance(ledger, RunLedger):
+        return ledger
+    return RunLedger(ledger)
+
+
+@dataclasses.dataclass
+class LedgerData:
+    """A parsed ledger: the manifest dict, typed round/event records, eval
+    points, and the summary dict (``None`` if the run crashed early)."""
+
+    manifest: dict
+    rounds: list
+    events: list
+    evals: list
+    summary: dict | None
+
+    @property
+    def link(self) -> list:
+        """The run's ``FLResult.link`` view, rebuilt from the round
+        records (bit-identical to what the engine returned)."""
+        return [r.to_link_dict() for r in self.rounds
+                if r.has_link_fields()]
+
+
+def read_ledger(path) -> LedgerData:
+    """Parse a JSONL ledger back into typed records.
+
+    Tolerates a truncated final line (the crash case the incremental
+    flushing exists for) but rejects schema-version mismatches and unknown
+    record kinds.
+    """
+    manifest, rounds, events, evals, summary = None, [], [], [], None
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            # A torn final line is the expected crash artifact; a torn
+            # *interior* line is corruption.
+            if i == len(lines) - 1:
+                break
+            raise
+        kind = obj.pop("kind", None)
+        if kind == "manifest":
+            schema = obj.get("schema")
+            if schema != records_lib.SCHEMA_VERSION:
+                raise ValueError(
+                    f"{path}: ledger schema {schema!r}, reader "
+                    f"supports {records_lib.SCHEMA_VERSION}")
+            manifest = obj
+        elif kind == "round":
+            rounds.append(records_lib.RoundRecord.from_dict(obj))
+        elif kind == "event":
+            obj["kind"] = obj.pop("event")
+            events.append(records_lib.EventRecord.from_dict(obj))
+        elif kind == "eval":
+            evals.append(obj)
+        elif kind == "summary":
+            summary = obj
+        else:
+            raise ValueError(
+                f"{path}:{i + 1}: unknown ledger record kind {kind!r}")
+    if manifest is None:
+        raise ValueError(f"{path}: no manifest line (not a run ledger?)")
+    return LedgerData(manifest, rounds, events, evals, summary)
+
+
+def validate_ledger(path) -> list:
+    """Schema-validate a ledger file; returns a list of problem strings
+    (empty = valid). The gate behind ``make bench-obs`` and the tests."""
+    problems = []
+    try:
+        data = read_ledger(path)
+    except (ValueError, OSError) as e:
+        return [f"{path}: unreadable: {e}"]
+    for key in MANIFEST_KEYS[1:]:  # "kind" was consumed by the reader
+        if key not in data.manifest:
+            problems.append(f"{path}: manifest missing key {key!r}")
+    prov = data.manifest.get("provenance", {})
+    for key in PROVENANCE_KEYS:
+        if key not in prov:
+            problems.append(f"{path}: provenance missing key {key!r}")
+    for i, ev in enumerate(data.events):
+        if ev.kind in ("wave", "compute", "uplink") and ev.dur is None:
+            problems.append(
+                f"{path}: event {i} ({ev.kind}) is a span but has no dur")
+    seen = [r.round for r in data.rounds]
+    if seen != sorted(seen):
+        problems.append(f"{path}: round records out of order")
+    for ev in data.evals:
+        for key in ("round", "accuracy", "airtime_s"):
+            if key not in ev:
+                problems.append(f"{path}: eval record missing {key!r}")
+    return problems

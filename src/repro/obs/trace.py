@@ -1,0 +1,173 @@
+"""Chrome/Perfetto trace export for the buffered asynchronous engine.
+
+The async engine's event clock (dispatch waves, per-client compute and
+uplink-airtime spans, buffer fills, aggregations, join/leave churn) is the
+quantity its whole design optimizes, yet until this layer it surfaced only
+as ``FLResult.event_s`` scalars. :class:`TraceRecorder` consumes the
+engine's :class:`~repro.obs.records.EventRecord` stream and renders it in
+the Chrome trace-event JSON format, loadable directly in
+``https://ui.perfetto.dev`` (or ``chrome://tracing``):
+
+* **waves** track (pid "server") — one span per dispatched wave, from its
+  dispatch instant to its last member's arrival;
+* **aggregate** track — an instant per buffer fold, labeled with the model
+  version and how many updates it folded;
+* **buffer** counter track — the server buffer's fill level over time;
+* **client i** tracks (pid "clients") — each client's compute span followed
+  by its uplink-airtime span, per wave;
+* **churn** track — join/leave instants for scenarios with churn.
+
+Timestamps are the *simulated* event clock (seconds), emitted in the
+format's microseconds; one simulated second reads as one "second" in the
+UI. Event ingestion is pure bookkeeping on host floats the engine already
+computed, so attaching a recorder never changes a run's numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.obs import records as records_lib
+
+__all__ = ["TraceRecorder", "as_trace"]
+
+# Synthetic pid/tid layout: one "process" per track family. Perfetto
+# renders each (pid, tid) pair as its own named track.
+_PID_SERVER = 1
+_PID_CLIENTS = 2
+_TID_WAVES = 1
+_TID_AGG = 2
+_TID_CHURN = 3
+
+
+def _us(t_s: float) -> float:
+    """Simulated seconds -> trace microseconds."""
+    return float(t_s) * 1e6
+
+
+class TraceRecorder:
+    """Collects :class:`EventRecord` streams into a Chrome trace.
+
+    ``path=None`` keeps the trace in memory (``to_chrome`` /
+    ``export(path)``); a path set at construction lets the engine call
+    :meth:`export` with no arguments at the end of the run. Track metadata
+    (process/thread names) is emitted lazily, only for tracks that actually
+    received events.
+    """
+
+    def __init__(self, path=None):
+        self.path = None if path is None else os.fspath(path)
+        self.events: list = []  # EventRecords, in arrival order
+        self._chrome: list = []
+        self._named: set = set()
+
+    # ------------------------------------------------------------ naming
+
+    def _name(self, pid: int, tid: int | None, name: str) -> None:
+        key = (pid, tid)
+        if key in self._named:
+            return
+        self._named.add(key)
+        if tid is None:  # process metadata
+            self._chrome.append({
+                "ph": "M", "name": "process_name", "pid": pid,
+                "args": {"name": name}})
+        else:
+            self._name(pid, None,
+                       "server" if pid == _PID_SERVER else "clients")
+            self._chrome.append({
+                "ph": "M", "name": "thread_name", "pid": pid, "tid": tid,
+                "args": {"name": name}})
+
+    def _client_tid(self, client: int) -> int:
+        tid = int(client) + 1  # tid 0 renders oddly in some viewers
+        self._name(_PID_CLIENTS, tid, f"client {int(client)}")
+        return tid
+
+    # ----------------------------------------------------------- ingest
+
+    def add(self, ev: records_lib.EventRecord) -> None:
+        """Ingest one engine event (see :data:`repro.obs.records.EVENT_KINDS`
+        for the kinds and which carry spans vs instants vs counters)."""
+        self.events.append(ev)
+        k = ev.kind
+        if k == "wave":
+            self._name(_PID_SERVER, _TID_WAVES, "waves")
+            self._chrome.append({
+                "ph": "X", "name": f"wave {ev.wave}", "cat": "wave",
+                "pid": _PID_SERVER, "tid": _TID_WAVES,
+                "ts": _us(ev.t), "dur": _us(ev.dur or 0.0),
+                "args": {"wave": ev.wave, "members": ev.value}})
+        elif k in ("compute", "uplink"):
+            tid = self._client_tid(ev.client)
+            self._chrome.append({
+                "ph": "X", "name": k, "cat": k,
+                "pid": _PID_CLIENTS, "tid": tid,
+                "ts": _us(ev.t), "dur": _us(ev.dur or 0.0),
+                "args": {"wave": ev.wave}})
+        elif k == "arrival":
+            tid = self._client_tid(ev.client)
+            self._chrome.append({
+                "ph": "i", "name": "arrival", "cat": "arrival", "s": "t",
+                "pid": _PID_CLIENTS, "tid": tid, "ts": _us(ev.t),
+                "args": {"wave": ev.wave}})
+        elif k == "aggregate":
+            self._name(_PID_SERVER, _TID_AGG, "aggregate")
+            self._chrome.append({
+                "ph": "i", "name": f"v{ev.version}", "cat": "aggregate",
+                "s": "p", "pid": _PID_SERVER, "tid": _TID_AGG,
+                "ts": _us(ev.t),
+                "args": {"version": ev.version, "folded": ev.value}})
+        elif k in ("join", "leave"):
+            self._name(_PID_SERVER, _TID_CHURN, "churn")
+            self._chrome.append({
+                "ph": "i", "name": f"{k} {ev.client}", "cat": "churn",
+                "s": "t", "pid": _PID_SERVER, "tid": _TID_CHURN,
+                "ts": _us(ev.t), "args": {"client": ev.client}})
+        elif k == "buffer":
+            self._chrome.append({
+                "ph": "C", "name": "buffer_fill", "cat": "buffer",
+                "pid": _PID_SERVER, "ts": _us(ev.t),
+                "args": {"updates": ev.value}})
+
+    # ----------------------------------------------------------- export
+
+    def track_types(self) -> set:
+        """Distinct track families present (``wave``/``client-span``/
+        ``aggregate``/``churn``/``buffer``/``arrival``) — the acceptance
+        axis of the obs benchmark smoke."""
+        out = set()
+        for e in self._chrome:
+            cat = e.get("cat")
+            if cat in ("compute", "uplink"):
+                out.add("client-span")
+            elif cat:
+                out.add(cat)
+        return out
+
+    def to_chrome(self) -> dict:
+        """The trace as a Chrome trace-event JSON object."""
+        return {"traceEvents": list(self._chrome),
+                "displayTimeUnit": "ms",
+                "otherData": {"clock": "simulated event seconds",
+                              "schema": records_lib.SCHEMA_VERSION}}
+
+    def export(self, path=None) -> str:
+        """Write the trace JSON to ``path`` (default: the constructor's
+        path) and return the path written."""
+        path = self.path if path is None else os.fspath(path)
+        if path is None:
+            raise ValueError("TraceRecorder.export: no path given")
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+
+def as_trace(trace) -> TraceRecorder | None:
+    """``trace=`` engine argument -> a :class:`TraceRecorder` (a path-like
+    opens a fresh recorder that exports there; an existing recorder passes
+    through)."""
+    if trace is None or isinstance(trace, TraceRecorder):
+        return trace
+    return TraceRecorder(trace)

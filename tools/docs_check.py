@@ -1,13 +1,14 @@
-"""Documentation gate for the core/link/fl/compress packages
+"""Documentation gate for the library packages and the tools
 (``make docs-check``).
 
 Fails (exit 1) when a public module under ``src/repro/core/``,
-``src/repro/link/``, ``src/repro/fl/``, or ``src/repro/compress/`` lacks a
-module docstring, or a public (non-underscore) top-level function or class
-in one of those modules lacks its own docstring. Public *methods* of
-public classes are also checked (dunder methods other than ``__init__``
-are exempt; ``__init__`` may document itself in the class docstring
-instead, the repo's prevailing style). Kept dependency-free: pure ``ast``.
+``src/repro/link/``, ``src/repro/fl/``, ``src/repro/compress/``,
+``src/repro/obs/``, or ``tools/`` lacks a module docstring, or a public
+(non-underscore) top-level function or class in one of those modules lacks
+its own docstring. Public *methods* of public classes are also checked
+(dunder methods other than ``__init__`` are exempt; ``__init__`` may
+document itself in the class docstring instead, the repo's prevailing
+style). Kept dependency-free: pure ``ast``.
 """
 
 from __future__ import annotations
@@ -16,11 +17,14 @@ import ast
 import pathlib
 import sys
 
-_SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-PACKAGES = [_SRC / "core", _SRC / "link", _SRC / "fl", _SRC / "compress"]
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_SRC = _ROOT / "src" / "repro"
+PACKAGES = [_SRC / "core", _SRC / "link", _SRC / "fl", _SRC / "compress",
+            _SRC / "obs", _ROOT / "tools"]
 
 
 def check_module(path: pathlib.Path) -> list[str]:
+    """Docstring problems of one module (empty list = clean)."""
     tree = ast.parse(path.read_text(), filename=str(path))
     problems = []
     if ast.get_docstring(tree) is None:
@@ -52,6 +56,7 @@ def check_module(path: pathlib.Path) -> list[str]:
 
 
 def main() -> int:
+    """Walk the gated packages; exit 1 when any docstring is missing."""
     problems, n_modules = [], 0
     for pkg in PACKAGES:
         for path in sorted(pkg.glob("*.py")):

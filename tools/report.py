@@ -1,0 +1,211 @@
+"""Render and diff FL run ledgers (``repro.obs`` JSONL files).
+
+One ledger -> a run summary::
+
+    PYTHONPATH=src python -m tools.report out.jsonl
+
+prints the manifest (engine, algorithm, scenario, fingerprint, provenance),
+the accuracy-vs-airtime eval curve, the aggregate link-mode histogram, the
+per-leg BER aggregates, and the phase-timer table when the run collected
+one.
+
+Two ledgers -> a diff::
+
+    PYTHONPATH=src python -m tools.report a.jsonl b.jsonl
+
+lines the two runs up on the config fingerprint (a mismatch is reported,
+not fatal — diffing across configs is the point of the tool), then compares
+final accuracy, total airtime, accuracy at the smaller run's airtime
+budget, mode histograms, and mean BER per leg.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.obs import ledger as obs_ledger
+
+
+def _fmt(v, digits: int = 4) -> str:
+    """Compact scalar formatting for table cells."""
+    if isinstance(v, float):
+        return f"{v:.{digits}g}"
+    return str(v)
+
+
+def _table(rows: list, headers: list) -> str:
+    """Fixed-width text table (no external deps)."""
+    cells = [[_fmt(c) for c in row] for row in rows]
+    widths = [max(len(h), *(len(r[i]) for r in cells)) if cells else len(h)
+              for i, h in enumerate(headers)]
+    out = ["  ".join(h.ljust(w) for h, w in zip(headers, widths))]
+    out.append("  ".join("-" * w for w in widths))
+    for r in cells:
+        out.append("  ".join(c.rjust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def mode_histogram(data: obs_ledger.LedgerData) -> list | None:
+    """Summed per-mode client counts across the run (``None`` when the run
+    had no scenario link telemetry)."""
+    counts = None
+    for rec in data.rounds:
+        if rec.mode_counts is None:
+            continue
+        if counts is None:
+            counts = [0] * len(rec.mode_counts)
+        for i, c in enumerate(rec.mode_counts):
+            counts[i] += c
+    return counts
+
+
+def ber_per_leg(data: obs_ledger.LedgerData) -> dict:
+    """Mean per-leg BER over the rounds that recorded it (uplink BER comes
+    from the observability ``uplink_*`` fields, downlink from the link
+    telemetry)."""
+    out = {}
+    up = [r.uplink_ber for r in data.rounds if r.uplink_ber is not None]
+    down = [r.downlink_ber for r in data.rounds
+            if r.downlink_ber is not None]
+    if up:
+        out["uplink"] = sum(up) / len(up)
+    if down:
+        out["downlink"] = sum(down) / len(down)
+    return out
+
+
+def accuracy_at_airtime(data: obs_ledger.LedgerData,
+                        budget_s: float) -> float | None:
+    """Best accuracy reached within ``budget_s`` cumulative airtime."""
+    best = None
+    for ev in data.evals:
+        if ev["airtime_s"] <= budget_s:
+            best = ev["accuracy"] if best is None else max(best,
+                                                           ev["accuracy"])
+    return best
+
+
+def summarize(path: str) -> None:
+    """Print the single-ledger run summary."""
+    data = obs_ledger.read_ledger(path)
+    man = data.manifest
+    prov = man.get("provenance", {})
+    print(f"== run ledger: {path}")
+    for key in ("engine", "algorithm", "scenario", "dispatch",
+                "transport_mode", "n_rounds", "num_clients", "seed",
+                "buffer_k", "staleness", "fingerprint"):
+        if key in man:
+            print(f"  {key:<16} {man[key]}")
+    print(f"  {'provenance':<16} jax {prov.get('jax')}  "
+          f"backend {prov.get('backend')}  git {prov.get('git_sha')}  "
+          f"{prov.get('timestamp')}")
+    print(f"  {'records':<16} {len(data.rounds)} rounds, "
+          f"{len(data.events)} events, {len(data.evals)} evals")
+
+    if data.evals:
+        headers = ["round", "accuracy", "airtime_s"]
+        rows = [[ev["round"], ev["accuracy"], ev["airtime_s"]]
+                for ev in data.evals]
+        if any("event_s" in ev for ev in data.evals):
+            headers.append("event_s")
+            for row, ev in zip(rows, data.evals):
+                row.append(ev.get("event_s", ""))
+        print()
+        print(_table(rows, headers))
+
+    hist = mode_histogram(data)
+    if hist is not None:
+        names = man.get("mode_names") or [f"mode{i}"
+                                          for i in range(len(hist))]
+        pairs = ", ".join(f"{n}: {c}" for n, c in zip(names, hist))
+        print(f"\nmode histogram (client-rounds): {pairs}")
+    ber = ber_per_leg(data)
+    for leg, val in ber.items():
+        print(f"mean {leg} BER: {val:.3e}")
+
+    if data.summary:
+        s = data.summary
+        print(f"\nfinal accuracy {s.get('final_accuracy'):.4f}  "
+              f"wall {s.get('wall_s', 0.0):.1f}s  "
+              f"airtime {s.get('airtime_s', 0.0):.2f}s")
+        phases = s.get("phases")
+        if phases:
+            rows = [[name, p["calls"], p["first_s"], p["steady_median_s"],
+                     p["total_s"]] for name, p in phases.items()]
+            print()
+            print(_table(rows, ["phase", "calls", "first_s",
+                                "steady_med_s", "total_s"]))
+    else:
+        print("\n(no summary line — the run did not finish)")
+
+
+def diff(path_a: str, path_b: str) -> None:
+    """Print the two-ledger comparison."""
+    a = obs_ledger.read_ledger(path_a)
+    b = obs_ledger.read_ledger(path_b)
+    fa, fb = a.manifest.get("fingerprint"), b.manifest.get("fingerprint")
+    print(f"== diff: {path_a} vs {path_b}")
+    print(f"  fingerprints {'match' if fa == fb else 'DIFFER'}: "
+          f"{fa} vs {fb}")
+    rows = []
+    for key in ("engine", "algorithm", "scenario", "n_rounds",
+                "num_clients", "seed", "buffer_k", "staleness"):
+        va, vb = a.manifest.get(key), b.manifest.get(key)
+        if va is not None or vb is not None:
+            rows.append([key, va, vb, "" if va == vb else "<>"])
+    print(_table(rows, ["config", "a", "b", ""]))
+
+    rows = []
+    sa = a.summary or {}
+    sb = b.summary or {}
+    for label, va, vb in [
+        ("final_accuracy", sa.get("final_accuracy"),
+         sb.get("final_accuracy")),
+        ("airtime_s", sa.get("airtime_s"), sb.get("airtime_s")),
+        ("wall_s", sa.get("wall_s"), sb.get("wall_s")),
+    ]:
+        if va is not None and vb is not None:
+            rows.append([label, va, vb, vb - va])
+    if rows:
+        print()
+        print(_table(rows, ["metric", "a", "b", "b-a"]))
+
+    # Accuracy at the smaller airtime budget: the honest
+    # accuracy-vs-airtime comparison when total airtimes differ.
+    if a.evals and b.evals:
+        budget = min(a.evals[-1]["airtime_s"], b.evals[-1]["airtime_s"])
+        aa = accuracy_at_airtime(a, budget)
+        ab = accuracy_at_airtime(b, budget)
+        if aa is not None and ab is not None:
+            print(f"\naccuracy @ {budget:.2f}s airtime: "
+                  f"a={aa:.4f}  b={ab:.4f}  (b-a: {ab - aa:+.4f})")
+
+    for label, data in (("a", a), ("b", b)):
+        hist = mode_histogram(data)
+        if hist is not None:
+            print(f"mode histogram [{label}]: {hist}")
+    for label, data in (("a", a), ("b", b)):
+        ber = ber_per_leg(data)
+        if ber:
+            pairs = "  ".join(f"{leg}={val:.3e}"
+                              for leg, val in ber.items())
+            print(f"BER per leg [{label}]: {pairs}")
+
+
+def main() -> None:
+    """CLI entry: one ledger summarizes, two ledgers diff."""
+    ap = argparse.ArgumentParser(
+        description="summarize one FL run ledger, or diff two")
+    ap.add_argument("ledger", nargs="+",
+                    help="1 (summary) or 2 (diff) JSONL ledger paths")
+    args = ap.parse_args()
+    if len(args.ledger) == 1:
+        summarize(args.ledger[0])
+    elif len(args.ledger) == 2:
+        diff(args.ledger[0], args.ledger[1])
+    else:
+        ap.error("expected 1 or 2 ledger paths")
+
+
+if __name__ == "__main__":
+    main()
