@@ -5,7 +5,7 @@ PY := python
 export PYTHONPATH := src
 
 .PHONY: test bench-smoke bench-link bench-fl bench-compress bench-async \
-        bench-obs docs-check
+        bench-obs docs-check lint
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -56,5 +56,12 @@ bench-obs:
 
 # Fails if a public module (or public function/class) under
 # src/repro/{core,link,fl,compress,obs} or tools/ lacks a docstring.
+# (Thin wrapper over the `docstrings` rule of tools/lint.)
 docs-check:
 	$(PY) tools/docs_check.py
+
+# repro-lint: the AST invariant checker suite (keylane, determinism,
+# jit-purity, dtype-discipline, docstrings, bench-schema). Pure AST — no
+# jax import, fast enough for a pre-commit hook.
+lint:
+	$(PY) -m tools.lint src tools benchmarks

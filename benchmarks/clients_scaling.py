@@ -48,6 +48,8 @@ def _loop_fn(single, key, m):
     def loop_all(xb):
         outs = []
         for i in range(m):
+            # mirrors client_keys' uplink schedule for the batched-vs-loop
+            # equivalence check: lint: ignore[keylane]
             outs.append(single(xb[i], jax.random.fold_in(key, i))[0])
         return jnp.stack(outs)
 

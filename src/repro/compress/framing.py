@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.compress import sparsify as sparsify_lib
 from repro.core import float_codec as fc
+from repro.core import keylanes
 from repro.core import modulation as mod_lib
 from repro.core import transport as transport_lib
 
@@ -67,7 +68,9 @@ __all__ = [
 # fold_in lane (applied to a *client* key) where the index header draws its
 # channel realization; far above chunk indices and distinct from
 # sparsify.SELECT_KEY_LANE, so the per-client derivations never collide.
-HEADER_KEY_LANE = 1 << 21
+# Declared centrally in repro.core.keylanes (overlap-checked at import);
+# re-exported here with the historical value (1 << 21).
+HEADER_KEY_LANE = keylanes.HEADER_KEY_LANE
 
 
 def _default_compression(compression):

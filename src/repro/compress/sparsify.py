@@ -34,6 +34,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import keylanes
+
 __all__ = [
     "SELECT_KEY_LANE",
     "CompressionConfig",
@@ -54,8 +56,9 @@ __all__ = [
 # its subset. Lives far above the chunk indices that
 # ``transport._uncoded_chunked`` folds onto the same client key, and is
 # distinct from the framing header lane, so the three per-client derivations
-# never collide.
-SELECT_KEY_LANE = (1 << 21) + 1
+# never collide. Declared centrally in repro.core.keylanes (overlap-checked
+# at import); re-exported here with the historical value ((1 << 21) + 1).
+SELECT_KEY_LANE = keylanes.SELECT_KEY_LANE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,6 +271,7 @@ def selection_keys(key: jax.Array, num_clients: int, offset=0) -> jax.Array:
     selection is identical whichever dispatch (batched, bucketed, select,
     per-client loop) carries the round.
     """
+    keylanes.check_range(offset, num_clients)
     idx = jnp.arange(num_clients) + offset
     return jax.vmap(
         lambda i: jax.random.fold_in(jax.random.fold_in(key, i),

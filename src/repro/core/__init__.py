@@ -1,5 +1,6 @@
 """Core: the paper's approximate-wireless-communication contribution."""
 
+from repro.core import keylanes
 from repro.core.channel import ChannelConfig, transmit, equalize, per_client_snr_db
 from repro.core.float_codec import (
     f32_to_bits,

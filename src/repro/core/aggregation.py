@@ -57,6 +57,8 @@ def approx_allreduce(
     for ax in axis_names:
         idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
         mul *= jax.lax.axis_size(ax)
+    # mesh-shard keyspace on a dedicated aggregation key (bounded by the
+    # mesh size), not the round/client lane table: lint: ignore[keylane]
     shard_key = jax.random.fold_in(key, idx)
     corrupted, stats = corrupt_local(local_grads, shard_key, cfg)
     # reduce in f32: bf16 psum additionally halves the all-reduce bytes but

@@ -34,7 +34,17 @@ __all__ = [
     "clamp_exponent_bits",
     "exponent_clamp_mask",
     "BIT30_MASK",
+    "WIRE_DTYPES",
 ]
+
+# The declared wire dtype set: every array a wire-format module (codec,
+# modulation, channel, transport, framing, sparsify, kernels) materializes
+# must carry one of these dtypes explicitly. float64 never rides the wire —
+# the format is 32-bit words — and host numpy's implicit float64 default is
+# banned in those modules (the ``dtype-discipline`` rule of ``tools/lint``
+# parses this tuple and enforces both).
+WIRE_DTYPES = ("float32", "bfloat16", "float16", "uint8", "uint16",
+               "uint32", "int32", "complex64", "bool_")
 
 # ~(1 << 30): clears the exponent MSB.
 BIT30_MASK = jnp.uint32(0xBFFFFFFF)

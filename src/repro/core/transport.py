@@ -98,6 +98,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import channel as channel_lib
+from repro.core import keylanes
 from repro.core import ecrt as ecrt_lib
 from repro.core import float_codec as fc
 from repro.core import modulation as mod_lib
@@ -126,8 +127,10 @@ __all__ = [
 # draws fold_in(key, i), downlink client i draws fold_in(key, LANE + i), so
 # one round key serves both legs with independent channel realizations.
 # Cohorts must stay below the lane width (~1M clients) or the two schedules
-# would collide; transmit_broadcast validates this.
-DOWNLINK_KEY_LANE = 1 << 20
+# would collide; transmit_broadcast validates this. Declared centrally in
+# repro.core.keylanes (overlap-checked at import); re-exported here with
+# the historical value (1 << 20), which the goldens pin.
+DOWNLINK_KEY_LANE = keylanes.DOWNLINK_KEY_LANE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,20 +226,22 @@ class TxStats:
         is the cohort's pooled payload BER, total errors over total offered
         bits).
         """
-        symbols = np.asarray(self.data_symbols, np.float64)
-        bits = np.asarray(self.n_bits, np.float64)
-        errors = np.asarray(self.bit_errors, np.float64)
+        # Host-side stats accumulator — never touches the wire format.
+        f64 = np.float64  # lint: ignore[dtype-discipline]
+        symbols = np.asarray(self.data_symbols, f64)
+        bits = np.asarray(self.n_bits, f64)
+        errors = np.asarray(self.bit_errors, f64)
         out = {
             "uplink_symbols": float(symbols.sum()),
             "uplink_bits": float(bits.sum()),
             "uplink_bit_errors": float(errors.sum()),
             "uplink_ber": float(errors.sum() / max(bits.sum(), 1.0)),
             "uplink_mean_tx": float(
-                np.mean(np.asarray(self.transmissions, np.float64))),
+                np.mean(np.asarray(self.transmissions, f64))),
         }
         if self.bits_on_air is not None:
             out["uplink_bits_on_air"] = float(
-                np.asarray(self.bits_on_air, np.float64).sum())
+                np.asarray(self.bits_on_air, f64).sum())
         return out
 
 
@@ -365,6 +370,8 @@ def _uncoded_chunked(x: jax.Array, key: jax.Array, cfg: TransportConfig,
     pad = (-n) % chunk
     xp = jnp.pad(x, (0, pad)).reshape(-1, chunk)
     n_chunks = xp.shape[0]
+    # chunk indices ride the client-space chunk lane of the client key
+    keylanes.check_range(0, n_chunks, space="client")
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n_chunks))
 
     def one(args):
@@ -430,9 +437,11 @@ def client_keys(key: jax.Array, num_clients: int, offset=0) -> jax.Array:
     """The batched uplink's key schedule: ``key_i = fold_in(key, offset + i)``.
 
     ``offset`` may be a traced int — ``shard_transmit_batch`` passes each
-    shard's global client offset so sharded and unsharded batches agree.
+    shard's global client offset so sharded and unsharded batches agree
+    (the key-lane span check only runs on concrete offsets).
     Returns ``(num_clients, key_size)`` keys.
     """
+    keylanes.check_range(offset, num_clients)
     idx = jnp.arange(num_clients) + offset
     return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
 
@@ -880,11 +889,7 @@ def _broadcast_payload(x: jax.Array, num_clients: int) -> jax.Array:
     x = jnp.asarray(x, jnp.float32)
     if x.ndim != 1:
         raise ValueError(f"broadcast wants a flat (N,) payload; got {x.shape}")
-    if not 0 < num_clients <= DOWNLINK_KEY_LANE:
-        raise ValueError(
-            f"broadcast num_clients must be in [1, {DOWNLINK_KEY_LANE}] (the "
-            f"downlink key lane width); got {num_clients}"
-        )
+    keylanes.check_cohort(DOWNLINK_KEY_LANE, num_clients)
     return jnp.broadcast_to(x, (num_clients, x.shape[0]))
 
 

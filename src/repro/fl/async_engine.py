@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.compress import framing as framing_lib
 from repro.compress import sparsify as sparsify_lib
+from repro.core import keylanes
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import engine as engine_lib
@@ -199,7 +200,7 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
         # post-init base key — fold_in consumes no splits, so the wave key
         # schedule below still matches the synchronous round schedule.
         self._speed = dynamics_lib.client_speed_factors(
-            jax.random.fold_in(self._key, dynamics_lib.COMPUTE_KEY_LANE),
+            jax.random.fold_in(self._key, keylanes.COMPUTE_KEY_LANE),
             M, self.compute_cfg)
         self._build_wave_fns()
 
@@ -477,7 +478,7 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
         params, aux, key = self.params, self.aux, self._key
         rng = np.random.default_rng(self.seed)
         res = engine_lib.FLResult([], [], [], 0.0, 0.0)
-        t0 = time.time()
+        t0 = time.time()  # lint: ignore[determinism] wall-clock telemetry
         if self.ledger is not None:
             self.ledger.write_manifest(self._manifest())
 
@@ -728,7 +729,7 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                     f"(version {version}/{self.n_rounds})")
 
         self.params, self.aux, self._key = params, aux, key
-        res.wall_s = time.time() - t0
+        res.wall_s = time.time() - t0  # lint: ignore[determinism]
         res.final_accuracy = res.accuracy[-1]
         self._finish_run(res)
         if self.trace is not None and self.trace.path is not None:

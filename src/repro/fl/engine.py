@@ -65,6 +65,7 @@ import numpy as np
 
 from repro.compress import framing as framing_lib
 from repro.compress import sparsify as sparsify_lib
+from repro.core import keylanes
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import cnn
@@ -888,7 +889,7 @@ class RoundEngine:
             sel = None
             if comp.method == "randk":
                 sel = jax.vmap(lambda kk: jax.random.fold_in(
-                    kk, sparsify_lib.SELECT_KEY_LANE))(kb)
+                    kk, keylanes.SELECT_KEY_LANE))(kb)
             vals, sidx = sparsify_lib.select_batch(xb, ks[m], comp, sel)
             parts_sent.append(sparsify_lib.scatter_dense_batch(vals, sidx, D))
             fn = framing_lib._sparse_fn(cfg, comp, D, sb is not None)
@@ -1002,7 +1003,7 @@ class RoundEngine:
         params, aux, key = self.params, self.aux, self._key
         rng = np.random.default_rng(self.seed)
         res = FLResult([], [], [], 0.0, 0.0)
-        t0 = time.time()
+        t0 = time.time()  # lint: ignore[determinism] wall-clock telemetry
         if self.ledger is not None:
             self.ledger.write_manifest(self._manifest())
         cum_air = 0.0
@@ -1066,7 +1067,7 @@ class RoundEngine:
                 if self.ledger is not None:
                     self.ledger.write_eval(r, acc, cum_air)
         self.params, self.aux, self._key = params, aux, key
-        res.wall_s = time.time() - t0
+        res.wall_s = time.time() - t0  # lint: ignore[determinism]
         res.final_accuracy = res.accuracy[-1]
         self._finish_run(res)
         return res

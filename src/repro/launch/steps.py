@@ -57,6 +57,8 @@ def corrupt_per_shard(grads, key, transport_cfg, mesh):
         idx = jnp.int32(0)
         for ax in mesh.axis_names:
             idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        # mesh-shard keyspace on a dedicated per-shard key (bounded by
+        # the mesh size), not the lane table: lint: ignore[keylane]
         k = jax.random.fold_in(key, idx)
         flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
         flat_hat, _ = transport_lib.transmit_flat(flat, k, transport_cfg)

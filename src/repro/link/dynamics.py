@@ -32,12 +32,15 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import keylanes
+
 __all__ = [
     "LinkDynamicsConfig",
     "LinkState",
     "DYNAMICS_PRESETS",
     "COMPUTE_KEY_LANE",
     "EVENT_KEY_LANE",
+    "EVENT_GAP_KEY_LANE",
     "ComputeTimeConfig",
     "ArrivalConfig",
     "jakes_rho",
@@ -67,8 +70,16 @@ __all__ = [
 # Each client draws from its own folded key, so the draws are independent
 # of cohort batching: evaluating a subset of clients is bit-identical to
 # slicing the full-cohort evaluation.
-COMPUTE_KEY_LANE = 1 << 22
-EVENT_KEY_LANE = 3 << 21
+#
+# All three are declared centrally in repro.core.keylanes (overlap-checked
+# at import) and re-exported here with the historical values: COMPUTE is
+# 1 << 22, EVENT is 3 << 21, and the gap sub-lane EVENT + (1 << 20) is now
+# the first-class EVENT_GAP_KEY_LANE. Every client-indexed draw below
+# validates the cohort against the lane span (1 << 20) — a >1M-client
+# cohort raises instead of silently walking into the next lane.
+COMPUTE_KEY_LANE = keylanes.COMPUTE_KEY_LANE
+EVENT_KEY_LANE = keylanes.EVENT_KEY_LANE
+EVENT_GAP_KEY_LANE = keylanes.EVENT_GAP_KEY_LANE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -251,6 +262,8 @@ def client_speed_factors(key: jax.Array, num_clients: int,
     synchronous key schedule is untouched). ``speed_spread = 0`` yields
     exactly 1.0 for every client (``exp(±0.0) == 1.0`` in float32).
     """
+    keylanes.check_cohort(COMPUTE_KEY_LANE, num_clients)
+
     def one(i):
         k = jax.random.fold_in(key, COMPUTE_KEY_LANE + i)
         return jax.random.normal(k, (), jnp.float32)
@@ -274,6 +287,8 @@ def compute_times(key: jax.Array, cfg: ComputeTimeConfig, num_clients: int,
     default (degenerate) config the result is exactly ``mean_s`` for every
     client — the synchronous-equivalence invariant.
     """
+    keylanes.check_cohort(COMPUTE_KEY_LANE, num_clients)
+
     def one(i):
         k = jax.random.fold_in(key, COMPUTE_KEY_LANE + i)
         kz, ku = jax.random.split(k)
@@ -298,6 +313,8 @@ def churn_step(key: jax.Array, joined: jax.Array,
     per-client lanes, so the churn of any subset is independent of the
     rest of the cohort.
     """
+    keylanes.check_cohort(EVENT_KEY_LANE, int(jnp.shape(joined)[0]))
+
     def one(i):
         k = jax.random.fold_in(key, EVENT_KEY_LANE + i)
         return jax.random.uniform(k, (), jnp.float32)
@@ -311,15 +328,17 @@ def idle_gaps(key: jax.Array, num_clients: int,
               cfg: ArrivalConfig) -> jax.Array:
     """Per-client exponential post-upload idle gaps (seconds).
 
-    Offset by a fixed sub-lane (``1 << 20``, far above any plausible cohort
-    size) inside the event lane so a wave's idle draws never collide with
-    its churn uniforms — a *constant* offset, so slicing a full-cohort draw
-    equals drawing the subcohort (batching independence, like every other
-    per-client lane). ``mean_idle_s = 0`` yields exactly zero (immediate
-    re-availability).
+    Rides :data:`EVENT_GAP_KEY_LANE` (``EVENT_KEY_LANE + (1 << 20)``, far
+    above any plausible cohort size) so a wave's idle draws never collide
+    with its churn uniforms — a *constant* offset, so slicing a full-cohort
+    draw equals drawing the subcohort (batching independence, like every
+    other per-client lane). ``mean_idle_s = 0`` yields exactly zero
+    (immediate re-availability).
     """
+    keylanes.check_cohort(EVENT_GAP_KEY_LANE, num_clients)
+
     def one(i):
-        k = jax.random.fold_in(key, EVENT_KEY_LANE + (1 << 20) + i)
+        k = jax.random.fold_in(key, EVENT_GAP_KEY_LANE + i)
         return jax.random.exponential(k, (), jnp.float32)
 
     g = jax.vmap(one)(jnp.arange(num_clients))

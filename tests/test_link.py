@@ -469,3 +469,39 @@ def test_run_fedavg_scenario_smoke():
         assert sum(t["mode_counts"]) == 6
         assert t["airtime_s"] >= 0.0
     assert np.isfinite(res.final_accuracy)
+
+
+# ------------------------------------------- event-layer lane-span guards
+
+
+def test_event_layer_rejects_cohort_beyond_lane_span():
+    """Every event-layer draw is client-indexed inside a reserved fold_in
+    lane; a cohort wider than the lane span would walk into the next lane
+    (mirroring transmit_broadcast's historical num_clients guard)."""
+    too_many = D.COMPUTE_KEY_LANE.span + 1
+    ccfg = D.ComputeTimeConfig()
+    acfg = D.ArrivalConfig()
+    with pytest.raises(ValueError, match="num_clients"):
+        D.client_speed_factors(KEY, too_many, ccfg)
+    with pytest.raises(ValueError, match="num_clients"):
+        D.compute_times(KEY, ccfg, too_many)
+    with pytest.raises(ValueError, match="num_clients"):
+        D.churn_step(KEY, jnp.ones(D.EVENT_KEY_LANE.span + 1,
+                                   dtype=jnp.float32), acfg)
+    with pytest.raises(ValueError, match="num_clients"):
+        D.idle_gaps(KEY, D.EVENT_GAP_KEY_LANE.span + 1, acfg)
+
+
+def test_event_layer_lane_spans_admit_full_width_cohorts():
+    """The guard itself accepts cohorts up to exactly the lane span (checked
+    on the guard, not the draw, to avoid allocating 1M-element arrays) and
+    small cohorts draw normally."""
+    from repro.core import keylanes
+
+    for lane in (D.COMPUTE_KEY_LANE, D.EVENT_KEY_LANE,
+                 D.EVENT_GAP_KEY_LANE):
+        keylanes.check_cohort(lane, lane.span)
+        with pytest.raises(ValueError, match="num_clients"):
+            keylanes.check_cohort(lane, lane.span + 1)
+    assert D.compute_times(KEY, D.ComputeTimeConfig(), 4).shape == (4,)
+    assert D.idle_gaps(KEY, 4, D.ArrivalConfig()).shape == (4,)

@@ -1,0 +1,487 @@
+"""repro-lint: rule fixtures, suppressions, registry, and mutation checks.
+
+Each rule gets a minimal fixture where it fires exactly once (and a clean
+twin where it stays silent); the suppression comment grammar, the key-lane
+registry's overlap rejection, and a mutation check — a seeded violation
+injected into a copy of ``transport.py`` must be caught — pin the
+framework's contract. The linter itself never imports jax, so these tests
+run on the plain AST layer.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO_ROOT) not in sys.path:  # tools/ is imported from the repo root
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.lint.core import Module, gather_files, run_rules  # noqa: E402
+from tools.lint.rules.benchschema import BenchSchemaRule  # noqa: E402
+from tools.lint.rules.determinism import DeterminismRule  # noqa: E402
+from tools.lint.rules.docstrings import DocstringRule  # noqa: E402
+from tools.lint.rules.dtype import DtypeDisciplineRule  # noqa: E402
+from tools.lint.rules.jitpurity import JitPurityRule  # noqa: E402
+from tools.lint.rules.keylane import KeyLaneRule  # noqa: E402
+
+from repro.core import keylanes  # noqa: E402
+
+TRANSPORT = REPO_ROOT / "src" / "repro" / "core" / "transport.py"
+
+
+def _mod(source, relpath="src/repro/core/fixture.py"):
+    return Module(relpath, textwrap.dedent(source))
+
+
+def _names(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------ rule: keylane
+
+
+def test_keylane_fires_on_bare_integer():
+    m = _mod("""\
+        import jax
+
+        def f(key):
+            return jax.random.fold_in(key, 12345)
+        """)
+    fs = KeyLaneRule().check_module(m)
+    assert _names(fs) == ["keylane"]
+    assert "12345" in fs[0].message
+
+
+def test_keylane_clean_on_registered_symbol():
+    m = _mod("""\
+        import jax
+        from repro.core.keylanes import DOWNLINK_KEY_LANE, check_cohort
+
+        def f(key, num_clients):
+            check_cohort(DOWNLINK_KEY_LANE, num_clients)
+            return [jax.random.fold_in(key, DOWNLINK_KEY_LANE + i)
+                    for i in range(num_clients)]
+        """)
+    assert KeyLaneRule().check_module(m) == []
+
+
+def test_keylane_unguarded_index_fires():
+    m = _mod("""\
+        import jax
+
+        def f(key, i):
+            return jax.random.fold_in(key, i)
+        """)
+    fs = KeyLaneRule().check_module(m)
+    assert _names(fs) == ["keylane"]
+    assert "guard" in fs[0].message
+
+
+def test_keylane_constant_offset_outside_span_fires():
+    m = _mod("""\
+        import jax
+        from repro.core.keylanes import HEADER_KEY_LANE
+
+        def f(key):
+            return jax.random.fold_in(key, HEADER_KEY_LANE + 1)
+        """)
+    fs = KeyLaneRule().check_module(m)
+    assert _names(fs) == ["keylane"]
+    assert "span" in fs[0].message
+
+
+def test_keylane_two_symbols_fires():
+    m = _mod("""\
+        import jax
+        from repro.core.keylanes import DOWNLINK_KEY_LANE, UPLINK_KEY_LANE
+
+        def f(key):
+            return jax.random.fold_in(
+                key, DOWNLINK_KEY_LANE + UPLINK_KEY_LANE)
+        """)
+    fs = KeyLaneRule().check_module(m)
+    assert _names(fs) == ["keylane"]
+
+
+# -------------------------------------------------- rule: determinism
+
+
+def test_determinism_fires_on_wall_clock():
+    src = """\
+        import time
+
+        def f():
+            return time.time()
+        """
+    fs = DeterminismRule().check_module(_mod(src, "src/repro/fl/x.py"))
+    assert _names(fs) == ["determinism"]
+    # the obs/ subtree is a whitelisted wall-clock consumer
+    assert DeterminismRule().check_module(
+        _mod(src, "src/repro/obs/x.py")) == []
+    # out-of-scope paths are never checked
+    assert DeterminismRule().check_module(_mod(src, "tools/x.py")) == []
+
+
+def test_determinism_fires_on_stdlib_random():
+    m = _mod("""\
+        import random
+
+        def f():
+            return random.random()
+        """, "src/repro/core/x.py")
+    fs = DeterminismRule().check_module(m)
+    assert _names(fs) == ["determinism"]
+
+
+def test_determinism_seeded_rng_is_clean():
+    m = _mod("""\
+        import numpy as np
+
+        def f():
+            return np.random.default_rng(0).normal()
+        """, "src/repro/core/x.py")
+    assert DeterminismRule().check_module(m) == []
+
+
+def test_determinism_unseeded_default_rng_fires():
+    m = _mod("""\
+        import numpy as np
+
+        def f():
+            return np.random.default_rng().normal()
+        """, "src/repro/core/x.py")
+    assert _names(DeterminismRule().check_module(m)) == ["determinism"]
+
+
+# --------------------------------------------------- rule: jit-purity
+
+
+def test_jitpurity_fires_on_print_in_decorated_fn():
+    m = _mod("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            print(x)
+            return x
+        """)
+    fs = JitPurityRule().check_module(m)
+    assert _names(fs) == ["jit-purity"]
+
+
+def test_jitpurity_resolves_wrapped_function():
+    m = _mod("""\
+        import jax
+
+        def f(x):
+            return float(x)
+
+        g = jax.jit(f)
+        """)
+    fs = JitPurityRule().check_module(m)
+    assert _names(fs) == ["jit-purity"]
+    # the same body un-jitted is fine
+    m2 = _mod("""\
+        def f(x):
+            return float(x)
+        """)
+    assert JitPurityRule().check_module(m2) == []
+
+
+def test_jitpurity_fires_on_closure_mutation():
+    m = _mod("""\
+        import jax
+
+        acc = []
+
+        @jax.jit
+        def f(x):
+            acc.append(x)
+            return x
+        """)
+    assert _names(JitPurityRule().check_module(m)) == ["jit-purity"]
+
+
+# --------------------------------------------- rule: dtype-discipline
+
+
+def test_dtype_fires_on_float64_in_wire_module():
+    src = """\
+        import numpy as np
+
+        def f(x):
+            return np.float64(x)
+        """
+    fs = DtypeDisciplineRule().check_module(
+        _mod(src, "src/repro/core/modulation.py"))
+    assert _names(fs) == ["dtype-discipline"]
+    # the same source outside the wire-module list is not checked
+    assert DtypeDisciplineRule().check_module(
+        _mod(src, "src/repro/fl/engine.py")) == []
+
+
+def test_dtype_fires_on_implied_float64_creation():
+    m = _mod("""\
+        import numpy as np
+
+        def f():
+            return np.zeros(4)
+        """, "src/repro/core/modulation.py")
+    fs = DtypeDisciplineRule().check_module(m)
+    assert _names(fs) == ["dtype-discipline"]
+    # with an explicit declared dtype it is clean
+    m2 = _mod("""\
+        import numpy as np
+
+        def f():
+            return np.zeros(4, dtype=np.float32)
+        """, "src/repro/core/modulation.py")
+    assert DtypeDisciplineRule().check_module(m2) == []
+
+
+# -------------------------------------------------- rule: docstrings
+
+
+def test_docstrings_fires_once_on_missing_function_docstring():
+    m = _mod('''\
+        """Module docstring present."""
+
+        def documented():
+            """Has one."""
+
+        def naked():
+            return 1
+        ''', "src/repro/core/x.py")
+    fs = DocstringRule().check_module(m)
+    assert _names(fs) == ["docstrings"]
+    assert "naked" in fs[0].message
+    # private modules and ungated paths are skipped
+    assert DocstringRule().check_module(
+        _mod("x = 1", "src/repro/core/_private.py")) == []
+    assert DocstringRule().check_module(
+        _mod("x = 1", "src/repro/models/x.py")) == []
+
+
+# ------------------------------------------------- rule: bench-schema
+
+
+def test_bench_schema_fires_once_on_missing_meta_key(tmp_path):
+    obj = {"snr_db": [], "clients": 1, "rounds": 1, "arms": {},
+           "downlink_worse_than_uplink": True,
+           "meta": {"schema": 1, "jax": "x", "numpy": "x", "python": "x",
+                    "platform": "x", "backend": "cpu", "git_sha": "x"}}
+    p = tmp_path / "BENCH_fl_round.json"
+    p.write_text(json.dumps(obj))
+    fs = BenchSchemaRule().check_paths([p])
+    assert _names(fs) == ["bench-schema"]
+    assert "timestamp" in fs[0].message
+    # completing the meta block silences it
+    obj["meta"]["timestamp"] = "now"
+    p.write_text(json.dumps(obj))
+    assert BenchSchemaRule().check_paths([p]) == []
+
+
+# ------------------------------------------------------- suppressions
+
+
+def test_trailing_suppression_comment(tmp_path):
+    f = tmp_path / "src.py"
+    f.write_text(textwrap.dedent("""\
+        '''Doc.'''
+        import jax
+
+
+        def f(key):
+            '''Doc.'''
+            return jax.random.fold_in(key, 7)  # lint: ignore[keylane]
+        """))
+    findings, n_suppressed = run_rules([KeyLaneRule()], [f])
+    assert findings == []
+    assert n_suppressed == 1
+
+
+def test_comment_only_line_suppresses_next_line(tmp_path):
+    f = tmp_path / "src.py"
+    f.write_text(textwrap.dedent("""\
+        '''Doc.'''
+        import jax
+
+
+        def f(key):
+            '''Doc.'''
+            # a dedicated keyspace, not the lane table: lint: ignore[keylane]
+            return jax.random.fold_in(key, 7)
+        """))
+    findings, n_suppressed = run_rules([KeyLaneRule()], [f])
+    assert findings == []
+    assert n_suppressed == 1
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    f = tmp_path / "src.py"
+    f.write_text(textwrap.dedent("""\
+        '''Doc.'''
+        import jax
+
+
+        def f(key):
+            '''Doc.'''
+            return jax.random.fold_in(key, 7)  # lint: ignore[determinism]
+        """))
+    findings, n_suppressed = run_rules([KeyLaneRule()], [f])
+    assert _names(findings) == ["keylane"]
+    assert n_suppressed == 0
+
+
+def test_syntax_error_becomes_parse_error_finding(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("def f(:\n")
+    findings, _ = run_rules([KeyLaneRule()], [f])
+    assert _names(findings) == ["parse-error"]
+
+
+# ---------------------------------------------------- lane registry
+
+
+def test_registry_rejects_overlap():
+    r = keylanes.Registry()
+    r.reserve("a", base=0, span=16)
+    with pytest.raises(ValueError, match="overlaps"):
+        r.reserve("b", base=15, span=4)
+    # adjacent is fine; same range in another space is fine
+    r.reserve("c", base=16, span=4)
+    r.reserve("d", base=0, span=16, space="client")
+
+
+def test_registry_rejects_duplicate_name_and_bad_lane():
+    r = keylanes.Registry()
+    r.reserve("a", base=0, span=1)
+    with pytest.raises(ValueError, match="already reserved"):
+        r.reserve("a", base=100, span=1)
+    with pytest.raises(ValueError, match="span"):
+        r.reserve("b", base=0, span=0)
+
+
+def test_canonical_lane_values_are_pinned():
+    # the goldens pin these integers: renumbering is a breaking change
+    assert int(keylanes.UPLINK_KEY_LANE) == 0
+    assert int(keylanes.DOWNLINK_KEY_LANE) == 1 << 20
+    assert int(keylanes.COMPUTE_KEY_LANE) == 1 << 22
+    assert int(keylanes.EVENT_KEY_LANE) == 3 << 21
+    assert int(keylanes.EVENT_GAP_KEY_LANE) == (3 << 21) + (1 << 20)
+    assert int(keylanes.CHUNK_KEY_LANE) == 0
+    assert int(keylanes.HEADER_KEY_LANE) == 1 << 21
+    assert int(keylanes.SELECT_KEY_LANE) == (1 << 21) + 1
+
+
+def test_owner_modules_reexport_the_same_objects():
+    from repro.compress import framing, sparsify
+    from repro.core import transport
+    from repro.link import dynamics
+
+    assert transport.DOWNLINK_KEY_LANE is keylanes.DOWNLINK_KEY_LANE
+    assert framing.HEADER_KEY_LANE is keylanes.HEADER_KEY_LANE
+    assert sparsify.SELECT_KEY_LANE is keylanes.SELECT_KEY_LANE
+    assert dynamics.COMPUTE_KEY_LANE is keylanes.COMPUTE_KEY_LANE
+    assert dynamics.EVENT_KEY_LANE is keylanes.EVENT_KEY_LANE
+    assert dynamics.EVENT_GAP_KEY_LANE is keylanes.EVENT_GAP_KEY_LANE
+
+
+def test_check_cohort_boundaries():
+    lane = keylanes.DOWNLINK_KEY_LANE
+    keylanes.check_cohort(lane, 1)
+    keylanes.check_cohort(lane, lane.span)  # exactly the lane width: OK
+    with pytest.raises(ValueError, match="num_clients"):
+        keylanes.check_cohort(lane, lane.span + 1)
+    with pytest.raises(ValueError, match="num_clients"):
+        keylanes.check_cohort(lane, 0)
+
+
+def test_check_range_boundaries():
+    keylanes.check_range(0, 1 << 20)  # the whole uplink lane
+    keylanes.check_range(1 << 20, 1 << 20)  # the whole downlink lane
+    with pytest.raises(ValueError, match="lane"):
+        keylanes.check_range(0, (1 << 20) + 1)  # crosses uplink->downlink
+    with pytest.raises(ValueError, match="lane"):
+        keylanes.check_range(17, 1, space="nonexistent")
+    keylanes.check_range(object(), 10)  # traced/opaque offsets skip
+
+
+# ---------------------------------------------------- mutation check
+
+
+def test_mutated_transport_is_caught():
+    source = TRANSPORT.read_text()
+    rel = "src/repro/core/transport.py"
+    baseline = KeyLaneRule().check_module(Module(rel, source))
+    assert baseline == [], [f.format() for f in baseline]
+    mutated = source + textwrap.dedent("""\
+
+
+        def _mutant(key):
+            return jax.random.fold_in(key, 12345)
+        """)
+    fs = KeyLaneRule().check_module(Module(rel, mutated))
+    assert _names(fs) == ["keylane"]
+    assert "12345" in fs[0].message
+
+
+def test_mutated_unguarded_index_is_caught():
+    source = TRANSPORT.read_text()
+    rel = "src/repro/core/transport.py"
+    mutated = source + textwrap.dedent("""\
+
+
+        def _mutant(key, i):
+            return jax.random.fold_in(key, DOWNLINK_KEY_LANE + i)
+        """)
+    fs = KeyLaneRule().check_module(Module(rel, mutated))
+    assert _names(fs) == ["keylane"]
+    assert "guard" in fs[0].message
+
+
+# ------------------------------------------------------------- CLI
+
+
+def test_cli_clean_and_dirty_exit_codes(tmp_path):
+    clean = tmp_path / "clean"
+    clean.mkdir()
+    (clean / "ok.py").write_text('"""Doc."""\nX = 1\n')
+    dirty = tmp_path / "dirty"
+    dirty.mkdir()
+    (dirty / "bad.py").write_text(
+        '"""Doc."""\nimport jax\nK = jax.random.fold_in(0, 99)\n')
+
+    def lint(*args):
+        return subprocess.run(
+            [sys.executable, "-m", "tools.lint", *args],
+            cwd=REPO_ROOT, capture_output=True, text=True)
+
+    r = lint(str(clean))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+    r = lint(str(dirty))
+    assert r.returncode == 1
+    assert "[keylane]" in r.stdout
+    r = lint("--format", "json", str(dirty))
+    obj = json.loads(r.stdout)
+    assert obj["ok"] is False
+    assert obj["findings"][0]["rule"] == "keylane"
+    r = lint("--rules", "nope", str(clean))
+    assert r.returncode == 2
+
+
+def test_gather_files_skips_pycache_and_hidden(tmp_path):
+    (tmp_path / "a.py").write_text("")
+    (tmp_path / "__pycache__").mkdir()
+    (tmp_path / "__pycache__" / "a.cpython-311.pyc").write_text("")
+    (tmp_path / ".hidden").mkdir()
+    (tmp_path / ".hidden" / "b.py").write_text("")
+    (tmp_path / "BENCH_x.json").write_text("{}")
+    files = gather_files([tmp_path])
+    names = {f.name for f in files}
+    assert names == {"a.py", "BENCH_x.json"}

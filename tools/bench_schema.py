@@ -1,86 +1,28 @@
 """Schema gate for the ``BENCH_*.json`` benchmark artifacts.
 
-Every suite that writes a JSON report goes through
-``benchmarks.common.write_bench_json``, which stamps the shared ``meta``
-provenance block. This validator pins the contract from the consumer side:
-each known artifact must carry **exactly** its expected top-level keys (a
-missing key means the suite silently dropped a result; an extra key means
-the schema drifted without this file being updated), and ``meta`` must
-carry the full provenance key set.
-
-Usage (CI runs it after the bench jobs)::
-
-    python -m tools.bench_schema [FILE ...]
+Thin CLI wrapper over the ``bench-schema`` repro-lint rule
+(``tools.lint.rules.benchschema``), kept so the historical entry point —
+``python -m tools.bench_schema [FILE ...]`` — and its exact output and
+exit-code contract stay valid for CI. The ``EXPECTED`` shape table and
+``validate_file`` now live with the rule; this module re-exports both for
+backward compatibility.
 
 With no arguments, validates every known ``BENCH_*.json`` present in the
 working directory (absent files are skipped — suites are independent).
-Exit 1 on any problem.
+Exit 1 on any problem. Run ``python -m tools.lint`` for the full rule
+suite.
 """
 
 from __future__ import annotations
 
-import json
 import pathlib
 import sys
 
-# Keep in sync with repro.obs.ledger.PROVENANCE_KEYS (imported when the
-# package is on the path; this literal keeps the tool standalone).
-try:
-    from repro.obs.ledger import PROVENANCE_KEYS as META_KEYS
-except ImportError:  # pragma: no cover - PYTHONPATH=src not set
-    META_KEYS = ("schema", "jax", "numpy", "python", "platform", "backend",
-                 "git_sha", "timestamp")
-
-# filename -> accepted top-level key sets (link_adaptation has two shapes:
-# the full FL run, and the dispatch-only standalone invocation).
-EXPECTED: dict[str, tuple[frozenset, ...]] = {
-    "BENCH_async_fl.json": (frozenset({
-        "clients", "scenario", "buffer_k", "arms", "tdma_barrier_s",
-        "buffered_matches_sync_in_0p6x_time", "ledger", "meta"}),),
-    "BENCH_compression.json": (frozenset({
-        "clients", "rounds", "sparse_rounds", "scenarios",
-        "topk_matches_dense_at_fifth_airtime", "meta"}),),
-    "BENCH_fl_round.json": (frozenset({
-        "snr_db", "clients", "rounds", "arms",
-        "downlink_worse_than_uplink", "meta"}),),
-    "BENCH_link_adaptation.json": (
-        frozenset({"dispatch", "arms", "select_single_trace", "meta"}),
-        frozenset({"dispatch", "meta"}),
-    ),
-    "BENCH_obs.json": (frozenset({
-        "clients", "rounds", "scenario", "ledger", "trace",
-        "ledger_rounds", "ledger_events", "track_types", "phases",
-        "sinks_are_neutral", "meta"}),),
-}
-
-
-def validate_file(path: pathlib.Path) -> list[str]:
-    """Problems with one artifact (empty list = valid)."""
-    shapes = EXPECTED.get(path.name)
-    if shapes is None:
-        return [f"{path}: unknown benchmark artifact "
-                f"(add it to tools/bench_schema.py EXPECTED)"]
-    try:
-        with open(path) as f:
-            obj = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        return [f"{path}: unreadable: {e}"]
-    if not isinstance(obj, dict):
-        return [f"{path}: top level is {type(obj).__name__}, expected object"]
-    keys = frozenset(obj)
-    if keys not in shapes:
-        best = min(shapes, key=lambda s: len(s ^ keys))
-        problems = []
-        for k in sorted(best - keys):
-            problems.append(f"{path}: missing top-level key {k!r}")
-        for k in sorted(keys - best):
-            problems.append(f"{path}: unexpected top-level key {k!r}")
-        return problems
-    meta = obj.get("meta")
-    if not isinstance(meta, dict):
-        return [f"{path}: 'meta' is not an object"]
-    return [f"{path}: meta missing key {k!r}" for k in META_KEYS
-            if k not in meta]
+from tools.lint.rules.benchschema import (  # noqa: F401  (re-exports)
+    EXPECTED,
+    META_KEYS,
+    validate_file,
+)
 
 
 def main(argv: list[str] | None = None) -> int:

@@ -1,14 +1,15 @@
 """Documentation gate for the library packages and the tools
 (``make docs-check``).
 
-Fails (exit 1) when a public module under ``src/repro/core/``,
-``src/repro/link/``, ``src/repro/fl/``, ``src/repro/compress/``,
-``src/repro/obs/``, or ``tools/`` lacks a module docstring, or a public
-(non-underscore) top-level function or class in one of those modules lacks
-its own docstring. Public *methods* of public classes are also checked
-(dunder methods other than ``__init__`` are exempt; ``__init__`` may
-document itself in the class docstring instead, the repo's prevailing
-style). Kept dependency-free: pure ``ast``.
+Thin CLI wrapper over the ``docstrings`` repro-lint rule
+(``tools.lint.rules.docstrings``), kept so the historical entry point —
+``python tools/docs_check.py`` — and its exact output/exit-code contract
+stay valid for CI and the Makefile. The walk, the gating semantics, and
+the message formats are unchanged: fails (exit 1) when a public module
+under one of the gated packages lacks a module docstring, or a public
+(non-underscore) top-level function, class, or public method of a public
+class lacks its own. Run ``python -m tools.lint`` for the full rule
+suite.
 """
 
 from __future__ import annotations
@@ -18,41 +19,24 @@ import pathlib
 import sys
 
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:  # script-style invocation: python tools/...
+    sys.path.insert(0, str(_ROOT))
+
+from tools.lint.rules.docstrings import docstring_problems  # noqa: E402
+
 _SRC = _ROOT / "src" / "repro"
 PACKAGES = [_SRC / "core", _SRC / "link", _SRC / "fl", _SRC / "compress",
-            _SRC / "obs", _ROOT / "tools"]
+            _SRC / "obs", _ROOT / "tools", _ROOT / "tools" / "lint",
+            _ROOT / "tools" / "lint" / "rules"]
 
 
 def check_module(path: pathlib.Path) -> list[str]:
     """Docstring problems of one module (empty list = clean)."""
     tree = ast.parse(path.read_text(), filename=str(path))
-    problems = []
-    if ast.get_docstring(tree) is None:
-        problems.append(f"{path}: missing module docstring")
-    for node in tree.body:
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            if node.name.startswith("_"):
-                continue
-            if ast.get_docstring(node) is None:
-                problems.append(
-                    f"{path}:{node.lineno}: public function "
-                    f"`{node.name}` missing docstring")
-        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
-            if ast.get_docstring(node) is None:
-                problems.append(
-                    f"{path}:{node.lineno}: public class "
-                    f"`{node.name}` missing docstring")
-            for sub in node.body:
-                if not isinstance(sub, (ast.FunctionDef,
-                                        ast.AsyncFunctionDef)):
-                    continue
-                if sub.name.startswith("_"):  # incl. __init__: the class
-                    continue                  # docstring documents it
-                if ast.get_docstring(sub) is None:
-                    problems.append(
-                        f"{path}:{sub.lineno}: public method "
-                        f"`{node.name}.{sub.name}` missing docstring")
-    return problems
+    # the module-docstring problem historically prints without a line number
+    return [f"{path}: {msg}" if msg == "missing module docstring"
+            else f"{path}:{line}: {msg}"
+            for line, msg in docstring_problems(tree)]
 
 
 def main() -> int:

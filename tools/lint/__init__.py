@@ -1,0 +1,21 @@
+"""repro-lint: AST invariant checkers for the repo's reproducibility rules.
+
+The bit-identity guarantees this repo ships (batched ≡ per-client, bucketed
+≡ select, async ≡ sync, sinks-on ≡ sinks-off) rest on conventions no test
+can see from the outside: reserved ``fold_in`` key lanes, seeded-only
+randomness, jit-pure round steps, and an explicit wire dtype set. This
+package machine-checks them::
+
+    python -m tools.lint src tools benchmarks
+
+Architecture: :mod:`tools.lint.core` holds the shared file walker,
+``Finding``/``Module`` types, ``# lint: ignore[rule]`` suppression parsing,
+and the text/JSON reporters; each module under :mod:`tools.lint.rules`
+contributes one :class:`~tools.lint.core.Rule`. The legacy standalone
+gates (``tools/docs_check.py``, ``tools/bench_schema.py``) are now thin
+wrappers over their migrated rules, keeping their CLIs valid for CI.
+"""
+
+from tools.lint.core import Finding, Module, Rule, gather_files, run_rules
+
+__all__ = ["Finding", "Module", "Rule", "gather_files", "run_rules"]

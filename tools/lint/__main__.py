@@ -1,0 +1,85 @@
+"""CLI for repro-lint: ``python -m tools.lint [PATH ...]``.
+
+Walks the given paths (default: ``src tools benchmarks`` relative to the
+repo root), runs every registered rule, and prints findings as text or
+JSON. Exit 0 when clean, 1 on any finding, 2 on usage errors. The rule
+list (with one-line descriptions) is printed by ``--help`` and
+``--list-rules``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from tools.lint import core
+from tools.lint.rules import all_rules
+
+DEFAULT_PATHS = ["src", "tools", "benchmarks"]
+
+
+def build_parser(rules) -> argparse.ArgumentParser:
+    """The argument parser, with the rule list in the ``--help`` epilog."""
+    rule_lines = "\n".join(f"  {r.name:<18} {r.description}" for r in rules)
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: AST invariant checkers for this repo's "
+                    "reproducibility rules (key lanes, determinism, jit "
+                    "purity, wire dtypes, docstrings, bench schemas).",
+        epilog=f"rules:\n{rule_lines}\n\nsuppress one finding with a "
+               "trailing `# lint: ignore[rule]` comment (or on the line "
+               "above).",
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    parser.add_argument(
+        "paths", nargs="*", default=None,
+        help="files or directories to check (default: src tools "
+             "benchmarks, relative to the repo root)")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="output format (json is one object with every finding)")
+    parser.add_argument(
+        "--rules", default=None, metavar="R1,R2",
+        help="comma-separated subset of rules to run")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the registered rules and exit")
+    return parser
+
+
+def main(argv: list[str] | None = None) -> int:
+    """CLI entry; returns the process exit code."""
+    rules = all_rules()
+    parser = build_parser(rules)
+    args = parser.parse_args(argv)
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.name:<18} {r.description}")
+        return 0
+    if args.rules is not None:
+        wanted = {r.strip() for r in args.rules.split(",") if r.strip()}
+        known = {r.name for r in rules}
+        unknown = wanted - known
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}; "
+                  f"valid: {', '.join(sorted(known))}", file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.name in wanted]
+    raw_paths = args.paths or [str(core.REPO_ROOT / p)
+                               for p in DEFAULT_PATHS]
+    paths = [pathlib.Path(p) for p in raw_paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        for p in missing:
+            print(f"{p}: no such file or directory", file=sys.stderr)
+        return 2
+    files = core.gather_files(paths)
+    findings, n_suppressed = core.run_rules(rules, files)
+    report = (core.report_json if args.format == "json"
+              else core.report_text)
+    print(report(findings, len(files), n_suppressed))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,209 @@
+"""Shared machinery for the repro-lint rules.
+
+A :class:`Module` is one parsed Python file (source, AST, repo-relative
+path, and its suppression map); a :class:`Rule` examines modules (or, for
+artifact-level rules, raw paths) and emits :class:`Finding` records with
+``path:line`` locations. :func:`run_rules` walks the requested paths,
+applies every rule, and filters findings through ``# lint: ignore[rule]``
+suppressions:
+
+* a trailing comment suppresses the named rule(s) on its own line;
+* a comment-only line suppresses them on the next line;
+* ``# lint: ignore[rule1,rule2]`` names several rules at once.
+
+Rules never crash the run on unparsable input — a syntax error becomes a
+``parse-error`` finding so CI surfaces it like any other problem.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+
+_IGNORE_RE = re.compile(r"#.*?\blint:\s*ignore\[([A-Za-z0-9_,\- ]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``path:line``."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def format(self) -> str:
+        """Render as ``path:line: [rule] message`` (the text reporter)."""
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> dict:
+        """Plain-dict form for the JSON reporter."""
+        return dataclasses.asdict(self)
+
+
+class Module:
+    """One parsed Python module, as rules see it.
+
+    ``relpath`` is the repo-relative POSIX path — rules scope themselves on
+    it (e.g. the determinism rule only applies under ``src/repro/``), which
+    also lets tests feed synthetic modules with any claimed location.
+    """
+
+    def __init__(self, relpath: str, source: str,
+                 tree: ast.Module | None = None) -> None:
+        """Parse ``source`` (unless a pre-parsed ``tree`` is supplied)."""
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.parse_error: SyntaxError | None = None
+        if tree is not None:
+            self.tree = tree
+        else:
+            try:
+                self.tree = ast.parse(source, filename=relpath)
+            except SyntaxError as e:  # surfaced as a parse-error finding
+                self.tree = ast.Module(body=[], type_ignores=[])
+                self.parse_error = e
+        self.suppressed = self._suppressions()
+
+    def _suppressions(self) -> dict[int, set[str]]:
+        """``{lineno: {rule, ...}}`` from ``# lint: ignore[...]`` comments."""
+        out: dict[int, set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _IGNORE_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            comment_only = line.lstrip().startswith("#")
+            target = i + 1 if comment_only else i
+            out.setdefault(target, set()).update(rules)
+        return out
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        """Whether an ignore comment covers this finding's rule and line."""
+        return finding.rule in self.suppressed.get(finding.line, set())
+
+
+class Rule:
+    """Base class: one named invariant checker.
+
+    Subclasses set ``name``/``description`` and override
+    :meth:`check_module` (per parsed Python file) and/or
+    :meth:`check_paths` (once per run, for artifact-level rules such as the
+    benchmark-schema gate).
+    """
+
+    name = ""
+    description = ""
+
+    def check_module(self, module: Module) -> list[Finding]:
+        """Findings for one parsed module (default: none)."""
+        return []
+
+    def check_paths(self, files: list[pathlib.Path]) -> list[Finding]:
+        """Run-level findings over the walked file list (default: none)."""
+        return []
+
+    def finding(self, module_or_path, line: int, message: str) -> Finding:
+        """Build a :class:`Finding` tagged with this rule's name."""
+        path = (module_or_path.relpath if isinstance(module_or_path, Module)
+                else str(module_or_path))
+        return Finding(self.name, path, line, message)
+
+
+def relpath_of(path: pathlib.Path) -> str:
+    """Repo-relative POSIX path (absolute fallback outside the repo)."""
+    p = path.resolve()
+    try:
+        return p.relative_to(REPO_ROOT).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def gather_files(paths: list[pathlib.Path]) -> list[pathlib.Path]:
+    """Expand CLI paths to the checkable file set (sorted, deduplicated).
+
+    Directories are walked recursively for ``*.py`` plus ``BENCH_*.json``
+    artifacts; ``__pycache__`` and hidden directories are skipped. Explicit
+    file arguments are taken as-is, whatever their suffix.
+    """
+    out: set[pathlib.Path] = set()
+    for p in paths:
+        if p.is_dir():
+            for f in p.rglob("*"):
+                if not f.is_file():
+                    continue
+                parts = f.relative_to(p).parts
+                if any(s == "__pycache__" or s.startswith(".")
+                       for s in parts):
+                    continue
+                if f.suffix == ".py" or f.name.startswith("BENCH_"):
+                    out.add(f)
+        else:
+            out.add(p)
+    return sorted(out)
+
+
+def load_module(path: pathlib.Path) -> Module:
+    """Read + parse one file into a :class:`Module`."""
+    return Module(relpath_of(path), path.read_text())
+
+
+def run_rules(rules: list[Rule], files: list[pathlib.Path],
+              ) -> tuple[list[Finding], int]:
+    """Apply ``rules`` to ``files``; returns ``(findings, n_suppressed)``.
+
+    Python files go through every rule's :meth:`Rule.check_module` (after a
+    shared parse); the full file list goes through each rule's
+    :meth:`Rule.check_paths` once. Suppressed findings are dropped and
+    counted.
+    """
+    findings: list[Finding] = []
+    n_suppressed = 0
+    py_files = [f for f in files if f.suffix == ".py"]
+    for f in py_files:
+        module = load_module(f)
+        if module.parse_error is not None:
+            e = module.parse_error
+            findings.append(Finding("parse-error", module.relpath,
+                                    e.lineno or 1, f"syntax error: {e.msg}"))
+            continue
+        for rule in rules:
+            for fd in rule.check_module(module):
+                if module.is_suppressed(fd):
+                    n_suppressed += 1
+                else:
+                    findings.append(fd)
+    for rule in rules:
+        findings.extend(rule.check_paths(files))
+    findings.sort(key=lambda fd: (fd.path, fd.line, fd.rule))
+    return findings, n_suppressed
+
+
+def report_text(findings: list[Finding], n_files: int,
+                n_suppressed: int) -> str:
+    """The human-readable report (one line per finding + a summary)."""
+    lines = [fd.format() for fd in findings]
+    if findings:
+        lines.append(f"repro-lint: {len(findings)} finding(s) in "
+                     f"{n_files} file(s) ({n_suppressed} suppressed)")
+    else:
+        lines.append(f"repro-lint: OK ({n_files} file(s), "
+                     f"{n_suppressed} suppressed)")
+    return "\n".join(lines)
+
+
+def report_json(findings: list[Finding], n_files: int,
+                n_suppressed: int) -> str:
+    """The machine-readable report (one JSON object, for CI tooling)."""
+    return json.dumps({
+        "findings": [fd.to_json() for fd in findings],
+        "files": n_files,
+        "suppressed": n_suppressed,
+        "ok": not findings,
+    }, indent=2)

@@ -1,0 +1,23 @@
+"""Rule registry for repro-lint.
+
+``ALL_RULES`` instantiates every rule in priority order; the CLI's
+``--rules`` flag and ``--help`` epilog are driven from it, so adding a
+module here is all a new rule needs.
+"""
+
+from tools.lint.rules.keylane import KeyLaneRule
+from tools.lint.rules.determinism import DeterminismRule
+from tools.lint.rules.jitpurity import JitPurityRule
+from tools.lint.rules.dtype import DtypeDisciplineRule
+from tools.lint.rules.docstrings import DocstringRule
+from tools.lint.rules.benchschema import BenchSchemaRule
+
+
+def all_rules():
+    """Fresh instances of every registered rule, in priority order."""
+    return [KeyLaneRule(), DeterminismRule(), JitPurityRule(),
+            DtypeDisciplineRule(), DocstringRule(), BenchSchemaRule()]
+
+
+__all__ = ["all_rules", "KeyLaneRule", "DeterminismRule", "JitPurityRule",
+           "DtypeDisciplineRule", "DocstringRule", "BenchSchemaRule"]

@@ -1,0 +1,104 @@
+"""bench-schema: exact-key validation of the ``BENCH_*.json`` artifacts.
+
+The migrated ``tools/bench_schema.py`` gate, now a repro-lint rule: every
+suite that writes a JSON report goes through
+``benchmarks.common.write_bench_json``, which stamps the shared ``meta``
+provenance block. Each known artifact must carry **exactly** its expected
+top-level keys (a missing key means the suite silently dropped a result;
+an extra key means the schema drifted without this file being updated),
+and ``meta`` must carry the full provenance key set.
+
+As a lint rule it validates any ``BENCH_*.json`` the file walker hands it
+(artifacts live in the repo root, so a plain ``python -m tools.lint src
+tools benchmarks`` run sees none — CI invokes the wrapper CLI
+``python -m tools.bench_schema`` on the artifacts it just produced, which
+delegates here).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from tools.lint.core import Finding, Rule
+
+# Keep in sync with repro.obs.ledger.PROVENANCE_KEYS (imported when the
+# package is on the path; this literal keeps the tool standalone).
+try:
+    from repro.obs.ledger import PROVENANCE_KEYS as META_KEYS
+except ImportError:  # pragma: no cover - PYTHONPATH=src not set
+    META_KEYS = ("schema", "jax", "numpy", "python", "platform", "backend",
+                 "git_sha", "timestamp")
+
+# filename -> accepted top-level key sets (link_adaptation has two shapes:
+# the full FL run, and the dispatch-only standalone invocation).
+EXPECTED: dict[str, tuple[frozenset, ...]] = {
+    "BENCH_async_fl.json": (frozenset({
+        "clients", "scenario", "buffer_k", "arms", "tdma_barrier_s",
+        "buffered_matches_sync_in_0p6x_time", "ledger", "meta"}),),
+    "BENCH_compression.json": (frozenset({
+        "clients", "rounds", "sparse_rounds", "scenarios",
+        "topk_matches_dense_at_fifth_airtime", "meta"}),),
+    "BENCH_fl_round.json": (frozenset({
+        "snr_db", "clients", "rounds", "arms",
+        "downlink_worse_than_uplink", "meta"}),),
+    "BENCH_link_adaptation.json": (
+        frozenset({"dispatch", "arms", "select_single_trace", "meta"}),
+        frozenset({"dispatch", "meta"}),
+    ),
+    "BENCH_obs.json": (frozenset({
+        "clients", "rounds", "scenario", "ledger", "trace",
+        "ledger_rounds", "ledger_events", "track_types", "phases",
+        "sinks_are_neutral", "meta"}),),
+}
+
+
+def validate_file(path: pathlib.Path) -> list[str]:
+    """Problems with one artifact (empty list = valid)."""
+    shapes = EXPECTED.get(path.name)
+    if shapes is None:
+        return [f"{path}: unknown benchmark artifact "
+                f"(add it to tools/lint/rules/benchschema.py EXPECTED)"]
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable: {e}"]
+    if not isinstance(obj, dict):
+        return [f"{path}: top level is {type(obj).__name__}, expected object"]
+    keys = frozenset(obj)
+    if keys not in shapes:
+        best = min(shapes, key=lambda s: len(s ^ keys))
+        problems = []
+        for k in sorted(best - keys):
+            problems.append(f"{path}: missing top-level key {k!r}")
+        for k in sorted(keys - best):
+            problems.append(f"{path}: unexpected top-level key {k!r}")
+        return problems
+    meta = obj.get("meta")
+    if not isinstance(meta, dict):
+        return [f"{path}: 'meta' is not an object"]
+    return [f"{path}: meta missing key {k!r}" for k in META_KEYS
+            if k not in meta]
+
+
+class BenchSchemaRule(Rule):
+    """Validate BENCH_*.json artifacts encountered by the walker."""
+
+    name = "bench-schema"
+    description = ("BENCH_*.json artifacts must carry exactly their "
+                   "declared top-level keys and the full meta provenance "
+                   "block")
+
+    def check_paths(self, files: list[pathlib.Path]) -> list[Finding]:
+        """Validate every ``BENCH_*.json`` in the walked file set."""
+        findings: list[Finding] = []
+        for f in files:
+            if not (f.name.startswith("BENCH_")
+                    and f.name.endswith(".json")):
+                continue
+            for msg in validate_file(f):
+                # strip the "path: " prefix validate_file embeds
+                findings.append(self.finding(
+                    f, 1, msg.split(": ", 1)[1] if ": " in msg else msg))
+        return findings

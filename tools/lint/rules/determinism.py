@@ -1,0 +1,131 @@
+"""determinism: seeded-only randomness and no wall-clock in numeric paths.
+
+Every number the library emits must be a pure function of explicit seeds —
+that is what makes the golden bit-identity suites meaningful. Under
+``src/repro/`` this rule flags:
+
+* ``time.time`` / ``perf_counter`` / ``monotonic`` / ``process_time`` (and
+  their ``_ns`` variants) — wall-clock reads;
+* ``datetime.now`` / ``utcnow`` / ``today`` — ditto;
+* any use of the stdlib ``random`` module (unseeded global PRNG);
+* legacy ``np.random.*`` calls (``seed``, ``rand``, ``randn``, …) — global
+  mutable state — and ``np.random.default_rng()`` *without* a seed.
+
+``np.random.default_rng(seed)`` with an explicit seed and all of
+``jax.random`` are the sanctioned sources. Whitelisted subtrees:
+``src/repro/obs/`` (provenance stamping and phase timers *are* wall-clock
+consumers) and ``src/repro/launch/`` (host-side launch drivers that time
+compilation and serving). Engine wall-clock telemetry (``FLResult.wall_s``)
+carries inline ``# lint: ignore[determinism]`` suppressions instead, so
+every exemption is visible at the call site.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import Finding, Module, Rule
+
+SCOPE_PREFIX = "src/repro/"
+WHITELIST_PREFIXES = ("src/repro/obs/", "src/repro/launch/")
+
+_TIME_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns", "process_time",
+             "process_time_ns"}
+_DATETIME_FNS = {"now", "utcnow", "today"}
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "BitGenerator"}
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """``a.b.c`` -> ``["a", "b", "c"]`` (empty if not a pure chain)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return []
+
+
+class DeterminismRule(Rule):
+    """Flag wall-clock and unseeded randomness in ``src/repro/``."""
+
+    name = "determinism"
+    description = ("no time.time/datetime.now/stdlib random/unseeded "
+                   "np.random under src/repro/ (obs/ and launch/ are "
+                   "whitelisted host layers)")
+
+    def __init__(self, scope_prefix: str = SCOPE_PREFIX,
+                 whitelist: tuple[str, ...] = WHITELIST_PREFIXES) -> None:
+        """Scope and whitelist are injectable for the fixture tests."""
+        self.scope_prefix = scope_prefix
+        self.whitelist = whitelist
+
+    def check_module(self, module: Module) -> list[Finding]:
+        """Scan one module (no-op outside the scoped subtree)."""
+        rel = module.relpath
+        if not rel.startswith(self.scope_prefix):
+            return []
+        if any(rel.startswith(w) for w in self.whitelist):
+            return []
+        # names bound to the stdlib random module / its functions
+        random_names: set[str] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        random_names.add(alias.asname or "random")
+            elif isinstance(node, ast.ImportFrom) and node.module == "random":
+                for alias in node.names:
+                    random_names.add(alias.asname or alias.name)
+        findings: list[Finding] = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            findings.extend(self._check_call(module, node, chain,
+                                             random_names))
+        return findings
+
+    def _check_call(self, module: Module, node: ast.Call,
+                    chain: list[str],
+                    random_names: set[str]) -> list[Finding]:
+        """Findings for one attribute-chain call."""
+        head, tail = chain[0], chain[-1]
+        loc = ".".join(chain)
+        if head == "time" and len(chain) == 2 and tail in _TIME_FNS:
+            return [self.finding(
+                module, node.lineno,
+                f"wall-clock read `{loc}()` in a numeric path — results "
+                "must be a pure function of the seed (use the obs layer "
+                "for telemetry)")]
+        if tail in _DATETIME_FNS and any(
+                p in ("datetime", "date") for p in chain[:-1]):
+            return [self.finding(
+                module, node.lineno,
+                f"wall-clock read `{loc}()` in a numeric path — stamp "
+                "provenance in repro.obs instead")]
+        if head in random_names or (len(chain) == 1
+                                    and tail in random_names):
+            return [self.finding(
+                module, node.lineno,
+                f"stdlib random call `{loc}()` — use jax.random with an "
+                "explicit key")]
+        if len(chain) >= 3 and chain[0] in ("np", "numpy") \
+                and chain[1] == "random":
+            if tail not in _NP_RANDOM_OK:
+                return [self.finding(
+                    module, node.lineno,
+                    f"legacy global-state RNG `{loc}()` — use "
+                    "np.random.default_rng(seed)")]
+            if tail == "default_rng" and not node.args \
+                    and not node.keywords:
+                return [self.finding(
+                    module, node.lineno,
+                    "`np.random.default_rng()` without a seed — pass an "
+                    "explicit seed")]
+        return []

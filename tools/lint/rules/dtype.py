@@ -1,0 +1,144 @@
+"""dtype-discipline: the wire format is 32-bit; float64 never rides it.
+
+The approximate wire carries IEEE-754 float32 words (bitcast to uint32 and
+modulated); a float64 sneaking into a wire-format module either doubles
+airtime silently or, more likely, changes the bit pattern the goldens pin.
+The sanctioned dtype set is *declared* — ``WIRE_DTYPES`` in
+``src/repro/core/float_codec.py`` — and this rule parses it from there, so
+the source of truth lives with the codec, not the linter. In the wire
+modules the rule flags:
+
+* dtype references outside the declared set (``np.float64``,
+  ``jnp.float64``, ``"float64"``, dtype strings like ``"f8"``, and the
+  Python ``float``/``int`` builtins used as a ``dtype=`` argument — host
+  numpy resolves them to 64-bit);
+* host-numpy array creation (``np.array`` / ``np.asarray`` / ``np.zeros``
+  / ``np.ones`` / ``np.empty`` / ``np.full``) *without* an explicit dtype
+  argument — numpy's implied default is float64.
+
+Host-side stats reductions that legitimately accumulate in float64 carry
+inline ``# lint: ignore[dtype-discipline]`` suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from tools.lint.core import Finding, Module, REPO_ROOT, Rule
+
+DECL_PATH = REPO_ROOT / "src" / "repro" / "core" / "float_codec.py"
+
+WIRE_MODULES = (
+    "src/repro/core/float_codec.py",
+    "src/repro/core/modulation.py",
+    "src/repro/core/channel.py",
+    "src/repro/core/ecrt.py",
+    "src/repro/core/transport.py",
+    "src/repro/compress/framing.py",
+    "src/repro/compress/sparsify.py",
+    "src/repro/kernels/approx_channel.py",
+    "src/repro/kernels/ref.py",
+    "src/repro/kernels/ops.py",
+)
+
+_CREATORS = {"array", "asarray", "zeros", "ones", "empty", "full"}
+_BANNED_STRINGS = {"float64", "f8", "double", "complex128", "c16"}
+
+
+def parse_wire_dtypes(path: pathlib.Path = DECL_PATH) -> frozenset[str]:
+    """The declared wire dtype set, parsed from the codec module's AST."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "WIRE_DTYPES" \
+                and isinstance(node.value, (ast.Tuple, ast.List)):
+            return frozenset(
+                e.value for e in node.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str))
+    return frozenset()
+
+
+def _terminal(node: ast.AST) -> str | None:
+    """Rightmost identifier of a Name/Attribute chain."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+class DtypeDisciplineRule(Rule):
+    """Enforce the declared wire dtype set in wire-format modules."""
+
+    name = "dtype-discipline"
+    description = ("no float64 (explicit or numpy-implied) in wire-format "
+                   "modules; allowed dtypes are declared as "
+                   "float_codec.WIRE_DTYPES")
+
+    def __init__(self, wire_modules: tuple[str, ...] = WIRE_MODULES,
+                 decl_path: pathlib.Path = DECL_PATH) -> None:
+        """Module list and declaration path are injectable for tests."""
+        self.wire_modules = wire_modules
+        self.wire_dtypes = parse_wire_dtypes(decl_path)
+
+    def check_module(self, module: Module) -> list[Finding]:
+        """Scan one module (no-op outside the wire-module list)."""
+        if module.relpath not in self.wire_modules:
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(module.tree):
+            findings.extend(self._check_node(module, node))
+        return findings
+
+    def _check_node(self, module: Module, node: ast.AST) -> list[Finding]:
+        """Findings for one AST node in a wire module."""
+        # np.float64 / jnp.float64 / jnp.complex128 attribute references
+        if isinstance(node, ast.Attribute):
+            base = _terminal(node.value)
+            if base in ("np", "numpy", "jnp") \
+                    and node.attr in _BANNED_STRINGS:
+                return [self.finding(
+                    module, node.lineno,
+                    f"{base}.{node.attr} in a wire-format module — the "
+                    "wire dtype set is float_codec.WIRE_DTYPES")]
+            # int dtypes are host index math; the 64-bit hazard the
+            # goldens care about is float/complex payload precision
+            if base in ("np", "numpy", "jnp") \
+                    and node.attr.startswith(("float", "complex")) \
+                    and node.attr not in self.wire_dtypes \
+                    and node.attr != "float":
+                return [self.finding(
+                    module, node.lineno,
+                    f"dtype {base}.{node.attr} is not in the declared "
+                    "wire dtype set (float_codec.WIRE_DTYPES)")]
+        # dtype= keyword carrying a banned string or the float builtin
+        if isinstance(node, ast.keyword) and node.arg == "dtype":
+            v = node.value
+            if isinstance(v, ast.Constant) and v.value in _BANNED_STRINGS:
+                return [self.finding(
+                    module, node.lineno,
+                    f'dtype="{v.value}" in a wire-format module')]
+            if isinstance(v, ast.Name) and v.id == "float":
+                return [self.finding(
+                    module, node.lineno,
+                    "dtype=float resolves to float64 on host numpy — "
+                    "declare an explicit wire dtype")]
+        # host-numpy creation without an explicit dtype (implied float64)
+        if isinstance(node, ast.Call) and isinstance(node.func,
+                                                     ast.Attribute):
+            base = _terminal(node.func.value)
+            if base in ("np", "numpy") and node.func.attr in _CREATORS:
+                has_dtype = (len(node.args) >= 2 or any(
+                    k.arg == "dtype" for k in node.keywords))
+                if node.func.attr == "full":
+                    has_dtype = (len(node.args) >= 3 or any(
+                        k.arg == "dtype" for k in node.keywords))
+                if not has_dtype:
+                    return [self.finding(
+                        module, node.lineno,
+                        f"np.{node.func.attr}(...) without an explicit "
+                        "dtype in a wire-format module — numpy implies "
+                        "float64; declare one of float_codec.WIRE_DTYPES")]
+        return []

@@ -1,0 +1,175 @@
+"""jit-purity: no host effects inside ``jax.jit``-compiled functions.
+
+A function under ``jax.jit`` traces once and replays as XLA — host effects
+inside it either fail at trace time on real inputs (``float()`` on a
+tracer), silently run once instead of every call (``print``), or corrupt
+closure state across retraces. This rule finds functions that are jitted —
+via ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorators, or wrapped as
+``jax.jit(fn)`` / ``jax.jit(lambda ...)`` / ``jax.jit(self.method)`` — and
+flags inside them:
+
+* ``print(...)`` calls;
+* ``.item()`` calls (device->host sync);
+* ``float(x)`` / ``int(x)`` where ``x`` is a traced parameter of the
+  jitted function or contains a nested call (e.g. ``float(jnp.mean(g))``);
+* closure mutation: ``nonlocal`` / ``global`` declarations, and mutating
+  method calls (``.append`` / ``.extend`` / ``.add`` / ``.update`` /
+  ``.pop``) on names captured from an enclosing scope.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.lint.core import Finding, Module, Rule
+
+_MUTATORS = {"append", "extend", "add", "update", "pop", "insert",
+             "setdefault"}
+
+
+def _terminal(node: ast.AST) -> str | None:
+    """Rightmost identifier of a Name/Attribute chain."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """Does this expression denote ``jax.jit`` (or ``partial(jax.jit)``)?"""
+    if _terminal(node) == "jit":
+        return True
+    if isinstance(node, ast.Call) and _terminal(node.func) == "partial":
+        return any(_is_jit_expr(a) for a in node.args)
+    return False
+
+
+class JitPurityRule(Rule):
+    """Flag host effects inside jit-compiled functions."""
+
+    name = "jit-purity"
+    description = ("no print/.item()/float()/int()-on-tracers/closure "
+                   "mutation inside functions compiled with jax.jit")
+
+    def check_module(self, module: Module) -> list[Finding]:
+        """Collect the module's jitted functions, then scan their bodies."""
+        jitted = self._jitted_functions(module.tree)
+        findings: list[Finding] = []
+        for fn in jitted:
+            findings.extend(self._scan(module, fn))
+        return findings
+
+    # ----------------------------------------------------- jit detection
+
+    def _jitted_functions(self, tree: ast.Module) -> list[ast.AST]:
+        """Functions/lambdas compiled by jit, by decorator or by wrapping."""
+        out: list[ast.AST] = []
+        # name -> def node, and (class, name) -> method node for resolution
+        defs: dict[str, ast.AST] = {}
+        methods: dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, node)
+            if isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        methods.setdefault(sub.name, sub)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_expr(d) for d in node.decorator_list):
+                    out.append(node)
+            elif isinstance(node, ast.Call) and _is_jit_expr(node.func) \
+                    and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Lambda):
+                    out.append(target)
+                elif isinstance(target, ast.Name) \
+                        and target.id in defs:
+                    out.append(defs[target.id])
+                elif isinstance(target, ast.Attribute) \
+                        and target.attr in methods:
+                    out.append(methods[target.attr])
+        return out
+
+    # ------------------------------------------------------------- scan
+
+    def _scan(self, module: Module, fn: ast.AST) -> list[Finding]:
+        """Findings inside one jitted function body."""
+        findings: list[Finding] = []
+        params = self._param_names(fn)
+        local_names = self._assigned_names(fn) | params
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                findings.extend(self._check_node(module, node, params,
+                                                 local_names))
+        return findings
+
+    def _param_names(self, fn: ast.AST) -> set[str]:
+        """Parameter names of a function/lambda (traced inputs)."""
+        a = fn.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return set(names)
+
+    def _assigned_names(self, fn: ast.AST) -> set[str]:
+        """Names bound inside the function (not closure captures)."""
+        out: set[str] = set()
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) \
+                        and isinstance(node.ctx, ast.Store):
+                    out.add(node.id)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    out.add(node.name)
+        return out
+
+    def _check_node(self, module: Module, node: ast.AST, params: set[str],
+                    local_names: set[str]) -> list[Finding]:
+        """Findings for one AST node inside a jitted body."""
+        if isinstance(node, (ast.Nonlocal, ast.Global)):
+            kind = "nonlocal" if isinstance(node, ast.Nonlocal) else "global"
+            return [self.finding(
+                module, node.lineno,
+                f"`{kind}` mutation inside a jitted function — state "
+                "written at trace time replays stale")]
+        if not isinstance(node, ast.Call):
+            return []
+        fname = _terminal(node.func)
+        if isinstance(node.func, ast.Name) and fname == "print":
+            return [self.finding(
+                module, node.lineno,
+                "print() inside a jitted function runs at trace time "
+                "only — use jax.debug.print or hoist it out")]
+        if isinstance(node.func, ast.Attribute) and fname == "item" \
+                and not node.args:
+            return [self.finding(
+                module, node.lineno,
+                ".item() inside a jitted function forces a device->host "
+                "sync — return the array instead")]
+        if isinstance(node.func, ast.Name) and fname in ("float", "int") \
+                and len(node.args) == 1:
+            arg = node.args[0]
+            is_param = isinstance(arg, ast.Name) and arg.id in params
+            has_call = any(isinstance(n, ast.Call) for n in ast.walk(arg))
+            if is_param or has_call:
+                return [self.finding(
+                    module, node.lineno,
+                    f"{fname}() on a traced value inside a jitted "
+                    "function fails at trace time — keep it an array")]
+        if isinstance(node.func, ast.Attribute) and fname in _MUTATORS:
+            base = node.func.value
+            if isinstance(base, ast.Name) and base.id not in local_names:
+                return [self.finding(
+                    module, node.lineno,
+                    f"`.{fname}()` on closure variable `{base.id}` inside "
+                    "a jitted function mutates host state at trace time "
+                    "only")]
+        return []

@@ -1,0 +1,273 @@
+"""keylane: every ``fold_in`` must ride a registered key lane.
+
+The repo's PRNG discipline derives every auxiliary draw (downlink, header,
+selection, event layer) from reserved ``fold_in`` lanes declared in
+``src/repro/core/keylanes.py``. This rule statically cross-checks call
+sites against that table:
+
+* the second argument of ``jax.random.fold_in`` must resolve to a
+  registered lane symbol (``*_KEY_LANE``), optionally plus a constant
+  offset and/or one client-index expression;
+* bare integer literals and unregistered constants are findings — a raw
+  ``fold_in(key, 12345)`` silently claims an unreserved lane;
+* a constant offset must stay inside the lane's declared span;
+* client-indexed sites (``LANE + i``, or a bare index under a generic
+  schedule) must sit inside a scope whose chain contains a span guard —
+  a ``keylanes.check_cohort(...)`` / ``keylanes.check_range(...)`` call,
+  mirroring the broadcast leg's historical ``num_clients`` validation;
+* the registry itself is re-checked for overlapping ``[base, base+span)``
+  ranges per key space (defense in depth on top of the import-time
+  rejection in ``reserve()``).
+
+The registry is parsed, not imported — base/span expressions are folded by
+a tiny constant evaluator, so the rule works on any checkout without
+``PYTHONPATH`` set up.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+
+from tools.lint.core import Finding, Module, REPO_ROOT, Rule
+
+REGISTRY_PATH = REPO_ROOT / "src" / "repro" / "core" / "keylanes.py"
+
+_GUARD_NAMES = {"check_cohort", "check_range"}
+
+_BINOPS = {
+    ast.Add: lambda a, b: a + b,
+    ast.Sub: lambda a, b: a - b,
+    ast.Mult: lambda a, b: a * b,
+    ast.LShift: lambda a, b: a << b,
+    ast.RShift: lambda a, b: a >> b,
+    ast.BitOr: lambda a, b: a | b,
+    ast.BitAnd: lambda a, b: a & b,
+    ast.FloorDiv: lambda a, b: a // b,
+}
+
+
+def const_int(node: ast.AST):
+    """Fold an int-literal expression to its value (None if not constant)."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        op = _BINOPS.get(type(node.op))
+        if op is None:
+            return None
+        a, b = const_int(node.left), const_int(node.right)
+        if a is None or b is None:
+            return None
+        return op(a, b)
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneDecl:
+    """One parsed ``reserve()`` declaration from the registry module."""
+
+    symbol: str
+    name: str
+    base: int
+    span: int
+    space: str
+    owner: str
+    line: int
+
+    @property
+    def end(self) -> int:
+        """One past the last reserved index."""
+        return self.base + self.span
+
+
+def parse_registry(path: pathlib.Path = REGISTRY_PATH,
+                   ) -> tuple[dict[str, LaneDecl], list[str]]:
+    """Parse lane declarations from ``keylanes.py``.
+
+    Returns ``(lanes_by_symbol, problems)`` — problems are malformed
+    declarations (non-constant base/span) the rule reports against the
+    registry file itself.
+    """
+    lanes: dict[str, LaneDecl] = {}
+    problems: list[str] = []
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        call = node.value
+        if not (isinstance(target, ast.Name) and isinstance(call, ast.Call)):
+            continue
+        fn = call.func
+        fn_name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else "")
+        if fn_name != "reserve":
+            continue
+        kw = {k.arg: k.value for k in call.keywords}
+        name = (call.args[0].value if call.args
+                and isinstance(call.args[0], ast.Constant) else target.id)
+        base = const_int(kw.get("base", ast.Constant(value=None)))
+        span = const_int(kw.get("span", ast.Constant(value=None)))
+        space = (kw["space"].value if "space" in kw
+                 and isinstance(kw["space"], ast.Constant) else "round")
+        owner = (kw["owner"].value if "owner" in kw
+                 and isinstance(kw["owner"], ast.Constant) else "")
+        if base is None or span is None:
+            problems.append(
+                f"line {node.lineno}: lane {target.id} has non-constant "
+                f"base/span — the static checker cannot verify it")
+            continue
+        lanes[target.id] = LaneDecl(target.id, name, base, span, space,
+                                    owner, node.lineno)
+    return lanes, problems
+
+
+def _terminal_name(node: ast.AST) -> str | None:
+    """The rightmost identifier of a Name/Attribute chain."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _add_terms(node: ast.AST) -> list[ast.AST]:
+    """Flatten a (possibly nested) ``+`` expression into its terms."""
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        return _add_terms(node.left) + _add_terms(node.right)
+    return [node]
+
+
+class KeyLaneRule(Rule):
+    """Cross-check ``jax.random.fold_in`` call sites against the registry."""
+
+    name = "keylane"
+    description = ("fold_in second arguments must resolve to a registered "
+                   "key lane (src/repro/core/keylanes.py), with span-bound "
+                   "guards on client-indexed sites")
+
+    def __init__(self, registry_path: pathlib.Path = REGISTRY_PATH) -> None:
+        """Parse the registry once; its own problems surface per run."""
+        self.registry_path = registry_path
+        self.lanes, self.registry_problems = parse_registry(registry_path)
+        self._reported_registry = False
+
+    # ----------------------------------------------------------- registry
+
+    def _registry_findings(self) -> list[Finding]:
+        """Registry-file findings: parse problems + overlapping ranges."""
+        if self._reported_registry:
+            return []
+        self._reported_registry = True
+        rel = self.registry_path
+        try:
+            rel = self.registry_path.relative_to(REPO_ROOT)
+        except ValueError:
+            pass
+        out = [self.finding(str(rel), 1, p) for p in self.registry_problems]
+        decls = sorted(self.lanes.values(), key=lambda d: (d.space, d.base))
+        for a, b in zip(decls, decls[1:]):
+            if a.space == b.space and b.base < a.end:
+                out.append(self.finding(
+                    str(rel), b.line,
+                    f"lane {b.symbol} [{b.base}, {b.end}) overlaps "
+                    f"{a.symbol} [{a.base}, {a.end}) in the "
+                    f"{a.space!r} key space"))
+        return out
+
+    # ------------------------------------------------------------- checks
+
+    def check_module(self, module: Module) -> list[Finding]:
+        """Classify every ``fold_in`` second argument in the module."""
+        findings = self._registry_findings()
+        # scope chain: stack of enclosing function/lambda nodes
+        parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(module.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _terminal_name(node.func) != "fold_in":
+                continue
+            if len(node.args) < 2:
+                continue
+            findings.extend(self._check_arg(module, node, node.args[1],
+                                            parents))
+        return findings
+
+    def _check_arg(self, module: Module, call: ast.Call, arg: ast.AST,
+                   parents: dict[ast.AST, ast.AST]) -> list[Finding]:
+        """Findings for one fold_in second argument."""
+        terms = _add_terms(arg)
+        symbols = [t for t in terms
+                   if _terminal_name(t) in self.lanes]
+        consts = [const_int(t) for t in terms]
+        others = [t for t, c in zip(terms, consts)
+                  if c is None and t not in symbols]
+        const_sum = sum(c for c in consts if c is not None)
+
+        if len(symbols) > 1:
+            return [self.finding(
+                module, call.lineno,
+                "fold_in combines two registered lane symbols "
+                f"({', '.join(_terminal_name(s) for s in symbols)}) — "
+                "reserve a dedicated lane instead")]
+        if not symbols:
+            if not others:
+                # pure integer expression: an unregistered lane
+                return [self.finding(
+                    module, call.lineno,
+                    f"fold_in lane is a bare integer ({const_sum}) — "
+                    "reserve it in repro.core.keylanes and use the symbol")]
+            # bare index expression (generic schedules like client_keys):
+            # legal only under a span guard in the enclosing scopes
+            if self._guarded(call, parents):
+                return []
+            return [self.finding(
+                module, call.lineno,
+                "fold_in index is not derived from a registered lane "
+                "symbol and no keylanes.check_cohort/check_range guard is "
+                "in scope — unbounded indices can walk into another lane")]
+
+        lane = self.lanes[_terminal_name(symbols[0])]
+        out: list[Finding] = []
+        if others:
+            # client-indexed use: LANE (+ const) + i — guard required
+            if not self._guarded(call, parents):
+                out.append(self.finding(
+                    module, call.lineno,
+                    f"client-indexed use of lane {lane.symbol} has no "
+                    "keylanes.check_cohort/check_range guard in scope — "
+                    f"a cohort larger than {lane.span} would cross lanes"))
+            if not 0 <= const_sum < lane.span:
+                out.append(self.finding(
+                    module, call.lineno,
+                    f"constant offset {const_sum} walks out of lane "
+                    f"{lane.symbol} (span {lane.span}) — reserve a "
+                    "dedicated sub-lane"))
+        elif not 0 <= const_sum < lane.span:
+            out.append(self.finding(
+                module, call.lineno,
+                f"constant offset {const_sum} walks out of lane "
+                f"{lane.symbol} (span {lane.span})"))
+        return out
+
+    def _guarded(self, call: ast.Call,
+                 parents: dict[ast.AST, ast.AST]) -> bool:
+        """Is a span-guard call present in any enclosing scope?"""
+        scope: ast.AST | None = call
+        while scope is not None:
+            if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                for sub in ast.walk(scope):
+                    if (isinstance(sub, ast.Call)
+                            and _terminal_name(sub.func) in _GUARD_NAMES):
+                        return True
+            scope = parents.get(scope)
+        return False
