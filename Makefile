@@ -4,8 +4,20 @@
 PY := python
 export PYTHONPATH := src
 
+# Host env for wall-clock benchmarks (SNIPPETS idiom): preload tcmalloc
+# when the host has it (this container does not — $(wildcard) keeps the
+# preload empty rather than crashing the loader), silence TF/XLA host
+# chatter, and pin a single host platform device so timings are not
+# skewed by surprise intra-op sharding. benchmarks/common.py stamps the
+# values actually in effect into every BENCH_*.json meta.host_flags.
+TCMALLOC := $(firstword $(wildcard /usr/lib/x86_64-linux-gnu/libtcmalloc.so* \
+        /usr/lib/libtcmalloc.so*))
+BENCH_ENV := $(if $(TCMALLOC),LD_PRELOAD=$(TCMALLOC)) \
+        TF_CPP_MIN_LOG_LEVEL=4 \
+        XLA_FLAGS="--xla_force_host_platform_device_count=1"
+
 .PHONY: test bench-smoke bench-link bench-fl bench-compress bench-async \
-        bench-obs docs-check lint
+        bench-obs bench-kernel docs-check lint
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -53,6 +65,17 @@ bench-async:
 bench-obs:
 	$(PY) -m benchmarks.run --only obs
 	$(PY) -m tools.bench_schema BENCH_obs.json
+
+# Fused-kernel throughput study: layered jnp round vs batch kernel vs the
+# in-kernel-aggregation fused round, the analytic HBM roofline from the
+# real transport config (gate: fused moves >= 5x less traffic than the
+# layered round), a fused-vs-layered bit-identity self-check, and the
+# bucketed-vs-select dispatch arm on a single-mode cohort. Runs under the
+# tuned host env above; writes BENCH_kernel_throughput.json (uploaded as
+# a CI artifact) and schema-validates it.
+bench-kernel:
+	$(BENCH_ENV) $(PY) -m benchmarks.run --only kernel
+	$(PY) -m tools.bench_schema BENCH_kernel_throughput.json
 
 # Fails if a public module (or public function/class) under
 # src/repro/{core,link,fl,compress,obs} or tools/ lacks a docstring.

@@ -85,13 +85,34 @@ def reset_records(path: str | None = None) -> None:
         open(path, "w").close()
 
 
+# Host-level performance knobs that move benchmark wall times: the
+# allocator preload and the XLA/TF host env. Wall numbers are only
+# comparable across runs with the same flag set, so every BENCH_*.json
+# records the values in effect (`make bench-*` exports the tuned set; a
+# bare `python -m benchmarks.run` records the honest empty one).
+TUNED_ENV = ("LD_PRELOAD", "TF_CPP_MIN_LOG_LEVEL", "XLA_FLAGS")
+
+
+def host_flags() -> dict:
+    """The host performance env in effect for this process, as recorded in
+    every report's ``meta.host_flags``: the raw ``TUNED_ENV`` values plus a
+    ``tcmalloc`` bool (whether the preloaded allocator is actually active —
+    the Makefile only preloads it where the library exists)."""
+    flags = {k: os.environ.get(k, "") for k in TUNED_ENV}
+    flags["tcmalloc"] = "tcmalloc" in flags["LD_PRELOAD"]
+    return flags
+
+
 def bench_meta() -> dict:
     """The provenance block every ``BENCH_*.json`` carries — identical in
     shape to the FL run ledger's manifest ``provenance`` (jax/numpy/python
-    versions, platform, backend, git sha, UTC timestamp)."""
+    versions, platform, backend, git sha, UTC timestamp), plus the
+    ``host_flags`` benchmark env block above."""
     from repro.obs import ledger as obs_ledger
 
-    return obs_ledger.provenance()
+    meta = dict(obs_ledger.provenance())
+    meta["host_flags"] = host_flags()
+    return meta
 
 
 def write_bench_json(path: str, payload: dict) -> None:

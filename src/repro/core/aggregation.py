@@ -19,7 +19,13 @@ import jax.numpy as jnp
 
 from repro.core import transport as transport_lib
 
-__all__ = ["fedsgd_aggregate", "approx_allreduce", "corrupt_local"]
+__all__ = [
+    "fedsgd_aggregate",
+    "fedsgd_aggregate_batch",
+    "normalize_weights",
+    "approx_allreduce",
+    "corrupt_local",
+]
 
 
 def fedsgd_aggregate(grads: Sequence[Any], weights: Sequence[float]):
@@ -31,6 +37,43 @@ def fedsgd_aggregate(grads: Sequence[Any], weights: Sequence[float]):
         return sum(s * l for s, l in zip(scale, leaves))
 
     return jax.tree_util.tree_map(comb, *grads)
+
+
+def normalize_weights(weights: jax.Array) -> jax.Array:
+    """f32 weights scaled to sum 1 (all-zero input passes through).
+
+    The device-side twin of ``fedsgd_aggregate``'s host-float ``w / total``;
+    the ``where``-form denominator matches ``engine.dropout_weighted_mean``'s
+    zero-cohort convention (no movement rather than NaN).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.sum(w)
+    return w / jnp.where(total > 0, total, 1.0)
+
+
+def fedsgd_aggregate_batch(stacked: jax.Array, weights: jax.Array):
+    """Paper eq. (5) over a stacked ``(C, ...)`` gradient batch.
+
+    The layered twin of the fused in-kernel accumulator
+    (``kernels.approx_channel_batch_aggregate_pallas``): a ``lax.scan`` over
+    the client axis whose body is one multiply + one add per element —
+    the same arithmetic shape as the kernel's grid-loop accumulation, so the
+    two are bit-identical (an unrolled sum is NOT: LLVM contracts the first
+    multiply of an add chain into an fma). Weights are normalized to sum 1
+    here, mirroring ``fedsgd_aggregate``; pass pre-normalized weights through
+    ``lambda``-free call sites via :func:`normalize_weights` + the raw scan
+    if the normalization must happen once globally.
+    """
+    w = normalize_weights(weights)
+    rows = stacked.astype(jnp.float32)
+    zero = jnp.zeros(rows.shape[1:], jnp.float32)
+
+    def body(acc, wx):
+        wc, xc = wx
+        return acc + wc * xc, None
+
+    agg, _ = jax.lax.scan(body, zero, (w, rows))
+    return agg
 
 
 def corrupt_local(grads: Any, key: jax.Array, cfg: transport_lib.TransportConfig):

@@ -115,6 +115,10 @@ __all__ = [
     "transmit_pytree_batch",
     "transmit_batch_adaptive",
     "transmit_pytree_batch_adaptive",
+    "transmit_batch_aggregate",
+    "transmit_pytree_batch_aggregate",
+    "transmit_batch_adaptive_aggregate",
+    "transmit_pytree_batch_adaptive_aggregate",
     "transmit_sparse",
     "transmit_sparse_batch",
     "transmit_broadcast",
@@ -461,8 +465,14 @@ def _resolve_batch_snr(cfg: TransportConfig, num_clients: int, snr_db):
     return channel_lib.per_client_snr_db(cfg.channel, num_clients)
 
 
+def _donation_supported() -> bool:
+    """Whether this backend honours ``donate_argnums`` (XLA CPU ignores it
+    with a warning, so the ``donate=`` plumbing silently no-ops there)."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
 def transmit_batch(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
-                   snr_db=None, client_offset=0):
+                   snr_db=None, client_offset=0, donate: bool = False):
     """Transmit ``num_clients`` payloads through independent fading uplinks.
 
     One fused computation (single jittable call): the uncoded/ECRT paths vmap
@@ -482,6 +492,9 @@ def transmit_batch(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
         every mode except the SNR-blind analytic ECRT model
         (``mode='ecrt', simulate_fec=False`` — see ``_ecrt_analytic``).
       client_offset: global index of row 0 (used by the sharded dispatch).
+      donate: release the ``x`` buffer into the kernel launch (the uplink
+        payload is dead after transmission). Honoured on the kernel path on
+        backends that support donation (gpu/tpu); a no-op elsewhere.
 
     Returns:
       ``(x_hat, stats)``: ``(num_clients, N)`` float32 received payloads and
@@ -494,11 +507,11 @@ def transmit_batch(x: jax.Array, key: jax.Array, cfg: TransportConfig, *,
     snr_vec = _resolve_batch_snr(cfg, num_clients, snr_db)
     keys = client_keys(key, num_clients, client_offset)
 
-    return _batch_with_keys(x, keys, cfg, snr_vec)
+    return _batch_with_keys(x, keys, cfg, snr_vec, donate=donate)
 
 
 def _batch_with_keys(x: jax.Array, keys: jax.Array, cfg: TransportConfig,
-                     snr_vec, *, num_active=None):
+                     snr_vec, *, num_active=None, donate: bool = False):
     """Single-mode batch over explicit per-client keys.
 
     The shared engine under ``transmit_batch`` (keys from the fold_in
@@ -511,7 +524,8 @@ def _batch_with_keys(x: jax.Array, keys: jax.Array, cfg: TransportConfig,
         from repro.kernels import ops as kernel_ops
 
         return kernel_ops.approx_channel_transmit_batch(
-            x, keys, cfg, snr_vec, num_active=num_active)
+            x, keys, cfg, snr_vec, num_active=num_active,
+            donate=donate and _donation_supported())
 
     # All jnp paths (perfect/naive/approx/ecrt, chunked or not) are one vmap
     # over the single-client pipeline — batch semantics == loop semantics by
@@ -520,6 +534,61 @@ def _batch_with_keys(x: jax.Array, keys: jax.Array, cfg: TransportConfig,
         return jax.vmap(lambda xc, kc: transmit_flat(xc, kc, cfg))(x, keys)
     return jax.vmap(lambda xc, kc, s: transmit_flat(xc, kc, cfg, snr_db=s))(
         x, keys, snr_vec)
+
+
+def _scan_weighted_sum(rows, weights, num_active=None):
+    """``sum_c weights[c] * rows[c]`` as a ``lax.scan`` over the client axis.
+
+    The arithmetic contract of the fused path: one multiply + one add per
+    client per element, in client order — the same shape as the Pallas
+    kernel's grid-loop accumulation and ``aggregation.fedsgd_aggregate_batch``
+    (an unrolled sum is NOT bit-identical: LLVM contracts the first multiply
+    of an add chain into an fma). ``num_active`` masks tail rows by carrying
+    the accumulator through unchanged (a select, not a zero weight — a zero
+    weight would still turn NaN payload lanes into NaN aggregates).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    rows = rows.astype(jnp.float32)
+    zero = jnp.zeros(rows.shape[1:], jnp.float32)
+    if num_active is None:
+        def body(acc, wx):
+            wc, xc = wx
+            return acc + wc * xc, None
+
+        agg, _ = jax.lax.scan(body, zero, (w, rows))
+        return agg
+    na = jnp.asarray(num_active, jnp.int32)
+
+    def body_masked(acc, iwx):
+        i, wc, xc = iwx
+        return jnp.where(i < na, acc + wc * xc, acc), None
+
+    agg, _ = jax.lax.scan(
+        body_masked, zero, (jnp.arange(rows.shape[0]), w, rows))
+    return agg
+
+
+def _batch_aggregate_with_keys(x, keys, cfg, snr_vec, weights, *,
+                               num_active=None, donate=False):
+    """Single-mode batch + weighted aggregation over explicit keys.
+
+    The fused-round engine under :func:`transmit_batch_aggregate` and each
+    bucket of :func:`transmit_batch_adaptive_aggregate`. On the kernel path
+    the weighted sum happens *inside* the Pallas grid (the per-client
+    demapped payload never reaches HBM); every other mode layers
+    :func:`_scan_weighted_sum` over the standard batch — bit-identical to
+    the kernel accumulator by the scan contract. ``weights`` are applied as
+    given (normalize first: :func:`repro.core.aggregation.normalize_weights`).
+    Returns ``(agg (N,) float32, stats)`` with per-client ``(C,)`` stats.
+    """
+    if cfg.mode in ("naive", "approx") and cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.approx_channel_transmit_batch_aggregate(
+            x, keys, cfg, snr_vec, weights, num_active=num_active,
+            donate=donate and _donation_supported())
+    x_hat, stats = _batch_with_keys(x, keys, cfg, snr_vec)
+    return _scan_weighted_sum(x_hat, weights, num_active), stats
 
 
 def _same_channel(a: channel_lib.ChannelConfig,
@@ -579,20 +648,25 @@ def _bucket_capacity(count: int) -> int:
 
 
 @functools.lru_cache(maxsize=256)
-def _cached_mode_batch_fn(cfg: TransportConfig, with_snr: bool):
+def _cached_mode_batch_fn(cfg: TransportConfig, with_snr: bool,
+                          donate: bool = False):
     """One jitted single-mode batch per (config, snr-arity) — jax caches per
     bucket shape underneath, so repeated rounds with the same mode mix reuse
-    their traces."""
+    their traces. ``donate`` twins release the bucket payload buffer (always
+    a fresh gather) into the launch."""
+    kwargs = {"donate_argnums": (0,)} if donate else {}
     if with_snr:
         return jax.jit(lambda x, k, s, na: _batch_with_keys(
-            x, k, cfg, s, num_active=na))
+            x, k, cfg, s, num_active=na), **kwargs)
     return jax.jit(lambda x, k, na: _batch_with_keys(
-        x, k, cfg, None, num_active=na))
+        x, k, cfg, None, num_active=na), **kwargs)
 
 
-def _mode_batch_fn(cfg: TransportConfig, with_snr: bool):
+def _mode_batch_fn(cfg: TransportConfig, with_snr: bool,
+                   donate: bool = False):
     try:
-        return _cached_mode_batch_fn(cfg, with_snr)
+        return _cached_mode_batch_fn(cfg, with_snr,
+                                     donate and _donation_supported())
     except TypeError:
         # Unhashable config (e.g. an array-valued channel snr_db): fall back
         # to an unjitted call — correct, just not trace-cached.
@@ -602,29 +676,97 @@ def _mode_batch_fn(cfg: TransportConfig, with_snr: bool):
         return lambda x, k, na: _batch_with_keys(x, k, cfg, None, num_active=na)
 
 
-def _scatter_bucket_parts(parts_x, parts_st, order, num_clients):
-    """Scatter per-bucket outputs back to client order.
+@functools.lru_cache(maxsize=256)
+def _cached_mode_aggregate_fn(cfg: TransportConfig, with_snr: bool,
+                              donate: bool = False):
+    """The :func:`_cached_mode_batch_fn` twin for the fused-aggregate path:
+    one jitted single-mode batch+aggregate per (config, snr-arity). This jit
+    is the *outermost* boundary of a bucket launch, so ``donate`` twins
+    declare the payload donation here (inner jits inline)."""
+    kwargs = {"donate_argnums": (0,)} if donate else {}
+    if with_snr:
+        return jax.jit(lambda x, k, s, w, na: _batch_aggregate_with_keys(
+            x, k, cfg, s, w, num_active=na), **kwargs)
+    return jax.jit(lambda x, k, w, na: _batch_aggregate_with_keys(
+        x, k, cfg, None, w, num_active=na), **kwargs)
 
-    The shared tail of every bucketed dispatch (dense adaptive, sparse
-    adaptive, the engine's compressed uplink): concatenate the per-mode
-    bucket outputs/stats in sorted order and gather them through the
-    inverse of the stable ``order`` permutation. Returns ``(x_hat, stats,
-    inv)`` — ``stats`` without ``mode_idx`` (callers attach their own), and
-    ``inv`` so callers can scatter extra per-bucket arrays the same way.
+
+def _mode_aggregate_fn(cfg: TransportConfig, with_snr: bool,
+                       donate: bool = False):
+    try:
+        return _cached_mode_aggregate_fn(cfg, with_snr,
+                                         donate and _donation_supported())
+    except TypeError:
+        # Unhashable config: unjitted fallback, as in _mode_batch_fn.
+        if with_snr:
+            return lambda x, k, s, w, na: _batch_aggregate_with_keys(
+                x, k, cfg, s, w, num_active=na)
+        return lambda x, k, w, na: _batch_aggregate_with_keys(
+            x, k, cfg, None, w, num_active=na)
+
+
+def _scatter_stats(parts_st, order, num_clients):
+    """Scatter per-bucket :class:`TxStats` back to client order.
+
+    Concatenates the per-mode stat fields in sorted order and gathers them
+    through the inverse of the stable ``order`` permutation. Returns
+    ``(stats, inv)`` — ``stats`` without ``mode_idx`` (callers attach their
+    own), and ``inv`` so callers can scatter extra per-bucket arrays the
+    same way.
     """
     inv = np.empty(num_clients, np.int64)
     inv[order] = np.arange(num_clients)
     inv = jnp.asarray(inv)
-    x_hat = jnp.take(jnp.concatenate(parts_x, axis=0), inv, axis=0)
     ds, tx, be, nb, boa = (
         jnp.take(jnp.concatenate([getattr(st, f) for st in parts_st]), inv)
         for f in ("data_symbols", "transmissions", "bit_errors", "n_bits",
                   "bits_on_air")
     )
-    return x_hat, TxStats(ds, tx, be, nb, bits_on_air=boa), inv
+    return TxStats(ds, tx, be, nb, bits_on_air=boa), inv
 
 
-def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec):
+def _scatter_bucket_parts(parts_x, parts_st, order, num_clients):
+    """Scatter per-bucket outputs back to client order.
+
+    The shared tail of every bucketed dispatch (dense adaptive, sparse
+    adaptive, the engine's compressed uplink): the payload rows ride the
+    same inverse permutation as the :func:`_scatter_stats` stat fields.
+    Returns ``(x_hat, stats, inv)``.
+    """
+    stats, inv = _scatter_stats(parts_st, order, num_clients)
+    x_hat = jnp.take(jnp.concatenate(parts_x, axis=0), inv, axis=0)
+    return x_hat, stats, inv
+
+
+def _gather_bucket(x, keys, snr_vec, idx, count, n_payload):
+    """Gather one mode bucket's rows and pad to its quarter-octave capacity.
+
+    Payload pads with zero rows; keys/SNR broadcast row 0 (masked rows'
+    outputs are discarded, the pads only keep shapes static). Returns
+    ``(xb, kb, sb, cap)``.
+    """
+    xb = jnp.take(x, idx, axis=0)
+    kb = jnp.take(keys, idx, axis=0)
+    sb = None if snr_vec is None else jnp.take(snr_vec, idx)
+    cap = _bucket_capacity(count)
+    if cap > count:
+        pad = cap - count
+        xb = jnp.concatenate([xb, jnp.zeros((pad, n_payload), xb.dtype)])
+        kb = jnp.concatenate(
+            [kb, jnp.broadcast_to(kb[:1], (pad,) + kb.shape[1:])])
+        if sb is not None:
+            sb = jnp.concatenate([sb, jnp.broadcast_to(sb[:1], (pad,))])
+    return xb, kb, sb, cap
+
+
+def _slice_stats(st: "TxStats", count: int) -> "TxStats":
+    """Drop a padded bucket's masked tail rows from every stat field."""
+    return TxStats(st.data_symbols[:count], st.transmissions[:count],
+                   st.bit_errors[:count], st.n_bits[:count],
+                   bits_on_air=st.bits_on_air[:count])
+
+
+def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec, donate=False):
     """Sort/gather/scatter mixed-mode dispatch over concrete mode counts.
 
     Clients are stable-argsorted by mode so each mode's clients form one
@@ -650,28 +792,58 @@ def _bucketed_adaptive(x, keys, cfgs, mode_np, snr_vec):
         if count == 0:
             continue
         idx = jnp.asarray(order[starts[m] : starts[m] + count])
-        xb = jnp.take(x, idx, axis=0)
-        kb = jnp.take(keys, idx, axis=0)
-        sb = None if snr_vec is None else jnp.take(snr_vec, idx)
-        cap = _bucket_capacity(count)
-        if cap > count:
-            pad = cap - count
-            xb = jnp.concatenate([xb, jnp.zeros((pad, n_payload), xb.dtype)])
-            kb = jnp.concatenate(
-                [kb, jnp.broadcast_to(kb[:1], (pad,) + kb.shape[1:])])
-            if sb is not None:
-                sb = jnp.concatenate([sb, jnp.broadcast_to(sb[:1], (pad,))])
-        fn = _mode_batch_fn(cfg, sb is not None)
+        xb, kb, sb, _ = _gather_bucket(x, keys, snr_vec, idx, count,
+                                       n_payload)
+        fn = _mode_batch_fn(cfg, sb is not None, donate)
         na = jnp.int32(count)
         xh, st = fn(xb, kb, na) if sb is None else fn(xb, kb, sb, na)
         parts_x.append(xh[:count])
-        parts_st.append(TxStats(st.data_symbols[:count],
-                                st.transmissions[:count],
-                                st.bit_errors[:count], st.n_bits[:count],
-                                bits_on_air=st.bits_on_air[:count]))
+        parts_st.append(_slice_stats(st, count))
     x_hat, stats, _ = _scatter_bucket_parts(parts_x, parts_st, order,
                                             num_clients)
     return x_hat, stats
+
+
+def _bucketed_adaptive_aggregate(x, keys, cfgs, mode_np, snr_vec, weights,
+                                 donate=False):
+    """Bucketed mixed-mode dispatch with per-bucket fused aggregation.
+
+    Each mode bucket produces its own weighted partial sum (kernel
+    accumulator or scan fallback, masked padding excluded via
+    ``num_active``); the partials add in increasing mode-index order — the
+    documented summation-order contract of the adaptive aggregate (NOT the
+    raw client order: a mixed-mode cohort regroups the sum by bucket).
+    Weights must be pre-normalized *globally*, before the bucket split.
+    """
+    num_clients, n_payload = x.shape
+    if num_clients == 0:
+        empty = jnp.zeros((0,), jnp.float32)
+        return (jnp.zeros((n_payload,), jnp.float32),
+                TxStats(empty, empty, empty, empty, bits_on_air=empty))
+    order = np.argsort(mode_np, kind="stable")
+    counts = np.bincount(mode_np, minlength=len(cfgs))
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    total = None
+    parts_st = []
+    for m, cfg in enumerate(cfgs):
+        count = int(counts[m])
+        if count == 0:
+            continue
+        idx = jnp.asarray(order[starts[m] : starts[m] + count])
+        xb, kb, sb, cap = _gather_bucket(x, keys, snr_vec, idx, count,
+                                         n_payload)
+        wb = jnp.take(jnp.asarray(weights, jnp.float32), idx)
+        if cap > count:
+            wb = jnp.concatenate(
+                [wb, jnp.zeros((cap - count,), jnp.float32)])
+        fn = _mode_aggregate_fn(cfg, sb is not None, donate)
+        na = jnp.int32(count)
+        agg, st = (fn(xb, kb, wb, na) if sb is None
+                   else fn(xb, kb, sb, wb, na))
+        total = agg if total is None else total + agg
+        parts_st.append(_slice_stats(st, count))
+    stats, _ = _scatter_stats(parts_st, order, num_clients)
+    return total, stats
 
 
 def _select_adaptive(x, keys, cfgs, mode_idx, snr_vec):
@@ -694,58 +866,22 @@ def _select_adaptive(x, keys, cfgs, mode_idx, snr_vec):
     )(x, keys, snr_vec, mode_idx)
 
 
-def transmit_batch_adaptive(x: jax.Array, key: jax.Array,
-                            cfgs, mode_idx, *, snr_db=None, client_offset=0,
-                            dispatch: str = "auto"):
-    """Mixed-mode batched uplink: client ``i`` uses ``cfgs[mode_idx[i]]``.
+def _adaptive_prologue(x, key, cfgs, mode_idx, snr_db, client_offset,
+                       dispatch, caller):
+    """Shared validation/normalization head of the adaptive dispatches.
 
-    The link-adaptation dispatch (paper Sec. I: deliver gradients with errors
-    "when the channel quality is satisfactory", protect otherwise): a policy
-    upstream picks a transport config per client per round and the whole
-    cohort runs through the fused batched engine. See the module docstring
-    for the two dispatch strategies; the short version:
-
-    * ``"bucketed"`` — sort/gather/scatter per-mode buckets, each mode runs
-      once, O(num_clients) total work, Pallas-kernel rows allowed. Needs a
-      *concrete* (non-traced) ``mode_idx``.
-    * ``"select"`` — vmapped ``lax.switch``: one XLA program even with a
-      traced ``mode_idx``, but ~``len(cfgs)``x the FLOPs and no kernel rows.
-    * ``"auto"`` (default) — bucketed when ``mode_idx`` is concrete, select
-      otherwise.
-
-    Args:
-      x: ``(num_clients, N)`` payload matrix.
-      key: base PRNG key; the :func:`client_keys` fold_in schedule is shared
-        with :func:`transmit_batch`, so row ``i`` is bit-identical to
-        ``transmit_flat(x[i], fold_in(key, client_offset + i), cfgs[m_i])``
-        under **either** dispatch (the bucketed key rides the client index,
-        not the bucket slot).
-      cfgs: sequence of :class:`TransportConfig` — the mode table. All
-        entries must share one ``ChannelConfig`` (the physical link does not
-        depend on the chosen transport); equal-valued configs of different
-        shapes (scalar vs length-1 snr_db) are normalized to ``cfgs[0]``'s.
-        ``use_kernel`` rows are accepted on the bucketed path and rejected
-        on the select path (the Pallas grid cannot lower inside a vmapped
-        switch).
-      mode_idx: ``(num_clients,)`` integer vector of table indices.
-        Out-of-range values clamp (matching ``lax.switch``), and the
-        *clamped* vector is what ``stats.mode_idx`` records — so airtime
-        pricing always sees the mode that actually transmitted.
-      snr_db: optional per-client SNR override (scalar or ``(num_clients,)``),
-        resolved against the shared channel config.
-      client_offset: global index of row 0 (as in :func:`transmit_batch`).
-      dispatch: ``"auto" | "bucketed" | "select"``.
-
-    Returns:
-      ``(x_hat, stats)`` as :func:`transmit_batch`; ``stats.mode_idx`` holds
-      the per-client mode vector.
+    Validates the payload shape and the shared-channel invariant,
+    canonicalizes array-valued snr_db configs to one hashable channel,
+    resolves the dispatch strategy against mode concreteness, clamps the
+    mode vector, and builds the fold_in key schedule. Returns
+    ``(x, cfgs, mode_arr, snr_vec, keys, dispatch)``.
     """
     x = jnp.asarray(x, jnp.float32)
     if x.ndim != 2:
-        raise ValueError(f"transmit_batch_adaptive wants (num_clients, N); got {x.shape}")
+        raise ValueError(f"{caller} wants (num_clients, N); got {x.shape}")
     cfgs = tuple(cfgs)
     if not cfgs:
-        raise ValueError("transmit_batch_adaptive needs a non-empty config table")
+        raise ValueError(f"{caller} needs a non-empty config table")
     for cfg in cfgs:
         if not _same_channel(cfg.channel, cfgs[0].channel):
             raise ValueError(
@@ -807,13 +943,137 @@ def transmit_batch_adaptive(x: jax.Array, key: jax.Array,
         mode_arr, 0, len(cfgs) - 1)
     snr_vec = _resolve_batch_snr(cfgs[0], num_clients, snr_db)
     keys = client_keys(key, num_clients, client_offset)
+    return x, cfgs, mode_arr, snr_vec, keys, dispatch
 
+
+def transmit_batch_adaptive(x: jax.Array, key: jax.Array,
+                            cfgs, mode_idx, *, snr_db=None, client_offset=0,
+                            dispatch: str = "auto", donate: bool = False):
+    """Mixed-mode batched uplink: client ``i`` uses ``cfgs[mode_idx[i]]``.
+
+    The link-adaptation dispatch (paper Sec. I: deliver gradients with errors
+    "when the channel quality is satisfactory", protect otherwise): a policy
+    upstream picks a transport config per client per round and the whole
+    cohort runs through the fused batched engine. See the module docstring
+    for the two dispatch strategies; the short version:
+
+    * ``"bucketed"`` — sort/gather/scatter per-mode buckets, each mode runs
+      once, O(num_clients) total work, Pallas-kernel rows allowed. Needs a
+      *concrete* (non-traced) ``mode_idx``.
+    * ``"select"`` — vmapped ``lax.switch``: one XLA program even with a
+      traced ``mode_idx``, but ~``len(cfgs)``x the FLOPs and no kernel rows.
+    * ``"auto"`` (default) — bucketed when ``mode_idx`` is concrete, select
+      otherwise.
+
+    Args:
+      x: ``(num_clients, N)`` payload matrix.
+      key: base PRNG key; the :func:`client_keys` fold_in schedule is shared
+        with :func:`transmit_batch`, so row ``i`` is bit-identical to
+        ``transmit_flat(x[i], fold_in(key, client_offset + i), cfgs[m_i])``
+        under **either** dispatch (the bucketed key rides the client index,
+        not the bucket slot).
+      cfgs: sequence of :class:`TransportConfig` — the mode table. All
+        entries must share one ``ChannelConfig`` (the physical link does not
+        depend on the chosen transport); equal-valued configs of different
+        shapes (scalar vs length-1 snr_db) are normalized to ``cfgs[0]``'s.
+        ``use_kernel`` rows are accepted on the bucketed path and rejected
+        on the select path (the Pallas grid cannot lower inside a vmapped
+        switch).
+      mode_idx: ``(num_clients,)`` integer vector of table indices.
+        Out-of-range values clamp (matching ``lax.switch``), and the
+        *clamped* vector is what ``stats.mode_idx`` records — so airtime
+        pricing always sees the mode that actually transmitted.
+      snr_db: optional per-client SNR override (scalar or ``(num_clients,)``),
+        resolved against the shared channel config.
+      client_offset: global index of row 0 (as in :func:`transmit_batch`).
+      dispatch: ``"auto" | "bucketed" | "select"``.
+      donate: release bucket payload buffers (fresh gathers) into their
+        launches on the bucketed dispatch; a no-op on select and on
+        backends without donation.
+
+    Returns:
+      ``(x_hat, stats)`` as :func:`transmit_batch`; ``stats.mode_idx`` holds
+      the per-client mode vector.
+    """
+    x, cfgs, mode_arr, snr_vec, keys, dispatch = _adaptive_prologue(
+        x, key, cfgs, mode_idx, snr_db, client_offset, dispatch,
+        "transmit_batch_adaptive")
     if dispatch == "bucketed":
-        x_hat, stats = _bucketed_adaptive(x, keys, cfgs, mode_arr, snr_vec)
+        x_hat, stats = _bucketed_adaptive(x, keys, cfgs, mode_arr, snr_vec,
+                                          donate)
     else:
         x_hat, stats = _select_adaptive(x, keys, cfgs, mode_arr, snr_vec)
     stats.mode_idx = jnp.asarray(mode_arr, jnp.int32)
     return x_hat, stats
+
+
+def transmit_batch_aggregate(x: jax.Array, key: jax.Array,
+                             cfg: TransportConfig, weights, *, snr_db=None,
+                             client_offset=0, donate: bool = False):
+    """Fused uplink + aggregation: ``sum_c weights[c] * x_hat[c]`` in one pass.
+
+    The hot-path twin of :func:`transmit_batch` followed by
+    ``aggregation.fedsgd_aggregate_batch``: on the kernel path
+    (``cfg.use_kernel``) the weighted sum accumulates *inside* the Pallas
+    grid over the client axis and the per-client demapped payload never
+    materializes in HBM — only the ``(N,)`` f32 aggregate and the per-client
+    bit-error side-output come back. Bit-identical to the layered
+    composition (same kernel rows, same scan-shaped accumulation; pinned by
+    ``tests/test_fused_aggregate.py``).
+
+    Args:
+      x: ``(num_clients, N)`` payload matrix.
+      key / cfg / snr_db / client_offset: as :func:`transmit_batch` — the
+        fold_in key schedule is shared, so the per-client channel
+        realizations are exactly ``transmit_batch``'s.
+      weights: ``(num_clients,)`` aggregation weights, applied as given —
+        pass them through :func:`repro.core.aggregation.normalize_weights`
+        first (``fedsgd_aggregate_batch`` normalizes the same way).
+      donate: release the ``x`` buffer into the launch on backends that
+        honour donation (the uplink payload is dead after transmission).
+
+    Returns:
+      ``(agg, stats)``: the ``(N,)`` float32 weighted aggregate and
+      per-client :class:`TxStats` (``(num_clients,)`` fields — BER reporting
+      survives the fusion via the kernel's error side-output).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(
+            f"transmit_batch_aggregate wants (num_clients, N); got {x.shape}")
+    num_clients = x.shape[0]
+    snr_vec = _resolve_batch_snr(cfg, num_clients, snr_db)
+    keys = client_keys(key, num_clients, client_offset)
+    return _batch_aggregate_with_keys(x, keys, cfg, snr_vec, weights,
+                                      donate=donate)
+
+
+def transmit_batch_adaptive_aggregate(x: jax.Array, key: jax.Array, cfgs,
+                                      mode_idx, weights, *, snr_db=None,
+                                      client_offset=0, donate: bool = False):
+    """Mixed-mode fused uplink + aggregation (bucketed dispatch only).
+
+    :func:`transmit_batch_adaptive` with the aggregation folded into each
+    mode bucket: bucket ``m`` reduces its clients to one weighted partial
+    (kernel accumulator on ``use_kernel`` rows) and the partials add in
+    increasing mode-index order. That bucket regrouping is the *documented*
+    summation order — on a single-mode cohort it degenerates to the plain
+    client-order scan and the result is bit-identical to
+    :func:`transmit_batch_aggregate`. Needs a concrete ``mode_idx`` (the
+    select lowering has no kernel rows and nothing to fuse); ``weights``
+    must be pre-normalized globally (before the bucket split — per-bucket
+    renormalization would change the estimator).
+
+    Returns ``(agg (N,) float32, stats)``; ``stats.mode_idx`` holds the
+    per-client mode vector, stats fields are in client order.
+    """
+    x, cfgs, mode_arr, snr_vec, keys, _ = _adaptive_prologue(
+        x, key, cfgs, mode_idx, snr_db, client_offset, "bucketed",
+        "transmit_batch_adaptive_aggregate")
+    agg, stats = _bucketed_adaptive_aggregate(x, keys, cfgs, mode_arr,
+                                              snr_vec, weights, donate)
+    stats.mode_idx = jnp.asarray(mode_arr, jnp.int32)
+    return agg, stats
 
 
 def transmit_pytree(tree: Any, key: jax.Array, cfg: TransportConfig):
@@ -882,6 +1142,51 @@ def transmit_pytree_batch_adaptive(tree: Any, key: jax.Array, cfgs, mode_idx,
     flat_hat, stats = transmit_batch_adaptive(
         flat, key, cfgs, mode_idx, snr_db=snr_db, dispatch=dispatch)
     return _unflatten_client_tree(flat_hat, spec), stats
+
+
+def _unflatten_aggregate_tree(flat_agg: jax.Array, spec) -> Any:
+    """Restore an aggregated ``(D,)`` payload to the client-tree structure
+    with the leading client axis reduced away (leaf ``(C, ...)`` -> ``(...)``).
+    The aggregate stays float32 regardless of leaf dtype — it feeds the f32
+    optimizer update, and a bf16 round-trip would throw away accumulator
+    precision the fused kernel just paid for."""
+    leaves, treedef, sizes = spec
+    out, off = [], 0
+    for leaf, size in zip(leaves, sizes):
+        out.append(flat_agg[off : off + size].reshape(leaf.shape[1:]))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def transmit_pytree_batch_aggregate(tree: Any, key: jax.Array,
+                                    cfg: TransportConfig, weights, *,
+                                    snr_db=None, donate: bool = False):
+    """Pytree front-end of :func:`transmit_batch_aggregate`.
+
+    Flattens the ``(num_clients, ...)``-leaved payload tree into one
+    ``(C, D)`` matrix, runs the fused uplink+aggregation, and restores the
+    aggregate to the tree structure with the client axis reduced away —
+    the shape ``algo.apply`` expects from the layered
+    ``fedsgd_aggregate_batch`` tail.
+    """
+    flat, spec = _flatten_client_tree(tree)
+    agg, stats = transmit_batch_aggregate(
+        flat, key, cfg, weights, snr_db=snr_db, donate=donate)
+    return _unflatten_aggregate_tree(agg, spec), stats
+
+
+def transmit_pytree_batch_adaptive_aggregate(tree: Any, key: jax.Array, cfgs,
+                                             mode_idx, weights, *,
+                                             snr_db=None,
+                                             donate: bool = False):
+    """Pytree front-end of :func:`transmit_batch_adaptive_aggregate` — the
+    entry point the scenario-driven fused FL rounds feed each round's
+    gradients through (bucketed dispatch, globally pre-normalized weights).
+    """
+    flat, spec = _flatten_client_tree(tree)
+    agg, stats = transmit_batch_adaptive_aggregate(
+        flat, key, cfgs, mode_idx, weights, snr_db=snr_db, donate=donate)
+    return _unflatten_aggregate_tree(agg, spec), stats
 
 
 def _broadcast_payload(x: jax.Array, num_clients: int) -> jax.Array:

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.compress import framing as framing_lib
 from repro.compress import sparsify as sparsify_lib
+from repro.core import aggregation as aggregation_lib
 from repro.core import keylanes
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
@@ -166,15 +167,16 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                  seed: int = 0, eval_every: int = 2,
                  timings: latency_lib.PhyTimings | None = None,
                  scenario=None, adaptive_dispatch: str = "bucketed",
-                 downlink=None, compression=None, ledger=None, trace=None,
+                 downlink=None, compression=None,
+                 fused_aggregate: bool = False, ledger=None, trace=None,
                  phase_timers=None):
         super().__init__(
             algorithm, transport_cfg, client_x, client_y, test_x, test_y,
             n_rounds=n_rounds, seed=seed, eval_every=eval_every,
             timings=timings, scenario=scenario,
             adaptive_dispatch=adaptive_dispatch, downlink=downlink,
-            compression=compression, ledger=ledger,
-            phase_timers=phase_timers)
+            compression=compression, fused_aggregate=fused_aggregate,
+            ledger=ledger, phase_timers=phase_timers)
         # Perfetto trace sink (repro.obs.trace): a path or a TraceRecorder.
         # Like the ledger, a pure observer of host values the event loop
         # already computed.
@@ -184,6 +186,16 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
         if not 1 <= self.buffer_k <= M:
             raise ValueError(
                 f"buffer_k must be in [1, {M}], got {self.buffer_k}")
+        if self.fused_aggregate and self.buffer_k != M:
+            # With one full wave per aggregation, every buffered update has
+            # staleness 0 and the aggregation weights are known at dispatch
+            # — the precondition for folding the weighted sum into the wave's
+            # transport pass. A partial buffer mixes waves of different
+            # staleness, whose weights only exist at aggregation time.
+            raise ValueError(
+                "fused_aggregate=True needs buffer_k == num_clients "
+                f"({M}): partial buffers weight updates by staleness at "
+                "aggregation time, after the fused transport pass")
         if staleness not in STALENESS_KINDS:
             raise ValueError(
                 f"staleness must be one of {STALENESS_KINDS}, got "
@@ -299,6 +311,28 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
 
             self._wave_plain = wave_plain
 
+            if self.fused_aggregate:
+
+                @jax.jit
+                def wave_plain_fused(params, xb, yb, key, member):
+                    # Fused wave: uplink + weighted aggregation in one
+                    # transport pass. buffer_k == M guarantees this wave is
+                    # the whole next aggregation (staleness 0), so the
+                    # weights — the normalized member mask — are known now.
+                    dstats = None
+                    if dl is None:
+                        payload = algo.payload(params, xb, yb)
+                    else:
+                        recv, dstats = transport_lib.transmit_pytree_broadcast(
+                            params, key, self.dl_cfg, M)
+                        payload = algo.payload_from(recv, xb, yb)
+                    w = aggregation_lib.normalize_weights(member)
+                    agg, stats = transport_lib.transmit_pytree_batch_aggregate(
+                        payload, key, tcfg, w, donate=True)
+                    return agg, stats, dstats
+
+                self._wave_plain_fused = wave_plain_fused
+
             if comp is not None:
 
                 @jax.jit
@@ -394,6 +428,44 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
             return hat, stats, lstate, rnd, dstats, new_est
 
         self._wave_link_bucketed = wave_link_bucketed
+
+        if self.fused_aggregate:
+            fused_weights = jax.jit(
+                lambda member, active: aggregation_lib.normalize_weights(
+                    member * active))
+
+            def wave_link_bucketed_fused(params, xb, yb, key, lstate,
+                                         prev_mode, prev_est, member):
+                # Fused bucketed wave: dropped and non-member clients still
+                # transmit (mask fodder, exactly as the layered wave) but
+                # fold into the accumulator with weight 0; only members that
+                # will actually arrive carry weight, and with buffer_k == M
+                # those are the whole next aggregation (staleness 0).
+                k_link, k_tx = jax.random.split(key)
+                lstate, rnd, new_est = link_round_obs(lstate, prev_mode,
+                                                      prev_est, k_link,
+                                                      member)
+                mode_np = np.asarray(rnd.mode)
+                dstats = None
+                if dl is None:
+                    payload = payload_shared(params, xb, yb)
+                else:
+                    dl_mode = None
+                    if dl.adaptive:
+                        dl_mode = np.asarray(self._downlink_modes(
+                            np.asarray(rnd.est_db)))
+                    recv, dstats = self._broadcast_scenario(
+                        params, k_tx, rnd, dl_mode=dl_mode,
+                        dispatch="bucketed")
+                    payload = payload_per_client(recv, xb, yb)
+                agg, stats = \
+                    transport_lib.transmit_pytree_batch_adaptive_aggregate(
+                        payload, k_tx, driver.mode_cfgs, mode_np,
+                        fused_weights(member, rnd.active),
+                        snr_db=rnd.snr_db, donate=True)
+                return agg, stats, lstate, rnd, dstats, new_est
+
+            self._wave_link_bucketed_fused = wave_link_bucketed_fused
 
         if comp is None:
             return
@@ -522,9 +594,13 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
             with tm.scope("sample"):
                 xb, yb = algo.sample(rng, self.client_x, self.client_y)
             rnd = None
+            agg = hat = None
             if driver is None:
                 with tm.scope("wave"):
-                    if comp is None:
+                    if self.fused_aggregate:
+                        agg, stats, dstats = self._wave_plain_fused(
+                            params, xb, yb, rk, member)
+                    elif comp is None:
                         hat, stats, dstats = self._wave_plain(
                             params, xb, yb, rk)
                     else:
@@ -541,7 +617,12 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                 active = member
             else:
                 with tm.scope("wave"):
-                    if comp is None:
+                    if self.fused_aggregate:
+                        (agg, stats, self.lstate, rnd, dstats,
+                         self.prev_est) = self._wave_link_bucketed_fused(
+                            params, xb, yb, rk, self.lstate, self.prev_mode,
+                            self.prev_est, member)
+                    elif comp is None:
                         step = (self._wave_link_bucketed
                                 if self.dispatch == "bucketed"
                                 else self._wave_link)
@@ -610,7 +691,7 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
             rec.t_event = t_now
             self._finish_record(res, rec, stats)
             waves[next_wave] = {
-                "hat": hat, "version": version,
+                "hat": hat, "agg": agg, "version": version,
                 "arrived": np.zeros(M, np.float32),
                 "pending": pending, "gaps": gaps,
             }
@@ -621,55 +702,73 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
             """Fold the buffer into the model: one aggregation = one model
             version. Entries iterate in wave-id order (arrival-order
             invariant); the degenerate driver-less buffer takes the
-            synchronous engine's ``jnp.mean`` path."""
+            synchronous engine's ``jnp.mean`` path. Fused runs hold exactly
+            one wave (buffer_k == M) whose transport pass already produced
+            the aggregate — only the apply tail runs here."""
             nonlocal params, aux, version, buffered
-            entries = []
-            for w in sorted(waves):
-                info = waves[w]
-                mask = info["arrived"]
-                if not mask.any():
-                    continue
-                om = float(staleness_weight(
-                    version - info["version"], self.staleness,
-                    self.staleness_alpha))
-                entries.append((w, info["hat"],
-                                jnp.asarray(mask * np.float32(om)), mask, om))
-            if obs_events:
-                folded = sum(int(mask.sum()) for _, _, _, mask, _ in entries)
-                self._emit_event(obs_records_lib.EventRecord(
-                    t=t_now, kind="aggregate", version=version,
-                    value=float(folded)))
-                self._emit_event(obs_records_lib.EventRecord(
-                    t=t_now, kind="buffer", value=0.0))
-            uniform_full = (
-                len(entries) == 1 and entries[0][4] > 0
-                and bool(entries[0][3].all()))
-            if not entries:
-                # Every member of the flushed wave dropped out before the
-                # uplink: the synchronous engine still applies the (zero)
-                # aggregate and counts the round, so mirror its arithmetic
-                # — zero weights through the weighted tail.
+            if self.fused_aggregate:
                 w = max(waves)
-                params, aux = self._agg_apply_one(
-                    params, aux, waves[w]["hat"],
-                    jnp.zeros(M, jnp.float32))
-            elif driver is None and uniform_full:
-                params, aux = self._agg_apply_mean(params, aux,
-                                                   entries[0][1])
-            elif len(entries) == 1:
-                params, aux = self._agg_apply_one(params, aux,
-                                                  entries[0][1],
-                                                  entries[0][2])
-            else:
-                agg = weighted_buffer_mean(
-                    [(w, hat, wvec) for w, hat, wvec, _, _ in entries])
-                params, aux = self._apply_only(params, aux, agg)
-            for w, *_ in entries:
-                waves[w]["arrived"][:] = 0.0
-            for w in [w for w, info in waves.items()
-                      if info["pending"] == 0 and not info["arrived"].any()]:
+                info = waves[w]
+                if obs_events:
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_now, kind="aggregate", version=version,
+                        value=float(info["arrived"].sum())))
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_now, kind="buffer", value=0.0))
+                params, aux = self._apply_only(params, aux, info["agg"])
                 del waves[w]
-            buffered = 0
+                buffered = 0
+            else:
+                entries = []
+                for w in sorted(waves):
+                    info = waves[w]
+                    mask = info["arrived"]
+                    if not mask.any():
+                        continue
+                    om = float(staleness_weight(
+                        version - info["version"], self.staleness,
+                        self.staleness_alpha))
+                    entries.append((w, info["hat"],
+                                    jnp.asarray(mask * np.float32(om)),
+                                    mask, om))
+                if obs_events:
+                    folded = sum(
+                        int(mask.sum()) for _, _, _, mask, _ in entries)
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_now, kind="aggregate", version=version,
+                        value=float(folded)))
+                    self._emit_event(obs_records_lib.EventRecord(
+                        t=t_now, kind="buffer", value=0.0))
+                uniform_full = (
+                    len(entries) == 1 and entries[0][4] > 0
+                    and bool(entries[0][3].all()))
+                if not entries:
+                    # Every member of the flushed wave dropped out before
+                    # the uplink: the synchronous engine still applies the
+                    # (zero) aggregate and counts the round, so mirror its
+                    # arithmetic — zero weights through the weighted tail.
+                    w = max(waves)
+                    params, aux = self._agg_apply_one(
+                        params, aux, waves[w]["hat"],
+                        jnp.zeros(M, jnp.float32))
+                elif driver is None and uniform_full:
+                    params, aux = self._agg_apply_mean(params, aux,
+                                                       entries[0][1])
+                elif len(entries) == 1:
+                    params, aux = self._agg_apply_one(params, aux,
+                                                      entries[0][1],
+                                                      entries[0][2])
+                else:
+                    agg = weighted_buffer_mean(
+                        [(w, hat, wvec) for w, hat, wvec, _, _ in entries])
+                    params, aux = self._apply_only(params, aux, agg)
+                for w, *_ in entries:
+                    waves[w]["arrived"][:] = 0.0
+                for w in [w for w, info in waves.items()
+                          if info["pending"] == 0
+                          and not info["arrived"].any()]:
+                    del waves[w]
+                buffered = 0
             r = version
             version += 1
             if r % self.eval_every == 0 or r == self.n_rounds - 1:
@@ -742,6 +841,7 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
                     seed: int = 0, eval_every: int = 2, timings=None,
                     scenario=None, adaptive_dispatch: str = "bucketed",
                     downlink=None, compression=None,
+                    fused_aggregate: bool = False,
                     buffer_k: int | None = None,
                     staleness: str = "constant",
                     staleness_alpha: float = 0.5,
@@ -766,8 +866,8 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
         staleness_alpha=staleness_alpha, compute=compute, arrival=arrival,
         seed=seed, eval_every=eval_every, timings=timings, scenario=scenario,
         adaptive_dispatch=adaptive_dispatch, downlink=downlink,
-        compression=compression, ledger=ledger, trace=trace,
-        phase_timers=phase_timers,
+        compression=compression, fused_aggregate=fused_aggregate,
+        ledger=ledger, trace=trace, phase_timers=phase_timers,
     ).run()
 
 
@@ -777,6 +877,7 @@ def run_fedavg_buffered(cfg, transport_cfg, client_x, client_y, test_x,
                         seed: int = 0, eval_every: int = 2, timings=None,
                         scenario=None, adaptive_dispatch: str = "bucketed",
                         downlink=None, compression=None,
+                        fused_aggregate: bool = False,
                         buffer_k: int | None = None,
                         staleness: str = "constant",
                         staleness_alpha: float = 0.5,
@@ -794,6 +895,6 @@ def run_fedavg_buffered(cfg, transport_cfg, client_x, client_y, test_x,
         staleness_alpha=staleness_alpha, compute=compute, arrival=arrival,
         seed=seed, eval_every=eval_every, timings=timings, scenario=scenario,
         adaptive_dispatch=adaptive_dispatch, downlink=downlink,
-        compression=compression, ledger=ledger, trace=trace,
-        phase_timers=phase_timers,
+        compression=compression, fused_aggregate=fused_aggregate,
+        ledger=ledger, trace=trace, phase_timers=phase_timers,
     ).run()

@@ -65,6 +65,7 @@ import numpy as np
 
 from repro.compress import framing as framing_lib
 from repro.compress import sparsify as sparsify_lib
+from repro.core import aggregation as aggregation_lib
 from repro.core import keylanes
 from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
@@ -445,8 +446,8 @@ class RoundEngine:
                  eval_every: int = 2,
                  timings: latency_lib.PhyTimings | None = None,
                  scenario=None, adaptive_dispatch: str = "bucketed",
-                 downlink=None, compression=None, ledger=None,
-                 phase_timers=None):
+                 downlink=None, compression=None, fused_aggregate: bool = False,
+                 ledger=None, phase_timers=None):
         self.algo = algorithm
         self.client_x, self.client_y = client_x, client_y
         self.test_x, self.test_y = test_x, test_y
@@ -526,6 +527,31 @@ class RoundEngine:
             # zeros) so the jitted round signatures stay uniform.
             self._ef_residual = jnp.zeros(
                 (self.num_clients, self._comp_dim), jnp.float32)
+
+        # Fused-aggregate fast path: the uplink's weighted sum folds into
+        # the transport (in-kernel accumulator on use_kernel rows, scan
+        # fallback elsewhere) — per-client demapped payloads never land in
+        # HBM. The fused round is pinned bit-identical to the layered
+        # fedsgd_aggregate-over-transmit_batch composition, so anything
+        # that must touch per-client rows *between* demap and aggregate is
+        # incompatible and rejected here rather than silently layered.
+        self.fused_aggregate = bool(fused_aggregate)
+        if self.fused_aggregate:
+            if self.compression is not None:
+                raise ValueError(
+                    "fused_aggregate=True is incompatible with a compressed "
+                    "uplink: the sparse path must scatter per-client "
+                    "coordinates before aggregating")
+            if getattr(algorithm, "scale_mode", "none") == "max_abs":
+                raise ValueError(
+                    "fused_aggregate=True is incompatible with "
+                    "scale_mode='max_abs': the per-client descale runs "
+                    "between demap and aggregate")
+            if self.driver is not None and self.dispatch != "bucketed":
+                raise ValueError(
+                    "fused_aggregate=True needs adaptive_dispatch="
+                    "'bucketed' for scenario runs — the select lowering "
+                    "has no kernel rows to fuse into")
 
         self._build_round_fns()
         if self.driver is not None:
@@ -654,6 +680,35 @@ class RoundEngine:
             return params, aux, stats, dstats
 
         self._round_step = round_step
+
+        if self.fused_aggregate:
+            # Uniform cohort weights, normalized once at build time (every
+            # round reuses the same device constant, so all rounds share one
+            # weight realization with the layered fedsgd_aggregate_batch
+            # twin). Donation of the payload buffer happens inside the jit
+            # boundary here (a single fused program — XLA already reuses
+            # the buffer; the flag matters at the bucketed host-level
+            # launches).
+            uniform_w = aggregation_lib.normalize_weights(
+                jnp.ones((M,), jnp.float32))
+
+            @jax.jit
+            def round_step_fused(params, aux, xb, yb, key):
+                # Driver-less fused round: modulate -> channel -> demap ->
+                # accumulate in one transport pass; no per-client hat tree.
+                dstats = None
+                if dl is None:
+                    payload = algo.payload(params, xb, yb)
+                else:
+                    recv, dstats = transport_lib.transmit_pytree_broadcast(
+                        params, key, self.dl_cfg, M)
+                    payload = algo.payload_from(recv, xb, yb)
+                agg, stats = transport_lib.transmit_pytree_batch_aggregate(
+                    payload, key, tcfg, uniform_w, donate=True)
+                params, aux = algo.apply(params, aux, agg)
+                return params, aux, stats, dstats
+
+            self._round_step = round_step_fused
 
         def _sel_keys(key):
             # rand-k selection keys ride the per-client transport key on the
@@ -806,6 +861,48 @@ class RoundEngine:
 
         self._round_step_link_bucketed = round_step_link_bucketed
 
+        if self.fused_aggregate:
+            # Dropout-as-weights: dropped clients still transmit in their
+            # bucket (exactly as the layered bucketed round) but fold into
+            # the accumulator with weight 0; the normalization is global
+            # (before the bucket split), matching fedsgd_aggregate_batch
+            # over the cohort's active mask.
+            fused_weights = jax.jit(
+                lambda active: aggregation_lib.normalize_weights(active))
+            apply_agg = jax.jit(
+                lambda params, aux, agg: algo.apply(params, aux, agg))
+
+            def round_step_link_bucketed_fused(params, aux, xb, yb, key,
+                                               lstate, prev_mode, prev_est):
+                # Bucketed fused round: link step syncs the mode vector to
+                # the host, each mode bucket runs uplink+aggregate in one
+                # pass (kernel accumulator on use_kernel rows), partials add
+                # in mode order, and only the apply tail is jitted.
+                k_link, k_tx = jax.random.split(key)
+                lstate, rnd = link_round(lstate, prev_mode, prev_est, k_link)
+                mode_np = np.asarray(rnd.mode)
+                dstats = None
+                if dl is None:
+                    payload = payload_shared(params, xb, yb)
+                else:
+                    dl_mode = None
+                    if dl.adaptive:
+                        dl_mode = np.asarray(self._downlink_modes(
+                            np.asarray(rnd.est_db)))
+                    recv, dstats = self._broadcast_scenario(
+                        params, k_tx, rnd, dl_mode=dl_mode,
+                        dispatch="bucketed")
+                    payload = payload_per_client(recv, xb, yb)
+                agg, stats = \
+                    transport_lib.transmit_pytree_batch_adaptive_aggregate(
+                        payload, k_tx, driver.mode_cfgs, mode_np,
+                        fused_weights(rnd.active), snr_db=rnd.snr_db,
+                        donate=True)
+                params, aux = apply_agg(params, aux, agg)
+                return params, aux, stats, lstate, rnd, dstats
+
+            self._round_step_link_bucketed = round_step_link_bucketed_fused
+
         if comp is None:
             return
 
@@ -957,6 +1054,12 @@ class RoundEngine:
             man["downlink"] = dataclasses.asdict(self.downlink)
         if self.compression is not None:
             man["compression"] = dataclasses.asdict(self.compression)
+        if self.fused_aggregate:
+            # Re-derive (rather than add an unconditional fingerprint arg)
+            # so every pre-existing layered run keeps its fingerprint.
+            man["fused_aggregate"] = True
+            man["fingerprint"] = obs_ledger_lib.config_fingerprint(
+                man["fingerprint"], "fused_aggregate")
         man["provenance"] = obs_ledger_lib.provenance()
         return man
 

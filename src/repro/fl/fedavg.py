@@ -50,6 +50,7 @@ def run_fedavg(
     adaptive_dispatch: str = "bucketed",
     downlink=None,
     compression=None,
+    fused_aggregate: bool = False,
     ledger=None,
     phase_timers=None,
 ) -> FLResult:
@@ -61,7 +62,9 @@ def run_fedavg(
     ones are ``local_steps`` / ``batch_per_step`` (the local schedule) and
     ``scale_mode`` (the adaptive per-client delta scaling above). See the
     module and :mod:`repro.fl.engine` docstrings for scenarios, dispatches,
-    and the downlink leg.
+    and the downlink leg. ``fused_aggregate=True`` (the fused round hot
+    path) requires ``scale_mode='none'`` — the ``max_abs`` descale runs
+    between demap and aggregate and cannot fold into the kernel.
     """
     algo = engine_lib.FedAvg(cfg, local_steps=local_steps,
                              batch_per_step=batch_per_step,
@@ -70,6 +73,7 @@ def run_fedavg(
         algo, transport_cfg, client_x, client_y, test_x, test_y,
         n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
-        downlink=downlink, compression=compression, ledger=ledger,
+        downlink=downlink, compression=compression,
+        fused_aggregate=fused_aggregate, ledger=ledger,
         phase_timers=phase_timers,
     ).run()

@@ -60,6 +60,7 @@ def run_fl(
     adaptive_dispatch: str = "bucketed",
     downlink=None,
     compression=None,
+    fused_aggregate: bool = False,
     ledger=None,
     phase_timers=None,
 ) -> FLResult:
@@ -87,6 +88,11 @@ def run_fl(
         sparse wire format (defaults to the scenario's ``compression``
         field; ``None`` = dense uplinks, bit-identical to the
         pre-compression engine).
+      fused_aggregate: fold the PS aggregation into the uplink transport
+        (in-kernel accumulator on ``use_kernel`` configs) — the fused round
+        hot path, bit-identical to the layered
+        ``fedsgd_aggregate``-over-``transmit_batch`` composition; see
+        :mod:`repro.fl.engine`.
       ledger: optional JSONL run-ledger sink — a path or a
         ``repro.obs.RunLedger``. Writes a run manifest, per-round records,
         eval points, and a summary; changes no numeric result.
@@ -101,6 +107,7 @@ def run_fl(
         algo, transport_cfg, client_x, client_y, test_x, test_y,
         n_rounds=n_rounds, seed=seed, eval_every=eval_every, timings=timings,
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
-        downlink=downlink, compression=compression, ledger=ledger,
+        downlink=downlink, compression=compression,
+        fused_aggregate=fused_aggregate, ledger=ledger,
         phase_timers=phase_timers,
     ).run()

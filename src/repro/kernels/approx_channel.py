@@ -40,7 +40,11 @@ from jax.experimental import pallas as pl
 
 from repro.kernels import ref as _ref
 
-__all__ = ["approx_channel_pallas", "approx_channel_batch_pallas"]
+__all__ = [
+    "approx_channel_pallas",
+    "approx_channel_batch_pallas",
+    "approx_channel_batch_aggregate_pallas",
+]
 
 _U32 = jnp.uint32
 
@@ -161,6 +165,229 @@ def _make_batch_kernel(masked: bool, **params):
             err_ref[0, 0] = jnp.int32(0)
 
     return kernel
+
+
+def _aggregate_tile_body(
+    tile,
+    w_ref,
+    seed_ref,
+    noise_ref,
+    gain_ref,
+    x_ref,
+    agg_ref,
+    err_ref,
+    *,
+    bits_per_symbol: int,
+    fading: str,
+    fade_block: int,
+    clamp_mask: int,
+    block_words: int,
+    word_bits: int,
+    valid_words: int,
+):
+    """Per-(tile, client) body of the fused-aggregate grid.
+
+    Identical PHY chain to ``_batch_tile_body``, but instead of writing the
+    demapped payload back to HBM it folds ``w * x_hat`` into the f32
+    accumulator block — a separate multiply then add, never an fma, so the
+    sum is bit-identical to ``aggregation.fedsgd_aggregate_batch`` over the
+    batched kernel's rows. Bit errors are masked to the first
+    ``valid_words`` global words in-kernel (transmitted pad words are
+    exactly 0, so this equals the layered path's pad-error subtraction).
+    """
+    s_per_word = word_bits // bits_per_symbol
+    base_sym = tile.astype(_U32) * _U32(block_words * s_per_word)
+
+    x = x_ref[0]
+    if word_bits == 16:
+        u = jax.lax.bitcast_convert_type(x, jnp.uint16).astype(_U32)
+    else:
+        u = jax.lax.bitcast_convert_type(x, _U32)
+    u_hat = _ref.channel_tile(
+        u,
+        seed_ref[0],
+        base_sym,
+        noise_ref[0],
+        gain_ref[0],
+        bits_per_symbol=bits_per_symbol,
+        fading=fading,
+        fade_block=fade_block,
+        word_bits=word_bits,
+    )
+    u_hat = u_hat & _U32(clamp_mask)
+    if word_bits == 16:
+        x_hat = jax.lax.bitcast_convert_type(
+            u_hat.astype(jnp.uint16), jnp.bfloat16).astype(jnp.float32)
+    else:
+        x_hat = jax.lax.bitcast_convert_type(u_hat, jnp.float32)
+    agg_ref[0] = agg_ref[0] + w_ref[0] * x_hat
+
+    # 2-D iota (1-D iota does not lower on TPU), global word index per lane.
+    local = jax.lax.broadcasted_iota(jnp.int32, (1, block_words), 1)
+    gidx = tile * block_words + local
+    flips = _ref._popcount(u ^ u_hat)[None, :]
+    err_ref[0, 0] = jnp.sum(
+        jnp.where(gidx < valid_words, flips, _U32(0))).astype(jnp.int32)
+
+
+def _make_aggregate_kernel(masked: bool, **params):
+    """Fused-aggregate grid body over a ``(tiles, clients)`` grid.
+
+    The client axis is innermost, so the accumulator's output block
+    (``lambda ti, ci: (0, ti)``) is revisited across the whole client sweep
+    of a tile — it stays resident in VMEM and is flushed to HBM once per
+    tile, which is what removes the per-client payload round-trip. Client 0
+    zero-initializes the block; the masked variant skips the PHY chain for
+    rows at or beyond ``num_active`` (their weight never touches the sum).
+    """
+    def body(tile, client, na_ref, w_ref, seed_ref, noise_ref, gain_ref,
+             x_ref, agg_ref, err_ref):
+        @pl.when(client == 0)
+        def _():
+            agg_ref[0] = jnp.zeros_like(agg_ref[0])
+
+        if na_ref is None:
+            _aggregate_tile_body(tile, w_ref, seed_ref, noise_ref, gain_ref,
+                                 x_ref, agg_ref, err_ref, **params)
+            return
+
+        active = client < na_ref[0]
+
+        @pl.when(active)
+        def _():
+            _aggregate_tile_body(tile, w_ref, seed_ref, noise_ref, gain_ref,
+                                 x_ref, agg_ref, err_ref, **params)
+
+        @pl.when(jnp.logical_not(active))
+        def _():
+            err_ref[0, 0] = jnp.int32(0)
+
+    if not masked:
+        def kernel(w_ref, seed_ref, noise_ref, gain_ref, x_ref,
+                   agg_ref, err_ref):
+            body(pl.program_id(0), pl.program_id(1), None, w_ref, seed_ref,
+                 noise_ref, gain_ref, x_ref, agg_ref, err_ref)
+
+        return kernel
+
+    def kernel(na_ref, w_ref, seed_ref, noise_ref, gain_ref, x_ref,
+               agg_ref, err_ref):
+        body(pl.program_id(0), pl.program_id(1), na_ref, w_ref, seed_ref,
+             noise_ref, gain_ref, x_ref, agg_ref, err_ref)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bits_per_symbol",
+        "fading",
+        "fade_block",
+        "clamp_mask",
+        "block_words",
+        "word_bits",
+        "valid_words",
+        "interpret",
+    ),
+)
+def approx_channel_batch_aggregate_pallas(
+    x: jax.Array,
+    seeds: jax.Array,
+    noise_powers: jax.Array,
+    large_scale_gains: jax.Array,
+    weights: jax.Array,
+    *,
+    bits_per_symbol: int = 2,
+    fading: str = "rayleigh",
+    fade_block: int = 64,
+    clamp_mask: int = 0xBFFFFFFF,
+    block_words: int = 1024,
+    word_bits: int = 32,
+    valid_words: int | None = None,
+    interpret: bool = True,
+    num_active=None,
+):
+    """Fused modulate -> channel -> demodulate -> accumulate, one launch.
+
+    Runs the same per-client PHY chain as ``approx_channel_batch_pallas``
+    but never materializes the ``(C, N)`` demapped payload in HBM: a
+    ``(tiles, clients)`` grid (client axis innermost) folds each client's
+    received tile into a single f32 accumulator block that is written once
+    per tile. HBM traffic drops from ``C*N`` wire words out + ``C*N`` f32
+    read back (plus the aggregation write) to ``N`` f32 out.
+
+    Args:
+      x: ``(C, N)`` f32 (or bf16 with ``word_bits=16``),
+        ``N % block_words == 0``.
+      seeds / noise_powers / large_scale_gains: ``(C,)`` per-client link
+        params, exactly as in ``approx_channel_batch_pallas``.
+      weights: ``(C,)`` f32 aggregation weights (pre-normalized by the
+        caller; masked rows' weights are ignored).
+      valid_words: count only bit errors in the first ``valid_words`` words
+        of each row (``None`` = all of N). The accumulator always covers
+        all N words — callers slice off their padding.
+      num_active: optional scalar — rows at or beyond it skip the PHY chain
+        and contribute nothing to the sum (padded adaptive buckets).
+
+    Returns:
+      ``(agg (N,) float32, bit_errors (C,) int32)`` with
+      ``agg == sum_c weights[c] * x_hat[c]`` accumulated in client order,
+      bit-identical to ``fedsgd_aggregate_batch`` over the batched kernel.
+    """
+    c, n = x.shape
+    if n % block_words != 0:
+        raise ValueError(f"N={n} must be a multiple of block_words={block_words}")
+    tiles = n // block_words
+    if valid_words is None:
+        valid_words = n
+
+    masked = num_active is not None
+    kernel = _make_aggregate_kernel(
+        masked,
+        bits_per_symbol=bits_per_symbol,
+        fading=fading,
+        fade_block=fade_block,
+        clamp_mask=clamp_mask,
+        block_words=block_words,
+        word_bits=word_bits,
+        valid_words=valid_words,
+    )
+    wire = jnp.bfloat16 if word_bits == 16 else jnp.float32
+    client_scalar = pl.BlockSpec((1,), lambda ti, ci: (ci,))
+    in_specs = [
+        client_scalar,  # aggregation weight
+        client_scalar,  # seed
+        client_scalar,  # noise power
+        client_scalar,  # large-scale gain
+        pl.BlockSpec((1, block_words), lambda ti, ci: (ci, ti)),
+    ]
+    operands = [
+        weights.reshape(c).astype(jnp.float32),
+        seeds.reshape(c).astype(_U32),
+        noise_powers.reshape(c).astype(jnp.float32),
+        large_scale_gains.reshape(c).astype(jnp.float32),
+        x.astype(wire),
+    ]
+    if masked:
+        in_specs.insert(0, pl.BlockSpec((1,), lambda ti, ci: (0,)))
+        operands.insert(
+            0, jnp.reshape(jnp.asarray(num_active, jnp.int32), (1,)))
+    agg, errs = pl.pallas_call(
+        kernel,
+        grid=(tiles, c),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, block_words), lambda ti, ci: (0, ti)),
+            pl.BlockSpec((1, 1), lambda ti, ci: (ci, ti)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((c, tiles), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return agg[0], jnp.sum(errs, axis=1)
 
 
 @functools.partial(

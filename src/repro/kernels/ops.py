@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.approx_channel import (
+    approx_channel_batch_aggregate_pallas,
     approx_channel_batch_pallas,
     approx_channel_pallas,
 )
@@ -24,14 +25,26 @@ from repro.kernels.approx_channel import (
 __all__ = [
     "approx_channel",
     "approx_channel_batch",
+    "approx_channel_batch_aggregate",
     "approx_channel_transmit",
     "approx_channel_transmit_batch",
+    "approx_channel_transmit_batch_aggregate",
     "default_interpret",
+    "donation_supported",
 ]
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def donation_supported() -> bool:
+    """Whether ``donate_argnums`` actually releases buffers on this backend.
+
+    XLA CPU ignores donation (and warns); only gpu/tpu honour it, so the
+    ``donate=`` fast paths fall back to the plain jit twin elsewhere.
+    """
+    return jax.default_backend() in ("gpu", "tpu")
 
 
 @functools.partial(
@@ -144,14 +157,7 @@ def approx_channel_transmit(x: jax.Array, key: jax.Array, cfg, *, snr_db=None):
     return x_hat.astype(jnp.float32), stats
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "bits_per_symbol", "fading", "fade_block", "clamp_mask",
-        "block_words", "word_bits", "interpret",
-    ),
-)
-def approx_channel_batch(
+def _batch_impl(
     x: jax.Array,
     seeds: jax.Array,
     noise_powers,
@@ -195,8 +201,20 @@ def approx_channel_batch(
     return x_hat[:, :n], errs
 
 
+_BATCH_STATIC = (
+    "bits_per_symbol", "fading", "fade_block", "clamp_mask",
+    "block_words", "word_bits", "interpret",
+)
+approx_channel_batch = jax.jit(_batch_impl, static_argnames=_BATCH_STATIC)
+# Donated twin (see approx_channel_batch_aggregate below): the uplink payload
+# buffer is released into the launch on backends that honour donation.
+_batch_donated = jax.jit(
+    _batch_impl, static_argnames=_BATCH_STATIC, donate_argnums=(0,))
+
+
 def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg,
-                                  snr_db=None, *, num_active=None):
+                                  snr_db=None, *, num_active=None,
+                                  donate: bool = False):
     """Batched TransportConfig adapter behind ``transport.transmit_batch``.
 
     Args:
@@ -208,6 +226,8 @@ def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg,
       snr_db: optional ``(C,)`` per-client SNR; ``None`` = config scalar.
       num_active: optional scalar — compute only the first ``num_active``
         client rows (masked partial-batch grid for padded adaptive buckets).
+      donate: release the ``x`` buffer into the launch (donated jit twin) on
+        backends that honour donation.
 
     Returns ``(x_hat (C, N) float32, TxStats with (C,) fields)``.
     """
@@ -223,7 +243,9 @@ def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg,
     else:
         npow = channel_lib.noise_power_for(ch, snr_db)
     gains = jnp.full((c,), ch.large_scale_gain, jnp.float32)
-    x_hat, errs = approx_channel_batch(
+    batch_fn = (_batch_donated if donate and donation_supported()
+                else approx_channel_batch)
+    x_hat, errs = batch_fn(
         x,
         seeds,
         npow,
@@ -242,3 +264,112 @@ def approx_channel_transmit_batch(x: jax.Array, keys: jax.Array, cfg,
         ones * (n * wb), bits_on_air=ones * (n * wb),
     )
     return x_hat.astype(jnp.float32), stats
+
+
+def _batch_aggregate_impl(
+    x: jax.Array,
+    seeds: jax.Array,
+    noise_powers,
+    large_scale_gains,
+    weights,
+    *,
+    bits_per_symbol: int = 2,
+    fading: str = "rayleigh",
+    fade_block: int = 64,
+    clamp_mask: int = 0xBFFFFFFF,
+    block_words: int = 1024,
+    word_bits: int = 32,
+    interpret: bool = True,
+    num_active=None,
+):
+    """Fused batch + in-kernel weighted aggregation over the client axis.
+
+    Pads ``(C, N)`` payloads to a tile multiple and runs the aggregating
+    kernel: the per-client demapped payload never materializes in HBM — the
+    only payload-sized output is the f32 accumulator. Bit errors are masked
+    to the first ``N`` words *inside* the kernel (``valid_words``), so no
+    pad-error subtraction (which would need the per-client x_hat) happens
+    here. Returns ``(agg (N,) float32, bit_errors (C,) int32)``.
+    """
+    c, n = x.shape
+    pad = (-n) % block_words
+    wire = jnp.bfloat16 if word_bits == 16 else jnp.float32
+    xp = jnp.pad(x.astype(wire), ((0, 0), (0, pad)))
+    agg, errs = approx_channel_batch_aggregate_pallas(
+        xp,
+        jnp.asarray(seeds),
+        jnp.asarray(noise_powers, jnp.float32),
+        jnp.asarray(large_scale_gains, jnp.float32),
+        jnp.asarray(weights, jnp.float32),
+        bits_per_symbol=bits_per_symbol,
+        fading=fading,
+        fade_block=fade_block,
+        clamp_mask=clamp_mask,
+        block_words=block_words,
+        word_bits=word_bits,
+        valid_words=n,
+        interpret=interpret,
+        num_active=num_active,
+    )
+    return agg[:n], errs
+
+
+_AGG_STATIC = (
+    "bits_per_symbol", "fading", "fade_block", "clamp_mask",
+    "block_words", "word_bits", "interpret",
+)
+approx_channel_batch_aggregate = jax.jit(
+    _batch_aggregate_impl, static_argnames=_AGG_STATIC)
+# Donated twin: same impl, uplink payload buffer released to the output
+# allocator. Only meaningful at an outermost jit boundary on gpu/tpu
+# (donation_supported); callers pick between the twins.
+_batch_aggregate_donated = jax.jit(
+    _batch_aggregate_impl, static_argnames=_AGG_STATIC, donate_argnums=(0,))
+
+
+def approx_channel_transmit_batch_aggregate(
+        x: jax.Array, keys: jax.Array, cfg, snr_db, weights, *,
+        num_active=None, donate: bool = False):
+    """Batched TransportConfig adapter with in-kernel aggregation.
+
+    Same contract as ``approx_channel_transmit_batch`` except the per-client
+    demapped rows collapse to ``sum_c weights[c] * x_hat[c]`` inside the
+    kernel (weights are used as given — normalize first). ``donate=True``
+    releases the ``x`` buffer on backends that honour donation.
+
+    Returns ``(agg (N,) float32, TxStats with (C,) fields)``.
+    """
+    from repro.core import channel as channel_lib
+    from repro.core import transport as transport_lib
+
+    ch = cfg.channel
+    c, n = x.shape
+    seeds = jax.vmap(_seed_from_key)(keys)
+    wb, clamp_mask, k = _transport_kernel_params(cfg)
+    if snr_db is None:
+        npow = jnp.full((c,), ch.noise_power, jnp.float32)
+    else:
+        npow = channel_lib.noise_power_for(ch, snr_db)
+    gains = jnp.full((c,), ch.large_scale_gain, jnp.float32)
+    fn = (_batch_aggregate_donated if donate and donation_supported()
+          else approx_channel_batch_aggregate)
+    agg, errs = fn(
+        x,
+        seeds,
+        npow,
+        gains,
+        weights,
+        bits_per_symbol=k,
+        fading=ch.fading,
+        fade_block=ch.block_len,
+        clamp_mask=clamp_mask,
+        word_bits=wb,
+        interpret=default_interpret(),
+        num_active=num_active,
+    )
+    ones = jnp.ones((c,), jnp.float32)
+    stats = transport_lib.TxStats(
+        ones * (n * (wb // k)), ones, errs.astype(jnp.float32),
+        ones * (n * wb), bits_on_air=ones * (n * wb),
+    )
+    return agg, stats

@@ -33,6 +33,72 @@ LINK_BW = 50e9  # B/s per ICI link
 _COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
+_WIRE_BITS = {"float32": 32, "bfloat16": 16}
+
+
+def uplink_traffic(num_clients: int, *, bits_per_symbol: int = 2,
+                   wire_dtype: str = "float32",
+                   n_floats: int | None = None) -> dict:
+    """Analytic HBM bytes per payload float for the three uplink paths.
+
+    The layered jnp pipeline materializes every intermediate in HBM; per
+    payload float with ``wb``-bit wire words and ``n_sym = wb / k`` symbols
+    (``k = bits_per_symbol``):
+
+        wire words in+out (r/w each)      4 * wb/8
+        tx symbol indices, int32 (w+r)    8 * n_sym
+        complex64 channel stream (w+r)   16 * n_sym
+        equalized stream (read)           8 * n_sym
+        rx symbol indices, int32 (w+r)    8 * n_sym
+        ------------------------------------------
+        uplink total             wb/2 + 40 * n_sym   (= 656 B at QPSK f32)
+
+    The Pallas batch kernel keeps all of that in registers/VMEM: 4 B in +
+    4 B out per float. The fused-aggregate kernel also folds the PS mean
+    into the grid loop, writing each aggregate tile once for all C clients:
+    4 B in + 4/C B out (the per-client error counters are C * 4 B total —
+    negligible and ignored). A full *round* appends the aggregation pass
+    (read x_hat + amortized aggregate write = 4 + 4/C) to the unfused
+    paths. Each intermediate is counted for its actual passes; no cache
+    reuse is assumed, which if anything favours the layered baseline on a
+    real TPU where short-lived buffers may stay resident.
+
+    Returns bytes/float per implementation for one full round, ratios vs
+    the fused kernel, and — when ``n_floats`` is given — memory-bound
+    seconds per round on a TPU v5e chip (``HBM_BW``).
+    """
+    wb = _WIRE_BITS[wire_dtype]
+    c = float(num_clients)
+    n_sym = wb / bits_per_symbol
+    layered_uplink = wb / 2.0 + 40.0 * n_sym
+    agg_pass = 4.0 + 4.0 / c  # read x_hat + amortized aggregate write
+    bpf = {
+        "jnp_layered": layered_uplink + agg_pass,
+        "kernel_batch": 8.0 + agg_pass,
+        "kernel_fused": 4.0 + 4.0 / c,
+    }
+    out = {
+        "num_clients": num_clients,
+        "bits_per_symbol": bits_per_symbol,
+        "wire_dtype": wire_dtype,
+        "bytes_per_float": bpf,
+        "ratio_vs_fused": {k: v / bpf["kernel_fused"] for k, v in bpf.items()},
+    }
+    if n_floats is not None:
+        out["hbm_s"] = {k: num_clients * n_floats * v / HBM_BW
+                        for k, v in bpf.items()}
+    return out
+
+
+def transport_traffic(cfg, num_clients: int,
+                      n_floats: int | None = None) -> dict:
+    """:func:`uplink_traffic` with modulation order and wire dtype read off
+    a ``repro.core.transport.TransportConfig`` (the real config, not a
+    hard-coded QPSK/f32 assumption)."""
+    return uplink_traffic(num_clients,
+                          bits_per_symbol=cfg.scheme.bits_per_symbol,
+                          wire_dtype=cfg.wire_dtype, n_floats=n_floats)
+
 
 def n_active_params(cfg) -> float:
     """Active (per-token) parameter count, MoE-aware, incl. lm_head."""

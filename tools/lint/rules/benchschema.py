@@ -42,6 +42,8 @@ EXPECTED: dict[str, tuple[frozenset, ...]] = {
     "BENCH_fl_round.json": (frozenset({
         "snr_db", "clients", "rounds", "arms",
         "downlink_worse_than_uplink", "meta"}),),
+    "BENCH_kernel_throughput.json": (frozenset({
+        "clients", "n_floats", "arms", "roofline", "gates", "meta"}),),
     "BENCH_link_adaptation.json": (
         frozenset({"dispatch", "arms", "select_single_trace", "meta"}),
         frozenset({"dispatch", "meta"}),
