@@ -17,7 +17,7 @@ BENCH_ENV := $(if $(TCMALLOC),LD_PRELOAD=$(TCMALLOC)) \
         XLA_FLAGS="--xla_force_host_platform_device_count=1"
 
 .PHONY: test bench-smoke bench-link bench-fl bench-compress bench-async \
-        bench-obs bench-kernel docs-check lint
+        bench-obs bench-kernel bench-diff docs-check lint
 
 # Tier-1 verify (same command the CI driver runs).
 test:
@@ -76,6 +76,14 @@ bench-obs:
 bench-kernel:
 	$(BENCH_ENV) $(PY) -m benchmarks.run --only kernel
 	$(PY) -m tools.bench_schema BENCH_kernel_throughput.json
+
+# Bench-regression sentry: diff freshly-produced BENCH artifacts against
+# the committed baselines under benchmarks/baselines/ using the per-key
+# tolerance specs in benchmarks/baselines/tolerances.json; exits non-zero
+# on drift. Run after bench-kernel + bench-async (the gated artifacts).
+bench-diff:
+	$(PY) -m tools.bench_diff --against-baselines \
+		BENCH_kernel_throughput.json BENCH_async_fl.json
 
 # Fails if a public module (or public function/class) under
 # src/repro/{core,link,fl,compress,obs} or tools/ lacks a docstring.

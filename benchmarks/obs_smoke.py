@@ -1,23 +1,34 @@
-"""Observability smoke: ledger + Perfetto trace on a short buffered run.
+"""Observability smoke: ledger + trace + sketches on a short buffered run.
 
 Drives a 5-aggregation buffered FedSGD run on the ``metro-rush`` scenario
 with every sink attached — the JSONL run ledger, the Chrome/Perfetto trace
-recorder, and the phase timers — and gates on the acceptance axes of the
-obs layer:
+recorder, the phase timers, and the per-round distribution sketches — and
+gates on the acceptance axes of the obs layer:
 
 * the ledger schema-validates (``repro.obs.ledger.validate_ledger``) and
   its round records reproduce ``FLResult.link`` **bit-identically**;
+* every round record carries a ``sketches`` group (schema v2);
 * a twin run with no sinks attached produces the same accuracy / airtime /
   link numbers (observers must not perturb the run);
+* **overhead**: the sinks-on arm's wall clock is within 5% of the
+  sinks-off arm (plus a 0.5 s absolute slack absorbing the sketch
+  kernel's one-time jit compile) — both arms run after a shared compile
+  warmup so neither pays the training jit tax;
 * the exported trace is loadable Chrome trace-event JSON with at least 4
   distinct track types (waves, client compute/uplink spans, aggregations,
   buffer fill);
 * the phase timers saw every phase and split the first (compile) call out
-  of the steady state.
+  of the steady state;
+* **scale**: driving the link engine alone at 64 and 1024 clients with a
+  ``detail="sketch"`` ledger yields round lines whose structure (and size,
+  within formatting noise) is cohort-independent, while the run-level
+  sketch p50/p95/p99 of per-client BER and SNR match the exact values
+  within each bucket layout's documented error bound.
 
 Emits CSV lines + ``BENCH_obs.json`` (with the shared ``meta`` provenance
-block) and leaves ``BENCH_obs_ledger.jsonl`` / ``BENCH_obs_trace.json`` on
-disk for inspection (load the trace at ``https://ui.perfetto.dev``).
+block) and leaves ``BENCH_obs_ledger.jsonl`` / ``BENCH_obs_trace.json`` /
+``BENCH_obs_sketch_{64,1024}c.jsonl`` on disk for inspection (load the
+trace at ``https://ui.perfetto.dev``).
 Standalone: ``PYTHONPATH=src python -m benchmarks.obs_smoke``.
 """
 
@@ -27,20 +38,151 @@ import argparse
 import dataclasses
 import json
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from benchmarks import common
 from benchmarks.common import emit, fl_world
 from repro.configs.mnist_cnn import config as cnn_config
 from repro.core import channel as CH
+from repro.core import keylanes
 from repro.core import transport as T
 from repro.fl.async_engine import run_fl_buffered
 from repro.link import scenario as scenario_lib
-from repro.obs import PhaseTimers, TraceRecorder
+from repro.obs import PhaseTimers, RoundSketcher, Sketch, TraceRecorder
 from repro.obs import ledger as obs_ledger
+from repro.obs import records as obs_records
 
 JSON_PATH = "BENCH_obs.json"
 LEDGER_PATH = "BENCH_obs_ledger.jsonl"
 TRACE_PATH = "BENCH_obs_trace.json"
 MIN_TRACK_TYPES = 4  # waves + client spans + aggregations + buffer fill
+OVERHEAD_REL = 0.05  # sinks-on wall clock budget: 5% over sinks-off ...
+OVERHEAD_ABS_S = 0.5  # ... plus the sketch kernel's one-time compile
+SCALE_COHORTS = (64, 1024)
+SCALE_ROUNDS = 3
+SCALE_LEDGER_FMT = "BENCH_obs_sketch_{n}c.jsonl"
+
+
+def _sketch_scale_check(tcfg, scen, seed: int) -> dict:
+    """The constant-size-at-scale gate (link engine only, no training).
+
+    Drives ``ScenarioDriver`` rounds at each cohort size in
+    ``SCALE_COHORTS``, sketching synthetic-but-exactly-known per-client
+    uplink outcomes into a ``detail="sketch"`` ledger. Asserts: the ledger
+    validates; every round line has the same per-metric bucket-count
+    structure regardless of cohort size (and its byte size stays within
+    formatting noise); and the run-level sketch p50/p95/p99 of BER and SNR
+    agree with ``np.quantile(..., method="lower")`` of the exact values
+    within ``BucketLayout.error_bound()``.
+    """
+    driver = scenario_lib.ScenarioDriver(scen, tcfg)
+    structures, line_bytes, quantiles = {}, {}, {}
+    ber_bound = snr_bound = 0.0
+    for n in SCALE_COHORTS:
+        sk = RoundSketcher(n)
+        ber_lay, snr_lay = sk.layouts["ber"], sk.layouts["snr_db"]
+        ber_bound, snr_bound = ber_lay.error_bound(), snr_lay.error_bound()
+        path = SCALE_LEDGER_FMT.format(n=n)
+        exact_ber, exact_snr = [], []
+        with obs_ledger.RunLedger(path, detail="sketch") as led:
+            led.write_manifest({
+                "engine": "sketch-scale-check", "algorithm": "none",
+                "scenario": scen.name, "num_clients": n,
+                "n_rounds": SCALE_ROUNDS, "seed": seed,
+                "fingerprint": obs_ledger.config_fingerprint(
+                    scen, n, SCALE_ROUNDS, seed),
+                "provenance": obs_ledger.provenance()})
+            key = jax.random.PRNGKey(seed)
+            # Init + round keys ride indices [0, SCALE_ROUNDS] of the
+            # standalone root key; the guard pins the folded range inside
+            # one reserved lane of the round key space.
+            keylanes.check_range(0, SCALE_ROUNDS + 1)
+            keys = [jax.random.fold_in(key, i)
+                    for i in range(SCALE_ROUNDS + 1)]
+            state, mode, est = driver.init(keys[0], n)
+            for r in range(SCALE_ROUNDS):
+                rk = keys[r + 1]
+                state, rnd = driver.round(state, mode, est, rk)
+                mode, est = rnd.mode, rnd.est_db
+                # Synthetic but exactly-known uplink outcomes driven by
+                # the scenario's real SNR draw, clipped inside the BER
+                # bucket range so the exact-quantile comparison is well
+                # defined (no underflow-bucket saturation).
+                ber = jnp.clip(10.0 ** (-(rnd.snr_db + 25.0) / 10.0),
+                               1e-6, 1.0)
+                air = 0.01 * (1.0 + jnp.maximum(0.0, 30.0 - rnd.snr_db))
+                led.write_round(obs_records.RoundRecord(
+                    round=r, sketches=sk.round_group(
+                        rk, snr_db=rnd.snr_db, est_db=rnd.est_db, ber=ber,
+                        airtime_s=air, mode=rnd.mode, active=rnd.active)))
+                act = np.asarray(rnd.active) > 0
+                exact_ber.append(np.asarray(ber)[act])
+                exact_snr.append(np.asarray(rnd.snr_db))
+        problems = obs_ledger.validate_ledger(path)
+        if problems:
+            raise AssertionError(f"scale ledger {path}: {problems}")
+        sizes, struct = [], None
+        with open(path) as f:
+            for line in f:
+                obj = json.loads(line)
+                if obj.get("kind") != "round":
+                    continue
+                sizes.append(len(line))
+                shape = {m: len(g["counts"])
+                         for m, g in obj["sketches"].items()
+                         if m != "exemplars"}
+                if struct is None:
+                    struct = shape
+                elif shape != struct:
+                    raise AssertionError(
+                        f"{path}: sketch line structure varies per round")
+        structures[n] = struct
+        line_bytes[n] = max(sizes)
+        # Quantile accuracy vs the exact per-client values (BER is masked
+        # by activity like the sketch's eff mask; SNR is clipped to the
+        # layout range, matching the under/overflow -> lo/hi convention).
+        ber_sk = Sketch.from_dict(sk.summary()["ber"])
+        snr_sk = Sketch.from_dict(sk.summary()["snr_db"])
+        eb = np.concatenate(exact_ber)
+        es = np.clip(np.concatenate(exact_snr), snr_lay.lo, snr_lay.hi)
+        q = {}
+        for p in (0.5, 0.95, 0.99):
+            ber_exact = float(np.quantile(eb, p, method="lower"))
+            rel = abs(ber_sk.quantile(p) - ber_exact) / ber_exact
+            snr_exact = float(np.quantile(es, p, method="lower"))
+            ab = abs(snr_sk.quantile(p) - snr_exact)
+            q[f"p{int(p * 100)}"] = {"ber_rel_err": rel,
+                                     "snr_abs_err_db": ab}
+            # 1e-5 epsilon: a ranked value sitting exactly on a bucket
+            # edge can overshoot the analytic bound by the float32
+            # edge-rounding error (~1e-7 relative).
+            if rel > ber_bound + 1e-5:
+                raise AssertionError(
+                    f"{n} clients: BER p{int(p * 100)} rel err {rel:.4f} "
+                    f"exceeds layout bound {ber_bound:.4f}")
+            if ab > snr_bound + 1e-5:
+                raise AssertionError(
+                    f"{n} clients: SNR p{int(p * 100)} abs err {ab:.3f} dB "
+                    f"exceeds layout bound {snr_bound:.3f} dB")
+        quantiles[n] = q
+    lo_n, hi_n = SCALE_COHORTS[0], SCALE_COHORTS[-1]
+    if structures[lo_n] != structures[hi_n]:
+        raise AssertionError(
+            f"sketch line structure depends on cohort size: "
+            f"{structures[lo_n]} vs {structures[hi_n]}")
+    if line_bytes[hi_n] > line_bytes[lo_n] * 1.5:
+        raise AssertionError(
+            f"sketch line size grew with the cohort: {line_bytes[lo_n]}B "
+            f"at {lo_n} clients vs {line_bytes[hi_n]}B at {hi_n}")
+    return {
+        "cohorts": list(SCALE_COHORTS), "rounds": SCALE_ROUNDS,
+        "structure_constant": True,
+        "max_line_bytes": {str(n): line_bytes[n] for n in SCALE_COHORTS},
+        "quantile_err": {str(n): quantiles[n] for n in SCALE_COHORTS},
+        "ber_rel_bound": ber_bound, "snr_abs_bound_db": snr_bound,
+    }
 
 
 def run(quick: bool = True, seed: int = 0) -> dict:
@@ -56,11 +198,17 @@ def run(quick: bool = True, seed: int = 0) -> dict:
               n_rounds=n_rounds, buffer_k=max(2, n_clients // 4),
               staleness="polynomial")
 
+    # Shared compile warmup (result discarded): the overhead gate below
+    # compares steady-state wall clocks, so neither arm may pay the jit
+    # tax. ``sketches=True`` here also compiles the (instance-shared)
+    # sketch reduction the instrumented arm will hit warm.
+    run_fl_buffered(cfg, tcfg, cx, cy, ti, tl, **kw, sketches=True)
+
     trace = TraceRecorder(TRACE_PATH)
     timers = PhaseTimers()
     res = run_fl_buffered(cfg, tcfg, cx, cy, ti, tl, **kw,
                           ledger=LEDGER_PATH, trace=trace,
-                          phase_timers=timers)
+                          phase_timers=timers, sketches=True)
     emit("obs/run", res.wall_s * 1e6,
          f"rounds={n_rounds} final_acc={res.final_accuracy:.3f} "
          f"waves={len(res.records)} events={len(trace.events)}")
@@ -75,6 +223,14 @@ def run(quick: bool = True, seed: int = 0) -> dict:
     emit("obs/ledger", 0.0,
          f"wrote {LEDGER_PATH} rounds={len(data.rounds)} "
          f"events={len(data.events)} (schema-valid, link exact)")
+
+    sketch_rounds = sum(1 for r in data.rounds if r.sketches is not None)
+    if sketch_rounds != len(data.rounds):
+        raise AssertionError(
+            f"only {sketch_rounds}/{len(data.rounds)} round records carry "
+            f"a sketches group")
+    emit("obs/sketches", 0.0,
+         f"all {sketch_rounds} round records carry schema-v2 sketches")
 
     with open(TRACE_PATH) as f:
         chrome = json.load(f)
@@ -107,12 +263,38 @@ def run(quick: bool = True, seed: int = 0) -> dict:
             "attaching obs sinks changed the run's numeric results")
     emit("obs/neutrality", 0.0, "sinks-on == sinks-off (bit-identical)")
 
+    # Overhead gate: all four sinks together must cost <= 5% wall clock
+    # (+ OVERHEAD_ABS_S absorbing the sketch kernel's one-time compile,
+    # which only the instrumented arm pays).
+    wall_on, wall_off = res.wall_s, bare.wall_s
+    budget_s = wall_off * (1.0 + OVERHEAD_REL) + OVERHEAD_ABS_S
+    overhead_ok = wall_on <= budget_s
+    if not overhead_ok:
+        raise AssertionError(
+            f"obs overhead: sinks-on {wall_on:.2f}s exceeds budget "
+            f"{budget_s:.2f}s (sinks-off {wall_off:.2f}s)")
+    emit("obs/overhead", (wall_on - wall_off) * 1e6,
+         f"on={wall_on:.2f}s off={wall_off:.2f}s "
+         f"ratio={wall_on / max(wall_off, 1e-9):.3f} (budget 5% + "
+         f"{OVERHEAD_ABS_S:.1f}s compile slack)")
+
+    scale = _sketch_scale_check(tcfg, scen, seed)
+    emit("obs/scale", 0.0,
+         f"cohorts={'x'.join(str(n) for n in SCALE_COHORTS)} "
+         f"line_bytes={scale['max_line_bytes']} "
+         f"ber_bound={scale['ber_rel_bound']:.4f}")
+
     report = {
         "clients": n_clients, "rounds": n_rounds, "scenario": scen.name,
         "ledger": LEDGER_PATH, "trace": TRACE_PATH,
         "ledger_rounds": len(data.rounds), "ledger_events": len(data.events),
+        "sketch_rounds": sketch_rounds,
         "track_types": tracks, "phases": phases,
         "sinks_are_neutral": same,
+        "overhead": {"wall_on_s": wall_on, "wall_off_s": wall_off,
+                     "ratio": wall_on / max(wall_off, 1e-9),
+                     "budget_s": budget_s, "ok": overhead_ok},
+        "sketch_scale": scale,
     }
     common.write_bench_json(JSON_PATH, report)
     emit("obs/json", 0.0, f"wrote {JSON_PATH}")
@@ -122,7 +304,8 @@ def run(quick: bool = True, seed: int = 0) -> dict:
 def main() -> None:
     """Standalone entry: ``python -m benchmarks.obs_smoke``."""
     ap = argparse.ArgumentParser(
-        description="ledger + trace + timers smoke on a buffered run")
+        description="ledger + trace + timers + sketches smoke on a "
+                    "buffered run")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="larger cohort (24 clients)")

@@ -38,7 +38,14 @@ With ``--buffered``, ``--trace PATH`` additionally exports a Chrome/
 Perfetto trace of the event clock (dispatch waves, per-client compute and
 uplink spans, buffer fill, aggregations) and ``--timers`` prints per-phase
 wall-clock timers with the first (compile) call split from steady state.
-None of the three changes the run's numbers.
+
+``--metrics`` attaches the constant-memory per-client distribution
+sketches (``repro.obs.RoundSketcher``): every round's SNR / BER / airtime
+/ mode-dwell population folds into mergeable bucket histograms on device,
+and a run-level quantile table (p50/p90/p99/mean per metric) prints after
+the run. With ``--ledger`` the per-round sketch groups also land in the
+ledger (schema v2) for ``tools/report.py`` / ``tools/metrics_export.py``.
+None of the observability sinks changes the run's numbers.
 """
 
 import argparse
@@ -54,7 +61,7 @@ from repro.fl.async_engine import run_fl_buffered
 from repro.fl.loop import run_fl
 from repro.link import policy as policy_lib
 from repro.link import scenario as scenario_lib
-from repro.obs import PhaseTimers, TraceRecorder
+from repro.obs import PhaseTimers, RoundSketcher, TraceRecorder
 
 
 def _run(cfg, tcfg, data, scen, rounds, compression=None, buffer_k=None,
@@ -103,6 +110,11 @@ def main():
                     help="collect per-phase wall-clock timers (first/"
                          "compile call split from steady state) and print "
                          "the table")
+    ap.add_argument("--metrics", action="store_true",
+                    help="attach per-client distribution sketches and "
+                         "print the run-level quantile table (p50/p90/p99 "
+                         "per metric); with --ledger the per-round groups "
+                         "also land in the ledger")
     args = ap.parse_args()
     if args.trace is not None and args.buffered is None:
         ap.error("--trace requires --buffered (spans live on the async "
@@ -149,6 +161,9 @@ def main():
     timers = PhaseTimers() if args.timers else None
     if timers is not None:
         obs_kw["phase_timers"] = timers
+    sketcher = RoundSketcher(args.clients) if args.metrics else None
+    if sketcher is not None:
+        obs_kw["sketches"] = sketcher
     res = _run(cfg, tcfg, data, scen, args.rounds, compression,
                buffer_k=args.buffered, **obs_kw)
     dl_cols = "  dl airtime   dl BER" if scen.downlink is not None else ""
@@ -171,6 +186,15 @@ def main():
           f"airtime={res.airtime_s[-1]:.2f}s{clock} wall={res.wall_s:.0f}s")
     if timers is not None:
         print("\n" + timers.report())
+    if sketcher is not None:
+        print("\nper-client sketches (run-level):")
+        for name, sk in sorted(sketcher.run.items()):
+            if sk.total == 0:
+                continue
+            print(f"  {name:<14} n={sk.total:<6d} "
+                  f"p50={sk.quantile(0.5):<10.4g} "
+                  f"p90={sk.quantile(0.9):<10.4g} "
+                  f"p99={sk.quantile(0.99):<10.4g} mean={sk.mean():.4g}")
     if args.ledger is not None:
         print(f"\nledger: {args.ledger} "
               f"(summarize: python -m tools.report {args.ledger})")

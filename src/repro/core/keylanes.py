@@ -48,6 +48,7 @@ __all__ = [
     "COMPUTE_KEY_LANE",
     "EVENT_KEY_LANE",
     "EVENT_GAP_KEY_LANE",
+    "OBS_KEY_LANE",
     "CHUNK_KEY_LANE",
     "HEADER_KEY_LANE",
     "SELECT_KEY_LANE",
@@ -227,6 +228,11 @@ EVENT_KEY_LANE = reserve(
 EVENT_GAP_KEY_LANE = reserve(
     "event-gap", base=(3 << 21) + (1 << 20), span=1 << 20,
     owner="repro.link.dynamics")
+# observability reservoir exemplars: per-client tag fold_in(round_key,
+# OBS + i). Disjoint from every training lane, so sketches-on stays
+# bit-identical to sketches-off on model weights.
+OBS_KEY_LANE = reserve(
+    "obs-reservoir", base=1 << 23, span=1 << 20, owner="repro.obs.sketch")
 
 # client space: lanes folded onto an already-derived client key -------------
 # chunked uncoded transport folds the chunk index onto the client key

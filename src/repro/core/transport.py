@@ -248,6 +248,20 @@ class TxStats:
                 np.asarray(self.bits_on_air, f64).sum())
         return out
 
+    def client_metrics(self) -> dict:
+        """Per-client *device* arrays for the sketch layer, keyed by the
+        metric names of ``repro.obs.metrics.DEFAULT_LAYOUTS``.
+
+        Unlike :meth:`round_summary` this never syncs to the host — the
+        values feed ``RoundSketcher.round_group``'s jitted reduction, so
+        the only host transfer is the fixed-size bucket counts.
+        """
+        out = {"ber": self.ber, "transmissions": self.transmissions,
+               "n_bits": self.n_bits}
+        if self.bits_on_air is not None:
+            out["bits_on_air"] = self.bits_on_air
+        return out
+
 
 def _stats(data_symbols, transmissions, bit_errors, n_bits,
            bits_on_air=None) -> TxStats:

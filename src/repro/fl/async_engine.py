@@ -169,14 +169,14 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                  scenario=None, adaptive_dispatch: str = "bucketed",
                  downlink=None, compression=None,
                  fused_aggregate: bool = False, ledger=None, trace=None,
-                 phase_timers=None):
+                 phase_timers=None, sketches=None):
         super().__init__(
             algorithm, transport_cfg, client_x, client_y, test_x, test_y,
             n_rounds=n_rounds, seed=seed, eval_every=eval_every,
             timings=timings, scenario=scenario,
             adaptive_dispatch=adaptive_dispatch, downlink=downlink,
             compression=compression, fused_aggregate=fused_aggregate,
-            ledger=ledger, phase_timers=phase_timers)
+            ledger=ledger, phase_timers=phase_timers, sketches=sketches)
         # Perfetto trace sink (repro.obs.trace): a path or a TraceRecorder.
         # Like the ledger, a pure observer of host values the event loop
         # already computed.
@@ -688,6 +688,15 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                             t=t_now + dl_wait + float(comp_s[i]),
                             kind="uplink", wave=next_wave, client=i,
                             dur=float(air_np[i])))
+            if self.sketcher is not None:
+                with tm.scope("telemetry"):
+                    rec.sketches = self.sketcher.round_group(
+                        rk, snr_db=rnd.snr_db, est_db=rnd.est_db,
+                        ber=stats.client_metrics()["ber"],
+                        airtime_s=per_air, mode=rnd.mode,
+                        active=rnd.active, member=member,
+                        downlink_ber=(None if dstats is None
+                                      else dstats.ber))
             rec.t_event = t_now
             self._finish_record(res, rec, stats)
             waves[next_wave] = {
@@ -715,6 +724,10 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                         value=float(info["arrived"].sum())))
                     self._emit_event(obs_records_lib.EventRecord(
                         t=t_now, kind="buffer", value=0.0))
+                if self.sketcher is not None:
+                    # Fused buffers hold exactly one zero-staleness wave.
+                    self.sketcher.observe_staleness(
+                        np.zeros(int(info["arrived"].sum()), np.float32))
                 params, aux = self._apply_only(params, aux, info["agg"])
                 del waves[w]
                 buffered = 0
@@ -731,6 +744,12 @@ class AsyncRoundEngine(engine_lib.RoundEngine):
                     entries.append((w, info["hat"],
                                     jnp.asarray(mask * np.float32(om)),
                                     mask, om))
+                if self.sketcher is not None and entries:
+                    # One staleness observation per folded client update.
+                    self.sketcher.observe_staleness(np.concatenate([
+                        np.full(int(mask.sum()),
+                                version - waves[w]["version"], np.float32)
+                        for w, _, _, mask, _ in entries]))
                 if obs_events:
                     folded = sum(
                         int(mask.sum()) for _, _, _, mask, _ in entries)
@@ -846,7 +865,7 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
                     staleness: str = "constant",
                     staleness_alpha: float = 0.5,
                     compute=None, arrival=None, ledger=None, trace=None,
-                    phase_timers=None) -> engine_lib.FLResult:
+                    phase_timers=None, sketches=None) -> engine_lib.FLResult:
     """Buffered (FedBuff-style) FedSGD over the simulated wireless uplink.
 
     The asynchronous counterpart of :func:`repro.fl.loop.run_fl` — same
@@ -868,6 +887,7 @@ def run_fl_buffered(cfg, transport_cfg, client_x, client_y, test_x, test_y,
         adaptive_dispatch=adaptive_dispatch, downlink=downlink,
         compression=compression, fused_aggregate=fused_aggregate,
         ledger=ledger, trace=trace, phase_timers=phase_timers,
+        sketches=sketches,
     ).run()
 
 
@@ -882,7 +902,8 @@ def run_fedavg_buffered(cfg, transport_cfg, client_x, client_y, test_x,
                         staleness: str = "constant",
                         staleness_alpha: float = 0.5,
                         compute=None, arrival=None, ledger=None, trace=None,
-                        phase_timers=None) -> engine_lib.FLResult:
+                        phase_timers=None,
+                        sketches=None) -> engine_lib.FLResult:
     """Buffered (FedBuff-style) FedAvg — the asynchronous counterpart of
     :func:`repro.fl.fedavg.run_fedavg`; see :func:`run_fl_buffered` for the
     buffering and observability arguments."""
@@ -897,4 +918,5 @@ def run_fedavg_buffered(cfg, transport_cfg, client_x, client_y, test_x,
         adaptive_dispatch=adaptive_dispatch, downlink=downlink,
         compression=compression, fused_aggregate=fused_aggregate,
         ledger=ledger, trace=trace, phase_timers=phase_timers,
+        sketches=sketches,
     ).run()

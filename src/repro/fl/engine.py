@@ -71,6 +71,7 @@ from repro.core import latency as latency_lib
 from repro.core import transport as transport_lib
 from repro.fl import cnn
 from repro.obs import ledger as obs_ledger_lib
+from repro.obs import metrics as obs_metrics_lib
 from repro.obs import records as obs_records_lib
 from repro.obs import timers as obs_timers_lib
 from repro.optim.sgd import sgd as make_sgd
@@ -447,7 +448,7 @@ class RoundEngine:
                  timings: latency_lib.PhyTimings | None = None,
                  scenario=None, adaptive_dispatch: str = "bucketed",
                  downlink=None, compression=None, fused_aggregate: bool = False,
-                 ledger=None, phase_timers=None):
+                 ledger=None, phase_timers=None, sketches=None):
         self.algo = algorithm
         self.client_x, self.client_y = client_x, client_y
         self.test_x, self.test_y = test_x, test_y
@@ -473,6 +474,17 @@ class RoundEngine:
                 f"adaptive_dispatch must be bucketed|select, got "
                 f"{adaptive_dispatch!r}")
         self.dispatch = adaptive_dispatch
+        # Per-client distribution sketches (repro.obs.metrics): like the
+        # ledger, a pure observer — the sketcher only reads arrays the
+        # round step already produced plus a reserved fold_in lane of the
+        # round key, so sketches-on runs stay bit-identical to
+        # sketches-off runs on weights and accuracy.
+        self.sketcher = obs_metrics_lib.resolve_sketches(
+            sketches, self.num_clients)
+        if self.sketcher is not None and self.driver is None:
+            raise ValueError(
+                "sketches= needs a scenario — the per-client SNR/mode "
+                "distributions being sketched come from the link driver")
 
         # Kept pre-resolution: the downlink leg re-derives its own transport
         # from this (its ECRT pricing anchors at the *shifted* SNR, not the
@@ -1094,6 +1106,8 @@ class RoundEngine:
         phases = self.phase_timers.summary()
         if phases:
             summary["phases"] = phases
+        if self.sketcher is not None:
+            summary["sketches"] = self.sketcher.summary()
         self.ledger.write_summary(summary)
         self.ledger.close()
 
@@ -1160,6 +1174,15 @@ class RoundEngine:
                 self._compression_record(rec, stats, rnd)
             if dstats is not None:
                 cum_air += self._downlink_air_record(rec, dstats)
+            if self.sketcher is not None:
+                with tm.scope("telemetry"):
+                    rec.sketches = self.sketcher.round_group(
+                        rk, snr_db=rnd.snr_db, est_db=rnd.est_db,
+                        ber=stats.client_metrics()["ber"],
+                        airtime_s=per_client_air, mode=rnd.mode,
+                        active=rnd.active,
+                        downlink_ber=(None if dstats is None
+                                      else dstats.ber))
             self._finish_record(res, rec, stats)
             if r % self.eval_every == 0 or r == self.n_rounds - 1:
                 with tm.scope("eval"):

@@ -53,12 +53,13 @@ def run_fedavg(
     fused_aggregate: bool = False,
     ledger=None,
     phase_timers=None,
+    sketches=None,
 ) -> FLResult:
     """FedAvg over the simulated uplink: ``local_steps`` SGD steps per
     client per round, weight deltas on the wire.
 
     Mirrors :func:`repro.fl.loop.run_fl`'s arguments (including the
-    ``ledger``/``phase_timers`` observability sinks); the FedAvg-specific
+    ``ledger``/``phase_timers``/``sketches`` observability sinks); the FedAvg-specific
     ones are ``local_steps`` / ``batch_per_step`` (the local schedule) and
     ``scale_mode`` (the adaptive per-client delta scaling above). See the
     module and :mod:`repro.fl.engine` docstrings for scenarios, dispatches,
@@ -75,5 +76,5 @@ def run_fedavg(
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
         downlink=downlink, compression=compression,
         fused_aggregate=fused_aggregate, ledger=ledger,
-        phase_timers=phase_timers,
+        phase_timers=phase_timers, sketches=sketches,
     ).run()

@@ -63,6 +63,7 @@ def run_fl(
     fused_aggregate: bool = False,
     ledger=None,
     phase_timers=None,
+    sketches=None,
 ) -> FLResult:
     """FedSGD over the simulated wireless uplink (paper Sec. II eq. (4)-(6)).
 
@@ -98,6 +99,9 @@ def run_fl(
         eval points, and a summary; changes no numeric result.
       phase_timers: optional ``repro.obs.PhaseTimers`` collecting per-phase
         wall-clock scopes (first/compile call split from steady state).
+      sketches: ``True`` / layout dict / ``repro.obs.RoundSketcher`` —
+        attach constant-memory per-client distribution sketches to every
+        round record (scenario runs only; changes no numeric result).
 
     Returns:
       :class:`~repro.fl.engine.FLResult`.
@@ -109,5 +113,5 @@ def run_fl(
         scenario=scenario, adaptive_dispatch=adaptive_dispatch,
         downlink=downlink, compression=compression,
         fused_aggregate=fused_aggregate, ledger=ledger,
-        phase_timers=phase_timers,
+        phase_timers=phase_timers, sketches=sketches,
     ).run()

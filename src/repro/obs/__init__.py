@@ -12,7 +12,12 @@ The cross-cutting telemetry subsystem of the FL engines:
   the async engine's event clock (waves, client spans, aggregations,
   churn, buffer fill);
 * :mod:`repro.obs.timers` — :class:`PhaseTimers` wall-clock scopes with
-  first-call (compile) time split from the steady state.
+  first-call (compile) time split from the steady state;
+* :mod:`repro.obs.sketch` — mergeable constant-memory bucket sketches
+  (device-side ``int32`` histograms, quantile estimates with documented
+  error bounds, keyed reservoir exemplars);
+* :mod:`repro.obs.metrics` — the per-round :class:`RoundSketcher` the
+  engines drive, plus the :class:`MetricsRegistry` OpenMetrics exporter.
 
 Everything here is an *observer*: attaching any sink to a run changes none
 of its numeric results (pinned by ``tests/test_obs.py``).
@@ -33,6 +38,14 @@ from repro.obs.records import (  # noqa: F401
     EventRecord,
     RoundRecord,
 )
+from repro.obs.metrics import (  # noqa: F401
+    DEFAULT_LAYOUTS,
+    MetricsRegistry,
+    RoundSketcher,
+    registry_from_ledger,
+    resolve_sketches,
+)
+from repro.obs.sketch import BucketLayout, Sketch  # noqa: F401
 from repro.obs.timers import NULL_TIMERS, PhaseStat, PhaseTimers  # noqa: F401
 from repro.obs.trace import TraceRecorder  # noqa: F401
 
@@ -52,4 +65,11 @@ __all__ = [
     "PhaseTimers",
     "PhaseStat",
     "NULL_TIMERS",
+    "BucketLayout",
+    "Sketch",
+    "DEFAULT_LAYOUTS",
+    "RoundSketcher",
+    "resolve_sketches",
+    "MetricsRegistry",
+    "registry_from_ledger",
 ]

@@ -131,14 +131,24 @@ class RunLedger:
 
     ``events=False`` drops the per-event lines (the buffered engine can
     emit thousands per run) while keeping manifest/round/eval/summary.
-    The file opens lazily on first write and every line is flushed, so a
-    crashed run keeps all completed records. Usable as a context manager;
-    the engines close it from ``run()``'s tail, and ``close`` is idempotent.
+    ``detail`` selects the large-cohort profile: ``"full"`` (default)
+    keeps everything; ``"sketch"`` additionally drops event lines and
+    stamps ``detail`` into the manifest — combined with an engine-side
+    :class:`~repro.obs.metrics.RoundSketcher` the per-round line size is
+    then a function of the sketch layouts alone, independent of cohort
+    size. The file opens lazily on first write and every line is flushed,
+    so a crashed run keeps all completed records. Usable as a context
+    manager; the engines close it from ``run()``'s tail, and ``close`` is
+    idempotent.
     """
 
-    def __init__(self, path, *, events: bool = True):
+    def __init__(self, path, *, events: bool = True, detail: str = "full"):
+        if detail not in ("full", "sketch"):
+            raise ValueError(
+                f"detail must be 'full' or 'sketch', got {detail!r}")
         self.path = os.fspath(path)
-        self.events = events
+        self.detail = detail
+        self.events = events and detail == "full"
         self._f = None
         self._wrote_manifest = False
 
@@ -153,7 +163,8 @@ class RunLedger:
         re-run against the same ledger object cannot corrupt the header."""
         if self._wrote_manifest:
             return
-        out = {"kind": "manifest", "schema": records_lib.SCHEMA_VERSION}
+        out = {"kind": "manifest", "schema": records_lib.SCHEMA_VERSION,
+               "detail": self.detail}
         out.update(manifest)
         self._write(out)
         self._wrote_manifest = True
@@ -230,10 +241,15 @@ def read_ledger(path) -> LedgerData:
     """Parse a JSONL ledger back into typed records.
 
     Tolerates a truncated final line (the crash case the incremental
-    flushing exists for) but rejects schema-version mismatches and unknown
-    record kinds.
+    flushing exists for). Accepts every schema version in
+    ``records.SUPPORTED_SCHEMAS`` (v1 ledgers read unchanged); rejects
+    unknown schema versions, unknown record kinds, unknown record fields,
+    and **mixed-version lines** — a v1-stamped ledger whose round lines
+    carry v2-only fields (e.g. ``sketches``) — each with a
+    ``path:lineno:`` error so the offending line is findable.
     """
     manifest, rounds, events, evals, summary = None, [], [], [], None
+    schema = records_lib.SCHEMA_VERSION
     with open(path) as f:
         lines = f.read().splitlines()
     for i, line in enumerate(lines):
@@ -251,16 +267,29 @@ def read_ledger(path) -> LedgerData:
         kind = obj.pop("kind", None)
         if kind == "manifest":
             schema = obj.get("schema")
-            if schema != records_lib.SCHEMA_VERSION:
+            if schema not in records_lib.SUPPORTED_SCHEMAS:
                 raise ValueError(
-                    f"{path}: ledger schema {schema!r}, reader "
-                    f"supports {records_lib.SCHEMA_VERSION}")
+                    f"{path}:{i + 1}: ledger schema {schema!r}, reader "
+                    f"supports {records_lib.SUPPORTED_SCHEMAS}")
             manifest = obj
         elif kind == "round":
-            rounds.append(records_lib.RoundRecord.from_dict(obj))
+            if schema < 2:
+                v2 = [k for k in records_lib.V2_ROUND_FIELDS if k in obj]
+                if v2:
+                    raise ValueError(
+                        f"{path}:{i + 1}: schema-{schema} ledger has a "
+                        f"round line with v2-only field(s) {v2} "
+                        f"(mixed-version line)")
+            try:
+                rounds.append(records_lib.RoundRecord.from_dict(obj))
+            except ValueError as e:
+                raise ValueError(f"{path}:{i + 1}: {e}") from None
         elif kind == "event":
             obj["kind"] = obj.pop("event")
-            events.append(records_lib.EventRecord.from_dict(obj))
+            try:
+                events.append(records_lib.EventRecord.from_dict(obj))
+            except ValueError as e:
+                raise ValueError(f"{path}:{i + 1}: {e}") from None
         elif kind == "eval":
             evals.append(obj)
         elif kind == "summary":
@@ -280,6 +309,11 @@ def validate_ledger(path) -> list:
     try:
         data = read_ledger(path)
     except (ValueError, OSError) as e:
+        msg = str(e)
+        # Per-line reader errors already carry the "path:lineno:" locator;
+        # pass them through so the caller sees exactly which line broke.
+        if msg.startswith(f"{path}:"):
+            return [msg]
         return [f"{path}: unreadable: {e}"]
     for key in MANIFEST_KEYS[1:]:  # "kind" was consumed by the reader
         if key not in data.manifest:

@@ -1,0 +1,404 @@
+"""Live metrics layer: per-round sketch computation + OpenMetrics export.
+
+Builds on :mod:`repro.obs.sketch` to give the engines a constant-overhead
+distributional view of every round:
+
+* :data:`DEFAULT_LAYOUTS` — the repo's canonical bucket layouts for the
+  per-client metrics the paper's scheme actually steers on: true and
+  estimated SNR (linear dB buckets — dB is already a log domain), payload
+  BER (log buckets, DDSketch-style relative-error bound), per-client
+  airtime, mode-dwell (rounds since the client's last mode switch), and
+  aggregation staleness (buffered engine).
+* :class:`RoundSketcher` — owned by an engine; one jitted device reduction
+  per round/wave turns the already-resident link arrays into fixed-size
+  ``int32`` bucket counts plus ``k`` worst-client / reservoir exemplars.
+  Only those constant-size arrays cross to host, so the cost per round is
+  independent of cohort size. The sketcher also folds every round into
+  run-level :class:`~repro.obs.sketch.Sketch` accumulators (merge =
+  element-wise add — exactly associative).
+* :class:`MetricsRegistry` — counters / gauges / histograms with an
+  OpenMetrics text exposition (:meth:`MetricsRegistry.render`), plus
+  :func:`registry_from_ledger` to rebuild a registry from any run ledger
+  (the path ``tools/metrics_export.py`` drives).
+
+Neutrality: the sketcher reads the round key only through ``fold_in`` on
+the reserved ``OBS_KEY_LANE`` and consumes arrays the round step already
+produced, so sketches-on runs are bit-identical to sketches-off runs on
+model weights and accuracy (pinned by ``tests/test_metrics.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keylanes
+from repro.obs.sketch import (BucketLayout, Sketch, bucket_counts,
+                              reservoir_sample, reservoir_tags, worst_k)
+
+__all__ = [
+    "DEFAULT_LAYOUTS",
+    "RoundSketcher",
+    "resolve_sketches",
+    "MetricsRegistry",
+    "registry_from_ledger",
+    "render_openmetrics",
+]
+
+# Canonical per-client metric layouts. dB metrics use linear buckets (the
+# dB scale is already logarithmic in power; absolute bound = half a bucket
+# = 0.625 dB); ratio/time metrics use log buckets with the DDSketch
+# relative-error bound sqrt(gamma) - 1 (~7.5% for the BER layout).
+DEFAULT_LAYOUTS = {
+    "snr_db": BucketLayout("snr_db", "linear", -20.0, 60.0, 64),
+    "est_db": BucketLayout("est_db", "linear", -20.0, 60.0, 64),
+    "ber": BucketLayout("ber", "log", 1e-8, 1.0, 128),
+    "airtime_s": BucketLayout("airtime_s", "log", 1e-7, 1e3, 96),
+    "dwell_rounds": BucketLayout("dwell_rounds", "linear", 0.0, 64.0, 64),
+    "staleness": BucketLayout("staleness", "linear", 0.0, 32.0, 32),
+    "downlink_ber": BucketLayout("downlink_ber", "log", 1e-8, 1.0, 128),
+}
+
+
+# The sketchable round metrics, in the order their layouts travel through
+# the static ``layouts`` argument of :func:`_round_reduce` (``downlink_ber``
+# last: it is only computed when the round had a downlink leg).
+_ROUND_METRICS = ("snr_db", "est_db", "ber", "airtime_s", "dwell_rounds",
+                  "downlink_ber")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layouts", "k", "with_dl"))
+def _round_reduce(key, snr_db, est_db, ber, airtime_s, mode, active,
+                  member, prev_mode, dwell, dl_ber, *,
+                  layouts: tuple, k: int, with_dl: bool):
+    """The pure per-round reduction (jitted; fixed-size outputs).
+
+    Module-level so the compile cache is shared across
+    :class:`RoundSketcher` instances: ``layouts`` is the tuple of
+    :class:`BucketLayout` objects for :data:`_ROUND_METRICS` (hashable
+    frozen dataclasses, so they ride as static arguments), and two
+    sketchers with equal layouts / ``k`` / cohort shape hit the same
+    executable.
+
+    ``member`` masks the observed cohort (async wave membership; all ones
+    for the sync engine); ``active`` additionally masks clients whose
+    uplink actually happened (BER/airtime observations).
+    """
+    snr_lay, est_lay, ber_lay, air_lay, dwell_lay, dl_lay = layouts
+    member_b = member > 0
+    eff_b = (member * active) > 0
+    dwell = jnp.where(
+        member_b,
+        jnp.where(mode == prev_mode, dwell + 1, jnp.int32(1)), dwell)
+    prev_mode = jnp.where(member_b, mode, prev_mode)
+    counts = {
+        "snr_db": bucket_counts(snr_db, snr_lay, mask=member_b),
+        "est_db": bucket_counts(est_db, est_lay, mask=member_b),
+        "ber": bucket_counts(ber, ber_lay, mask=eff_b),
+        "airtime_s": bucket_counts(airtime_s, air_lay, mask=eff_b),
+        "dwell_rounds": bucket_counts(
+            dwell.astype(jnp.float32), dwell_lay, mask=member_b),
+    }
+    if with_dl:
+        counts["downlink_ber"] = bucket_counts(dl_ber, dl_lay,
+                                               mask=member_b)
+    w_ber, w_idx = worst_k(ber, k, mask=eff_b)
+    tags = reservoir_tags(key, snr_db.shape[0])
+    tags = jnp.where(member_b, tags, jnp.inf)
+    r_tags, r_idx = reservoir_sample(tags, k)
+    ex = {
+        "w_ber": w_ber, "w_idx": w_idx,
+        "w_snr": jnp.take(snr_db, w_idx), "w_mode": jnp.take(mode, w_idx),
+        "r_tags": r_tags, "r_idx": r_idx,
+        "r_snr": jnp.take(snr_db, r_idx), "r_ber": jnp.take(ber, r_idx),
+    }
+    return counts, dwell, prev_mode, ex
+
+
+class RoundSketcher:
+    """Per-round device-side sketch computation for one engine.
+
+    One instance rides one engine run: :meth:`round_group` consumes the
+    round's already-resident device arrays (per-client SNR/BER/airtime,
+    the mode vector, the activity masks) and returns the JSON-safe
+    ``sketches`` group for that round's
+    :class:`~repro.obs.records.RoundRecord`, while folding the same counts
+    into run-level accumulators (:attr:`run`). The sketcher owns the
+    mode-dwell device state (rounds since each client's last mode switch)
+    because the engines overwrite their ``prev_mode`` before telemetry
+    runs.
+
+    Exemplars: the ``k`` worst clients by BER (with their SNR and mode)
+    and a ``k``-client keyed reservoir — tags ride ``fold_in`` on the
+    reserved ``OBS_KEY_LANE``, so the selection is a pure function of the
+    round key and batching-invariant.
+    """
+
+    def __init__(self, num_clients: int, *, layouts: dict | None = None,
+                 exemplar_k: int = 4):
+        """Set up layouts, dwell state, and the jitted device reductions."""
+        keylanes.check_cohort(keylanes.OBS_KEY_LANE, num_clients)
+        self.num_clients = int(num_clients)
+        self.exemplar_k = min(int(exemplar_k), self.num_clients)
+        self.layouts = dict(DEFAULT_LAYOUTS)
+        if layouts:
+            self.layouts.update(layouts)
+        self.run = {name: Sketch(lay) for name, lay in self.layouts.items()}
+        self._dwell = jnp.zeros((self.num_clients,), jnp.int32)
+        self._prev_mode = jnp.full((self.num_clients,), -1, jnp.int32)
+        # Static layout tuple for the shared jitted reduction.
+        self._layout_args = tuple(self.layouts[m] for m in _ROUND_METRICS)
+
+    def round_group(self, key, *, snr_db, est_db, ber, airtime_s, mode,
+                    active, member=None, downlink_ber=None) -> dict:
+        """Sketch one round; returns the record's ``sketches`` group.
+
+        Runs the jitted reduction, folds the counts into the run-level
+        accumulators, and formats the constant-size JSON group (per-metric
+        ``{layout, counts, total}`` + the exemplar lists). ``member=None``
+        means the full cohort was observed (synchronous engine).
+        """
+        if member is None:
+            member = jnp.ones((self.num_clients,), jnp.float32)
+        with_dl = downlink_ber is not None
+        if not with_dl:
+            downlink_ber = jnp.zeros((self.num_clients,), jnp.float32)
+        counts, self._dwell, self._prev_mode, ex = _round_reduce(
+            key, snr_db, est_db, ber, airtime_s, mode,
+            jnp.asarray(active, jnp.float32),
+            jnp.asarray(member, jnp.float32),
+            self._prev_mode, self._dwell, downlink_ber,
+            layouts=self._layout_args, k=self.exemplar_k, with_dl=with_dl)
+        group = {}
+        for name, c in counts.items():
+            c = np.asarray(c, np.int64)
+            self.run[name].add_counts(c)
+            group[name] = {"layout": self.layouts[name].to_dict(),
+                           "counts": [int(x) for x in c],
+                           "total": int(c.sum())}
+        group["exemplars"] = self._format_exemplars(ex)
+        return group
+
+    def _format_exemplars(self, ex) -> dict:
+        """Host-side JSON form of the device exemplar arrays (masked-out
+        sentinel winners — ``-inf`` / ``+inf`` tags — are dropped)."""
+        worst, reservoir = [], []
+        w_ber = np.asarray(ex["w_ber"])
+        for j in range(w_ber.shape[0]):
+            if not np.isfinite(w_ber[j]):
+                continue
+            worst.append({"client": int(ex["w_idx"][j]),
+                          "ber": float(w_ber[j]),
+                          "snr_db": float(ex["w_snr"][j]),
+                          "mode": int(ex["w_mode"][j])})
+        r_tags = np.asarray(ex["r_tags"])
+        for j in range(r_tags.shape[0]):
+            if not np.isfinite(r_tags[j]):
+                continue
+            reservoir.append({"client": int(ex["r_idx"][j]),
+                              "tag": float(r_tags[j]),
+                              "snr_db": float(ex["r_snr"][j]),
+                              "ber": float(ex["r_ber"][j])})
+        return {"worst_ber": worst, "reservoir": reservoir}
+
+    def observe_staleness(self, values) -> None:
+        """Fold host-side staleness observations (buffered aggregations)
+        into the run-level ``staleness`` sketch."""
+        vals = np.asarray(values, np.float32).reshape(-1)
+        if vals.size:
+            self.run["staleness"].observe(vals)
+
+    def summary(self) -> dict:
+        """Run-level sketch group (non-empty sketches only) for the
+        ledger's summary line."""
+        return {name: sk.to_dict() for name, sk in self.run.items()
+                if sk.total > 0}
+
+
+def resolve_sketches(sketches, num_clients: int) -> RoundSketcher | None:
+    """The engines' ``sketches=`` argument -> a :class:`RoundSketcher`.
+
+    ``None``/``False`` -> no sketching; ``True`` -> default layouts; a
+    :class:`RoundSketcher` passes through; a dict is treated as layout
+    overrides (``{metric_name: BucketLayout}``).
+    """
+    if sketches is None or sketches is False:
+        return None
+    if isinstance(sketches, RoundSketcher):
+        return sketches
+    if sketches is True:
+        return RoundSketcher(num_clients)
+    if isinstance(sketches, dict):
+        return RoundSketcher(num_clients, layouts=sketches)
+    raise ValueError(
+        f"sketches= must be None/True/RoundSketcher/layout-dict, got "
+        f"{type(sketches).__name__}")
+
+
+# ---------------------------------------------------------------- registry
+
+
+def _metric_name_ok(name: str) -> bool:
+    """OpenMetrics metric-name validity (``[a-zA-Z_:][a-zA-Z0-9_:]*``)."""
+    if not name:
+        return False
+    ok = set("abcdefghijklmnopqrstuvwxyz"
+             "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_:")
+    return name[0] not in "0123456789" and all(c in ok for c in name)
+
+
+class MetricsRegistry:
+    """A flat registry of counters, gauges, and sketch-backed histograms.
+
+    The in-process twin of a Prometheus client: engines / tools register
+    metrics by name, and :meth:`render` emits the whole registry as
+    OpenMetrics text (``# HELP`` / ``# TYPE`` metadata, cumulative
+    ``_bucket{le=...}`` series for histograms, terminated by ``# EOF``).
+    Registration is idempotent per name; re-registering with a different
+    type is an error.
+    """
+
+    def __init__(self) -> None:
+        """Start empty."""
+        self._metrics: dict[str, dict] = {}
+
+    def _register(self, name: str, kind: str, help_text: str) -> dict:
+        if not _metric_name_ok(name):
+            raise ValueError(f"invalid OpenMetrics metric name {name!r}")
+        m = self._metrics.get(name)
+        if m is None:
+            m = {"kind": kind, "help": help_text, "value": 0.0,
+                 "sketch": None}
+            self._metrics[name] = m
+        elif m["kind"] != kind:
+            raise ValueError(
+                f"metric {name!r} already registered as {m['kind']}")
+        return m
+
+    def counter(self, name: str, help_text: str = "") -> "MetricsRegistry":
+        """Declare a counter (monotone; rendered with a ``_total`` sample)."""
+        self._register(name, "counter", help_text)
+        return self
+
+    def inc(self, name: str, amount: float = 1.0) -> None:
+        """Increment a counter (declares it on first use)."""
+        m = self._register(name, "counter", "")
+        if amount < 0:
+            raise ValueError(f"counter {name!r}: negative increment")
+        m["value"] += amount
+
+    def gauge(self, name: str, value: float, help_text: str = "") -> None:
+        """Set a gauge to ``value`` (declares it on first use)."""
+        m = self._register(name, "gauge", help_text)
+        m["value"] = float(value)
+
+    def histogram(self, name: str, sketch: Sketch,
+                  help_text: str = "") -> None:
+        """Attach (or merge) a :class:`Sketch` as a histogram metric."""
+        m = self._register(name, "histogram", help_text)
+        m["sketch"] = (sketch if m["sketch"] is None
+                       else m["sketch"].merge(sketch))
+
+    def sketches(self) -> dict:
+        """The registered histogram sketches by metric name."""
+        return {n: m["sketch"] for n, m in self._metrics.items()
+                if m["kind"] == "histogram" and m["sketch"] is not None}
+
+    def render(self) -> str:
+        """The registry as OpenMetrics text exposition (ends ``# EOF``)."""
+        return render_openmetrics(self._metrics)
+
+
+def _fmt_num(v: float) -> str:
+    """OpenMetrics sample-value formatting (int-valued floats stay short)."""
+    f = float(v)
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def render_openmetrics(metrics: dict) -> str:
+    """Render a ``{name: {kind, help, value, sketch}}`` table as
+    OpenMetrics text.
+
+    Histograms emit the cumulative ``_bucket{le="..."}`` series derived
+    from the sketch's bucket layout: the underflow slot folds into every
+    bucket (underflow means ``v < lo`` <= every upper edge), the overflow
+    slot only into ``+Inf``; ``_sum`` is the bucket-representative
+    estimate (documented in :meth:`Sketch.mean`).
+    """
+    lines = []
+    for name in sorted(metrics):
+        m = metrics[name]
+        kind, help_text = m["kind"], m["help"]
+        if help_text:
+            lines.append(f"# HELP {name} {help_text}")
+        lines.append(f"# TYPE {name} {kind}")
+        if kind == "counter":
+            lines.append(f"{name}_total {_fmt_num(m['value'])}")
+        elif kind == "gauge":
+            lines.append(f"{name} {_fmt_num(m['value'])}")
+        elif kind == "histogram":
+            sk = m["sketch"]
+            if sk is None:
+                continue
+            lay = sk.layout
+            under = int(sk.counts[lay.n])
+            cum = under
+            for edge, c in zip(lay.edges()[1:], sk.counts[: lay.n]):
+                cum += int(c)
+                lines.append(f'{name}_bucket{{le="{edge:.6g}"}} {cum}')
+            lines.append(f'{name}_bucket{{le="+Inf"}} {sk.total}')
+            lines.append(f"{name}_sum {_fmt_num(sk.mean() * sk.total)}")
+            lines.append(f"{name}_count {sk.total}")
+        else:  # pragma: no cover - _register restricts kinds
+            raise ValueError(f"unknown metric kind {kind!r}")
+    lines.append("# EOF")
+    return "\n".join(lines) + "\n"
+
+
+def registry_from_ledger(path) -> MetricsRegistry:
+    """Build a :class:`MetricsRegistry` from a run ledger.
+
+    Round counts / final accuracy / airtime become counters and gauges.
+    Histograms come from the summary line's ``sketches`` group when the
+    run finished (it is already the element-wise-add merge of every round
+    group, plus host-only metrics like the buffered engine's staleness);
+    a crashed run (no summary) falls back to merging the per-round groups
+    — the merge is exact, so both paths agree on the shared metrics.
+    """
+    from repro.obs import ledger as ledger_lib
+
+    data = ledger_lib.read_ledger(path)
+    reg = MetricsRegistry()
+    reg.counter("repro_rounds", "rounds (or waves) recorded in the ledger")
+    reg.inc("repro_rounds", len(data.rounds))
+    reg.counter("repro_events", "event-clock records in the ledger")
+    reg.inc("repro_events", len(data.events))
+    if data.summary is not None:
+        if "final_accuracy" in data.summary:
+            reg.gauge("repro_final_accuracy",
+                      data.summary["final_accuracy"],
+                      "final eval accuracy of the run")
+        if "airtime_s" in data.summary:
+            reg.gauge("repro_airtime_seconds", data.summary["airtime_s"],
+                      "cumulative cohort airtime at the end of the run")
+    if data.summary is not None and isinstance(
+            data.summary.get("sketches"), dict):
+        groups = [data.summary["sketches"]]
+    else:
+        groups = [r.sketches for r in data.rounds if r.sketches]
+    for group in groups:
+        for metric, d in group.items():
+            if metric == "exemplars" or not isinstance(d, dict):
+                continue
+            if "counts" not in d:
+                continue
+            reg.histogram(f"repro_client_{metric}", Sketch.from_dict(d),
+                          f"per-client {metric} distribution "
+                          f"(mergeable bucket sketch)")
+    return reg

@@ -1,4 +1,4 @@
-"""Typed per-round / per-event telemetry records (schema v1).
+"""Typed per-round / per-event telemetry records (schema v2).
 
 Before this module, per-round FL telemetry was a pile of ad-hoc dicts in
 ``FLResult.link`` whose schema lived in a comment on the dataclass, and the
@@ -28,6 +28,8 @@ import dataclasses
 
 __all__ = [
     "SCHEMA_VERSION",
+    "SUPPORTED_SCHEMAS",
+    "V2_ROUND_FIELDS",
     "LINK_FIELDS",
     "EVENT_KINDS",
     "RoundRecord",
@@ -35,10 +37,18 @@ __all__ = [
     "scenario_round_record",
 ]
 
-# Versioned record schema: bump when a field changes meaning or a link-view
-# field is added/removed (adding observability-only fields is backward
-# compatible and does not bump the version).
-SCHEMA_VERSION = 1
+# Versioned record schema: bump when a field changes meaning or a field
+# group is added that old readers must not misparse. v1 = the original
+# typed-record layer; v2 adds the per-round ``sketches`` group (mergeable
+# per-client distribution sketches, see ``repro.obs.sketch``). Readers
+# accept every version in SUPPORTED_SCHEMAS; writers stamp SCHEMA_VERSION.
+SCHEMA_VERSION = 2
+SUPPORTED_SCHEMAS = (1, 2)
+
+# Fields that only exist from schema v2 on: a v1-stamped ledger line
+# carrying one of these is a mixed-version line and is rejected with a
+# per-line error by ``repro.obs.ledger.read_ledger``.
+V2_ROUND_FIELDS = ("sketches",)
 
 # The historical ``FLResult.link`` dict keys, in the exact insertion order
 # the engines produced before the typed-record layer existed: scenario
@@ -110,6 +120,10 @@ class RoundRecord:
     uplink_ber: float | None = None  # cohort end-to-end payload BER
     uplink_mean_tx: float | None = None  # mean PHY transmissions/client
     uplink_bits_on_air: float | None = None  # cohort bits actually on air
+    # -- schema v2: constant-size per-client distribution sketches
+    # (``repro.obs.metrics.RoundSketcher.round_group`` output: per-metric
+    # bucket counts + reservoir/worst-client exemplars)
+    sketches: dict | None = None
 
     def to_link_dict(self) -> dict:
         """The historical ``FLResult.link`` dict: link-view fields only, in

@@ -1,0 +1,309 @@
+"""Mergeable constant-memory sketches for per-client link telemetry.
+
+The massive-cohort milestone (ROADMAP) needs per-client SNR/BER/airtime
+*distributions* — the quantities that drive mode policy and error
+resilience in the approximate-communication scheme — without O(clients)
+host transfer per round. This module provides the three primitives:
+
+* **Bucketed histograms** (:class:`BucketLayout`, :func:`bucket_counts`):
+  a fixed-size ``int32`` count vector per metric, computed on device as a
+  pure ``segment_sum`` reduction. Integer counts make the merge
+  (element-wise add) *exactly* associative and commutative, and the
+  reduction bit-identical across eager, ``jit`` and ``vmap`` — the same
+  shape hierarchical/streaming cohort aggregation needs.
+* **Quantile estimates** (:class:`Sketch`): DDSketch-style log-bucketed
+  layouts give a guaranteed relative-error bound of ``sqrt(gamma) - 1``
+  with ``gamma = (hi / lo) ** (1 / n)`` for values inside ``[lo, hi]``
+  (the exact order statistic provably lies in the reported bucket, and
+  the geometric bucket midpoint is at most that factor away from either
+  edge). Linear layouts (for dB-domain metrics, which are already
+  logarithmic) give an absolute bound of ``(hi - lo) / (2 n)``.
+* **Deterministic keyed reservoirs** (:func:`reservoir_tags`,
+  :func:`reservoir_sample`, :func:`worst_k`): a handful of concrete
+  exemplar clients survive at constant size. Per-client tags are drawn by
+  ``fold_in`` on the reserved ``OBS_KEY_LANE`` (see
+  ``repro.core.keylanes``), so the sample is a pure function of the round
+  key and the client index — batched evaluation is bit-identical to a
+  per-client loop, and merging two reservoirs (keep the k smallest tags)
+  is associative.
+
+Out-of-range values are never silently clamped: every count vector has
+``n + 2`` slots — ``n`` buckets plus an *underflow* slot (index ``n``,
+values below ``lo``; for log layouts this is where exact zeros land, e.g.
+clients with zero bit errors) and an *overflow* slot (index ``n + 1``).
+Quantiles that land in those slots report ``0.0`` / ``lo`` / ``hi``
+respectively, keeping the error bound honest inside the layout's range.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import keylanes
+
+__all__ = [
+    "BucketLayout",
+    "Sketch",
+    "bucket_counts",
+    "reservoir_tags",
+    "reservoir_sample",
+    "worst_k",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """A fixed bucketing of one metric: ``n`` buckets spanning ``[lo, hi]``.
+
+    ``scale`` is ``"log"`` (DDSketch-style geometric buckets; ``lo`` must
+    be > 0) or ``"linear"`` (equal-width buckets; the right choice for
+    dB-domain metrics, which are already logarithmic in the underlying
+    power). The layout is pure metadata — it is stamped into every ledger
+    line next to its counts so readers can re-derive edges, and two counts
+    vectors merge only if their layouts are equal.
+    """
+
+    name: str
+    scale: str
+    lo: float
+    hi: float
+    n: int
+
+    def __post_init__(self) -> None:
+        """Validate the range and precompute nothing (edges are derived)."""
+        if self.scale not in ("log", "linear"):
+            raise ValueError(f"layout {self.name!r}: scale must be 'log' or "
+                             f"'linear', got {self.scale!r}")
+        if self.scale == "log" and self.lo <= 0:
+            raise ValueError(f"layout {self.name!r}: log scale needs lo > 0")
+        if not self.lo < self.hi:
+            raise ValueError(f"layout {self.name!r}: need lo < hi")
+        if self.n < 1:
+            raise ValueError(f"layout {self.name!r}: need n >= 1 buckets")
+
+    @property
+    def gamma(self) -> float:
+        """Geometric bucket growth factor (log layouts only)."""
+        return (self.hi / self.lo) ** (1.0 / self.n)
+
+    def edges(self) -> np.ndarray:
+        """The ``n + 1`` bucket edges as float64 (edge 0 = lo, edge n = hi)."""
+        if self.scale == "log":
+            return np.geomspace(self.lo, self.hi, self.n + 1)
+        return np.linspace(self.lo, self.hi, self.n + 1)
+
+    def representatives(self) -> np.ndarray:
+        """Per-bucket point estimates: geometric (log) / arithmetic mids."""
+        e = self.edges()
+        if self.scale == "log":
+            return np.sqrt(e[:-1] * e[1:])
+        return 0.5 * (e[:-1] + e[1:])
+
+    def error_bound(self) -> float:
+        """The documented estimation bound for in-range values.
+
+        Relative for ``"log"`` layouts (``sqrt(gamma) - 1``), absolute for
+        ``"linear"`` layouts (half a bucket width).
+        """
+        if self.scale == "log":
+            return math.sqrt(self.gamma) - 1.0
+        return (self.hi - self.lo) / (2.0 * self.n)
+
+    def to_dict(self) -> dict:
+        """Plain-dict form for ledger lines / OpenMetrics labels."""
+        return {"name": self.name, "scale": self.scale, "lo": self.lo,
+                "hi": self.hi, "n": self.n}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "BucketLayout":
+        """Rebuild a layout from :meth:`to_dict` output."""
+        return cls(name=d["name"], scale=d["scale"], lo=float(d["lo"]),
+                   hi=float(d["hi"]), n=int(d["n"]))
+
+
+def bucket_counts(values, layout: BucketLayout, mask=None):
+    """Device-side histogram: ``(n + 2,)`` int32 counts for ``values``.
+
+    A pure ``jnp`` reduction (``searchsorted`` over the precomputed edges
+    + ``segment_sum`` of integer ones), safe to call inside jitted round
+    steps and under ``vmap``; integer accumulation makes the result
+    bit-identical across eager/jit/vmap and the merge (element-wise add)
+    exactly associative. Slot ``n`` counts underflow (``v < lo``; exact
+    zeros for log layouts), slot ``n + 1`` overflow (``v > hi``). Entries
+    where ``mask`` is falsy are dropped entirely (they appear in no slot).
+    """
+    v = jnp.asarray(values, jnp.float32).reshape(-1)
+    edges = jnp.asarray(layout.edges()[1:-1], jnp.float32)
+    inner = jnp.searchsorted(edges, v, side="right").astype(jnp.int32)
+    seg = jnp.where(v < jnp.float32(layout.lo), jnp.int32(layout.n),
+                    jnp.where(v > jnp.float32(layout.hi),
+                              jnp.int32(layout.n + 1), inner))
+    if mask is not None:
+        m = jnp.asarray(mask).reshape(-1)
+        seg = jnp.where(m, seg, jnp.int32(layout.n + 2))
+    ones = jnp.ones_like(seg)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=layout.n + 3)
+    return counts[: layout.n + 2]
+
+
+def reservoir_tags(key, num_clients: int):
+    """Deterministic per-client reservoir tags on the reserved obs lane.
+
+    Client ``i`` draws ``uniform(fold_in(key, OBS_KEY_LANE + i))`` — a
+    pure function of the round key and the client index, so the tags (and
+    any sample derived from them) are identical whether clients are
+    processed batched, sharded, or one at a time. The ``k`` clients with
+    the smallest tags form a uniform random sample whose merge (keep the
+    k smallest across a union) is associative.
+    """
+    keylanes.check_cohort(keylanes.OBS_KEY_LANE, num_clients)
+    idx = jnp.arange(num_clients) + keylanes.OBS_KEY_LANE
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(idx)
+
+
+def reservoir_sample(tags, k: int):
+    """Indices of the ``k`` smallest tags (ascending tag order).
+
+    ``top_k`` on negated tags gives a deterministic, batching-invariant
+    selection (ties broken by lower index, matching ``lax.top_k``).
+    Returns ``(sel_tags, sel_idx)`` each of shape ``(k,)``.
+    """
+    neg, idx = jax.lax.top_k(-jnp.asarray(tags), k)
+    return -neg, idx
+
+
+def worst_k(values, k: int, mask=None):
+    """Indices and values of the ``k`` largest entries (worst clients).
+
+    Masked-out entries are sent to ``-inf`` so they never win. Returns
+    ``(top_values, top_idx)`` each of shape ``(k,)``, descending.
+    """
+    v = jnp.asarray(values, jnp.float32)
+    if mask is not None:
+        v = jnp.where(jnp.asarray(mask).astype(bool), v, -jnp.inf)
+    return jax.lax.top_k(v, k)
+
+
+class Sketch:
+    """Host-side mergeable histogram + quantile estimator over one layout.
+
+    Wraps a ``(n + 2,)`` integer count vector (see :func:`bucket_counts`)
+    with merge/quantile/serialization. State is *counts only* — no float
+    accumulators — so :meth:`merge` is exactly associative and commutative
+    and two sketches built from the same observations in any grouping are
+    equal. Counts are held as int64 on host so merging many int32 round
+    partials cannot overflow.
+    """
+
+    def __init__(self, layout: BucketLayout, counts=None) -> None:
+        """Create an empty sketch, or adopt an existing count vector."""
+        self.layout = layout
+        if counts is None:
+            self.counts = np.zeros(layout.n + 2, np.int64)
+        else:
+            c = np.asarray(counts, np.int64).reshape(-1)
+            if c.shape[0] != layout.n + 2:
+                raise ValueError(
+                    f"sketch {layout.name!r}: counts length {c.shape[0]}, "
+                    f"layout wants {layout.n + 2}")
+            self.counts = c.copy()
+
+    @property
+    def total(self) -> int:
+        """Number of observed values (including under/overflow)."""
+        return int(self.counts.sum())
+
+    def observe(self, values, mask=None) -> "Sketch":
+        """Fold raw values into this sketch via the device reduction."""
+        self.counts += np.asarray(
+            bucket_counts(values, self.layout, mask), np.int64)
+        return self
+
+    def add_counts(self, counts) -> "Sketch":
+        """Fold a raw ``(n + 2,)`` count vector (e.g. a device partial)."""
+        c = np.asarray(counts, np.int64).reshape(-1)
+        if c.shape[0] != self.layout.n + 2:
+            raise ValueError(
+                f"sketch {self.layout.name!r}: partial length {c.shape[0]}, "
+                f"layout wants {self.layout.n + 2}")
+        self.counts += c
+        return self
+
+    def merge(self, other: "Sketch") -> "Sketch":
+        """Element-wise-add merge; layouts must match exactly."""
+        if self.layout != other.layout:
+            raise ValueError(f"cannot merge sketch {other.layout.name!r} "
+                             f"into {self.layout.name!r}: layouts differ")
+        return Sketch(self.layout, self.counts + other.counts)
+
+    def quantile(self, q: float) -> float:
+        """Rank-``floor(q * (total - 1))`` estimate (np.quantile 'lower').
+
+        The exact order statistic of the observed data at that rank lies
+        in the reported bucket, so the estimate is within
+        :meth:`BucketLayout.error_bound` for in-range values. Underflow
+        ranks report ``0.0`` for log layouts (below-resolution, e.g. zero
+        BER) and ``lo`` for linear; overflow ranks report ``hi``.
+        """
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile must be in [0, 1], got {q}")
+        total = self.total
+        if total == 0:
+            return 0.0
+        rank = int(math.floor(q * (total - 1)))
+        n = self.layout.n
+        # rank order: underflow slot first, then buckets, then overflow.
+        order = np.concatenate(([self.counts[n]], self.counts[:n],
+                                [self.counts[n + 1]]))
+        cum = np.cumsum(order)
+        pos = int(np.searchsorted(cum, rank + 1))
+        if pos == 0:
+            return 0.0 if self.layout.scale == "log" else float(self.layout.lo)
+        if pos == n + 1:
+            return float(self.layout.hi)
+        return float(self.layout.representatives()[pos - 1])
+
+    def mean(self) -> float:
+        """Bucket-representative mean (under/overflow use ``lo`` / ``hi``)."""
+        total = self.total
+        if total == 0:
+            return 0.0
+        reps = self.layout.representatives()
+        lo_rep = 0.0 if self.layout.scale == "log" else self.layout.lo
+        s = (float(self.counts[: self.layout.n] @ reps)
+             + float(self.counts[self.layout.n]) * lo_rep
+             + float(self.counts[self.layout.n + 1]) * self.layout.hi)
+        return s / total
+
+    def to_dict(self) -> dict:
+        """JSON-safe form: layout metadata + the full count vector.
+
+        Size is a function of the layout alone — never of how many values
+        were observed — which is what makes ``detail="sketch"`` ledger
+        lines cohort-independent.
+        """
+        return {"layout": self.layout.to_dict(),
+                "counts": [int(c) for c in self.counts],
+                "total": self.total}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Sketch":
+        """Rebuild a sketch from :meth:`to_dict` output."""
+        return cls(BucketLayout.from_dict(d["layout"]), d["counts"])
+
+    def __eq__(self, other) -> bool:
+        """Equal layouts and identical counts."""
+        return (isinstance(other, Sketch) and self.layout == other.layout
+                and bool(np.array_equal(self.counts, other.counts)))
+
+    def __repr__(self) -> str:
+        """Compact debugging form with the headline quantiles."""
+        return (f"Sketch({self.layout.name!r}, total={self.total}, "
+                f"p50={self.quantile(0.5):.4g}, "
+                f"p99={self.quantile(0.99):.4g})")

@@ -1,0 +1,384 @@
+"""Gates for the scale-ready metrics layer (``repro.obs.sketch`` /
+``repro.obs.metrics`` / ``tools.bench_diff``).
+
+The load-bearing invariants, in order:
+
+1. **Sketches are exact integer objects.** Bucket counts are integers
+   computed on device, so merge is exactly associative and commutative,
+   the same observations bucketed eagerly / under jit / under vmap are
+   bit-identical, and quantile estimates stay within each layout's
+   documented error bound against ``np.quantile(..., method="lower")``.
+
+2. **Sketches are neutral.** ``sketches=True`` on either engine changes
+   no numeric result — the device reduction reads the round key only
+   through the reserved ``OBS_KEY_LANE`` and consumes arrays the round
+   already produced.
+
+3. **Lines are cohort-independent.** The serialized per-round sketch
+   group has the same structure (and essentially the same size) at 64
+   and 1024 clients.
+
+4. **The schema versioning holds.** v1 ledgers still read; a v1-stamped
+   ledger carrying v2-only round fields is rejected with a
+   ``path:lineno:`` locator; ``detail="sketch"`` suppresses event lines.
+
+5. **The bench sentry fires.** ``tools.bench_diff`` accepts an artifact
+   matching its baseline within tolerances and exits non-zero on a
+   seeded synthetic regression.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mnist_cnn import config as cnn_config
+from repro.core import channel as CH
+from repro.core import keylanes
+from repro.core import transport as T
+from repro.data import synth_mnist
+from repro.fl import partition
+from repro.fl.async_engine import run_fl_buffered
+from repro.fl.loop import run_fl
+from repro.link import scenario as S
+from repro.obs import ledger as L
+from repro.obs import metrics as M
+from repro.obs import records as R
+from repro.obs.sketch import BucketLayout, Sketch, bucket_counts, \
+    reservoir_sample, reservoir_tags
+
+BER_LAY = M.DEFAULT_LAYOUTS["ber"]
+SNR_LAY = M.DEFAULT_LAYOUTS["snr_db"]
+
+
+# --------------------------------------------------------------------------
+# sketch primitives
+# --------------------------------------------------------------------------
+
+
+def _lognormal(n, seed=0):
+    r = np.random.default_rng(seed)
+    return np.clip(np.exp(r.normal(-6.0, 2.5, n)).astype(np.float32),
+                   2e-8, 0.9)
+
+
+def test_merge_associative_commutative():
+    vals = _lognormal(600)
+    chunks = np.split(vals, 3)
+    parts = [Sketch(BER_LAY).observe(c) for c in chunks]
+    whole = Sketch(BER_LAY).observe(vals)
+    ab_c = parts[0].merge(parts[1]).merge(parts[2])
+    a_bc = parts[0].merge(parts[1].merge(parts[2]))
+    cba = parts[2].merge(parts[1]).merge(parts[0])
+    assert ab_c == a_bc == cba == whole
+
+
+@pytest.mark.parametrize("q", [0.05, 0.25, 0.5, 0.9, 0.95, 0.99])
+def test_quantile_bound_log_layout(q):
+    vals = _lognormal(2000, seed=1)
+    sk = Sketch(BER_LAY).observe(vals)
+    exact = float(np.quantile(vals, q, method="lower"))
+    rel = abs(sk.quantile(q) - exact) / exact
+    # 1e-5 slack: a ranked value on a bucket edge can overshoot the
+    # analytic bound by the float32 edge-rounding error.
+    assert rel <= BER_LAY.error_bound() + 1e-5
+
+
+@pytest.mark.parametrize("q", [0.05, 0.5, 0.95, 0.99])
+def test_quantile_bound_linear_layout(q):
+    r = np.random.default_rng(2)
+    vals = np.clip(r.normal(12.0, 9.0, 2000),
+                   SNR_LAY.lo, SNR_LAY.hi).astype(np.float32)
+    sk = Sketch(SNR_LAY).observe(vals)
+    exact = float(np.quantile(vals, q, method="lower"))
+    assert abs(sk.quantile(q) - exact) <= SNR_LAY.error_bound() + 1e-5
+
+
+def test_bucket_counts_eager_jit_vmap_identical():
+    vals = jnp.asarray(_lognormal(512, seed=3).reshape(4, 128))
+    eager = np.stack([np.asarray(bucket_counts(v, BER_LAY)) for v in vals])
+    jitted = np.stack([np.asarray(
+        jax.jit(lambda v: bucket_counts(v, BER_LAY))(v)) for v in vals])
+    vmapped = np.asarray(
+        jax.vmap(lambda v: bucket_counts(v, BER_LAY))(vals))
+    assert eager.dtype == np.int32
+    np.testing.assert_array_equal(eager, jitted)
+    np.testing.assert_array_equal(eager, vmapped)
+
+
+def test_under_overflow_and_mask_slots():
+    lay = BucketLayout("x", "log", 1e-4, 1.0, 8)
+    vals = jnp.asarray([0.0, 1e-6, 0.5, 2.0, 0.25], jnp.float32)
+    mask = jnp.asarray([True, True, True, True, False])
+    c = np.asarray(bucket_counts(vals, lay, mask=mask))
+    assert c.shape == (lay.n + 2,)
+    assert c[lay.n] == 2  # zero + 1e-6 underflow
+    assert c[lay.n + 1] == 1  # 2.0 overflow
+    assert c.sum() == 4  # the masked 0.25 never lands
+    sk = Sketch(lay, c)
+    assert sk.quantile(0.0) == 0.0  # log-layout underflow reads 0.0
+    assert sk.quantile(1.0) == lay.hi  # overflow reads hi
+
+
+def test_reservoir_tags_match_per_client_fold_in_loop():
+    key = jax.random.PRNGKey(7)
+    n = 16
+    batched = np.asarray(reservoir_tags(key, n))
+    loop = np.asarray([
+        jax.random.uniform(
+            jax.random.fold_in(key, keylanes.OBS_KEY_LANE + i))
+        for i in range(n)])
+    np.testing.assert_array_equal(batched, loop)
+    # the k smallest tags are a deterministic function of the key alone
+    tags, idx = reservoir_sample(jnp.asarray(batched), 4)
+    np.testing.assert_array_equal(
+        np.asarray(idx), np.argsort(batched)[:4])
+
+
+def test_sketch_roundtrip_and_layout_mismatch():
+    sk = Sketch(BER_LAY).observe(_lognormal(64, seed=4))
+    again = Sketch.from_dict(json.loads(json.dumps(sk.to_dict())))
+    assert again == sk
+    with pytest.raises(ValueError, match="layouts differ"):
+        sk.merge(Sketch(SNR_LAY))
+
+
+# --------------------------------------------------------------------------
+# cohort independence of the serialized round group
+# --------------------------------------------------------------------------
+
+
+def _synthetic_round(n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    snr = jax.random.uniform(jax.random.fold_in(key, 1), (n,),
+                             minval=-5.0, maxval=35.0)
+    return dict(
+        key=key, snr_db=snr, est_db=snr + 0.5,
+        ber=jnp.clip(10.0 ** (-(snr + 20.0) / 10.0), 1e-7, 1.0),
+        airtime_s=0.01 + 0.001 * jnp.arange(n, dtype=jnp.float32),
+        mode=jnp.zeros((n,), jnp.int32),
+        active=jnp.ones((n,), jnp.float32))
+
+
+def test_round_group_structure_is_cohort_independent():
+    groups = {}
+    for n in (64, 1024):
+        syn = _synthetic_round(n)
+        key = syn.pop("key")
+        groups[n] = M.RoundSketcher(n).round_group(key, **syn)
+    shape = {n: {m: len(g["counts"]) for m, g in grp.items()
+                 if m != "exemplars"} for n, grp in groups.items()}
+    assert shape[64] == shape[1024]
+    size = {n: len(json.dumps(grp)) for n, grp in groups.items()}
+    assert size[1024] <= size[64] * 1.5  # formatting noise only
+    for grp in groups.values():  # exemplar lists stay k-bounded
+        assert len(grp["exemplars"]["worst_ber"]) <= 4
+        assert len(grp["exemplars"]["reservoir"]) <= 4
+
+
+# --------------------------------------------------------------------------
+# engine neutrality + ledger schema v2
+# --------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def world():
+    (img, lab), (ti, tl) = synth_mnist.train_test(60, 16, seed=0)
+    parts = partition.non_iid_partition(img, lab, n_clients=4)
+    cx, cy = partition.stack_clients(parts, per_client=24)
+    return cx, cy, ti, tl
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(cnn_config(), lr=0.1)
+
+
+def _tc():
+    return T.TransportConfig(mode="approx",
+                             channel=CH.ChannelConfig(snr_db=10.0))
+
+
+_KW = dict(n_rounds=3, batch_per_round=8, eval_every=2, seed=3)
+
+
+@pytest.fixture(scope="module")
+def sync_pair(cfg, world, tmp_path_factory):
+    """(sketched run, bare twin, ledger path) on the sync engine."""
+    cx, cy, ti, tl = world
+    path = str(tmp_path_factory.mktemp("metrics") / "sync.jsonl")
+    scen = dataclasses.replace(S.get_scenario("vehicular"),
+                               ecrt_expected_tx=2.0)
+    res = run_fl(cfg, _tc(), cx, cy, ti, tl, scenario=scen, ledger=path,
+                 sketches=True, **_KW)
+    bare = run_fl(cfg, _tc(), cx, cy, ti, tl, scenario=scen, **_KW)
+    return res, bare, path
+
+
+@pytest.fixture(scope="module")
+def async_pair(cfg, world, tmp_path_factory):
+    """(sketched run, bare twin, ledger path) on the buffered engine."""
+    cx, cy, ti, tl = world
+    path = str(tmp_path_factory.mktemp("metrics_async") / "async.jsonl")
+    scen = dataclasses.replace(S.get_scenario("metro-rush"),
+                               ecrt_expected_tx=2.0)
+    kw = dict(_KW, scenario=scen, buffer_k=2, staleness="polynomial")
+    res = run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, ledger=path,
+                          sketches=True, **kw)
+    bare = run_fl_buffered(cfg, _tc(), cx, cy, ti, tl, **kw)
+    return res, bare, path
+
+
+def test_sync_sketches_neutral(sync_pair):
+    res, bare, _ = sync_pair
+    assert res.accuracy == bare.accuracy
+    assert res.airtime_s == bare.airtime_s
+    assert res.link == bare.link
+
+
+def test_async_sketches_neutral(async_pair):
+    res, bare, _ = async_pair
+    assert res.accuracy == bare.accuracy
+    assert res.airtime_s == bare.airtime_s
+    assert res.event_s == bare.event_s
+    assert res.link == bare.link
+
+
+@pytest.mark.parametrize("pair", ["sync_pair", "async_pair"])
+def test_ledger_carries_sketch_groups(pair, request):
+    _, _, path = request.getfixturevalue(pair)
+    assert L.validate_ledger(path) == []
+    data = L.read_ledger(path)
+    assert data.rounds and all(r.sketches is not None for r in data.rounds)
+    for rec in data.rounds:
+        for m, g in rec.sketches.items():
+            if m == "exemplars":
+                continue
+            assert g["total"] == sum(g["counts"])
+    summary = data.summary["sketches"]
+    assert summary["snr_db"]["total"] > 0
+    if pair == "async_pair":  # host-side staleness observations
+        assert summary["staleness"]["total"] > 0
+
+
+def test_sketches_require_a_scenario(cfg, world):
+    cx, cy, ti, tl = world
+    with pytest.raises(ValueError, match="scenario"):
+        run_fl(cfg, _tc(), cx, cy, ti, tl, sketches=True, **_KW)
+
+
+def test_detail_sketch_suppresses_events(tmp_path):
+    led = L.RunLedger(tmp_path / "d.jsonl", detail="sketch")
+    assert led.events is False
+    led.write_manifest({"fingerprint": "x", "algorithm": "y",
+                        "provenance": L.provenance()})
+    led.write_event(R.EventRecord(t=0.0, kind="wave", dur=1.0))
+    led.close()
+    lines = (tmp_path / "d.jsonl").read_text().splitlines()
+    assert len(lines) == 1
+    assert json.loads(lines[0])["detail"] == "sketch"
+    with pytest.raises(ValueError, match="detail"):
+        L.RunLedger(tmp_path / "e.jsonl", detail="medium")
+
+
+def test_v1_ledger_with_v2_field_rejected_per_line(tmp_path, sync_pair):
+    _, _, path = sync_pair
+    lines = open(path).read().splitlines()
+    downgraded = tmp_path / "mixed.jsonl"
+    first = json.loads(lines[0])
+    first["schema"] = 1
+    downgraded.write_text("\n".join([json.dumps(first)] + lines[1:]) + "\n")
+    problems = L.validate_ledger(str(downgraded))
+    assert len(problems) == 1
+    assert problems[0].startswith(f"{downgraded}:2:")
+    assert "mixed-version" in problems[0]
+    # a true v1 ledger (no v2 fields anywhere) still reads
+    v1_lines = [json.dumps(first)]
+    for line in lines[1:]:
+        obj = json.loads(line)
+        obj.pop("sketches", None)  # rounds and the summary both carry it
+        v1_lines.append(json.dumps(obj))
+    v1 = tmp_path / "v1.jsonl"
+    v1.write_text("\n".join(v1_lines) + "\n")
+    assert L.validate_ledger(str(v1)) == []
+
+
+# --------------------------------------------------------------------------
+# metrics registry + OpenMetrics exposition
+# --------------------------------------------------------------------------
+
+
+def test_openmetrics_render_shape():
+    reg = M.MetricsRegistry()
+    reg.counter("repro_rounds", "rounds run")
+    reg.inc("repro_rounds", 5)
+    reg.gauge("repro_final_accuracy", 0.91, "final accuracy")
+    reg.histogram("repro_ber", Sketch(BER_LAY).observe(_lognormal(128)),
+                  "per-client BER")
+    text = reg.render()
+    assert text.endswith("# EOF\n")
+    assert "# TYPE repro_rounds counter" in text
+    assert "repro_rounds_total 5" in text
+    assert "repro_final_accuracy 0.91" in text
+    # histogram buckets must be cumulative and end at +Inf == _count
+    bucket_counts_ = [float(ln.rsplit(" ", 1)[1])
+                      for ln in text.splitlines()
+                      if ln.startswith("repro_ber_bucket")]
+    assert bucket_counts_ == sorted(bucket_counts_)
+    count = [float(ln.rsplit(" ", 1)[1]) for ln in text.splitlines()
+             if ln.startswith("repro_ber_count")]
+    assert bucket_counts_[-1] == count[0] == 128.0
+
+
+def test_registry_from_ledger_merges_rounds(sync_pair):
+    _, _, path = sync_pair
+    data = L.read_ledger(path)
+    text = M.registry_from_ledger(path).render()
+    assert text.endswith("# EOF\n")
+    assert f"repro_rounds_total {len(data.rounds)}" in text
+    # the merged histogram count equals the sum of the round totals
+    per_round = sum(r.sketches["snr_db"]["total"] for r in data.rounds)
+    assert f"repro_client_snr_db_count {per_round}" in text
+
+
+# --------------------------------------------------------------------------
+# bench-diff sentry
+# --------------------------------------------------------------------------
+
+
+def _write_json(path, obj):
+    path.write_text(json.dumps(obj))
+    return str(path)
+
+
+def test_bench_diff_ok_then_seeded_regression(tmp_path, capsys):
+    from tools import bench_diff
+    base = {"gates": {"fast": True}, "ratio": 5.0, "wall_s": 1.0}
+    spec = {"BENCH_x.json": {"gates.fast": {"equals": True},
+                             "ratio": {"min": 4.0, "rel": 0.05}}}
+    baseline = _write_json(tmp_path / "BENCH_x.json", base)
+    spec_path = _write_json(tmp_path / "spec.json", spec)
+    ok = _write_json(tmp_path / "cur_ok.json",
+                     {**base, "ratio": 5.1, "wall_s": 99.0})
+    assert bench_diff.main([ok, baseline, "--spec", spec_path]) == 0
+    # seeded regression: gate flipped + ratio below floor
+    bad = _write_json(tmp_path / "cur_bad.json",
+                      {**base, "gates": {"fast": False}, "ratio": 3.2})
+    assert bench_diff.main([bad, baseline, "--spec", spec_path]) == 1
+    out = capsys.readouterr().out
+    assert "DRIFT" in out and "gates.fast" in out and "ratio" in out
+    # a spec'd key missing from the current artifact is always drift
+    missing = _write_json(tmp_path / "cur_missing.json", {"ratio": 5.0})
+    assert bench_diff.main([missing, baseline, "--spec", spec_path]) == 1
+
+
+def test_bench_diff_committed_baselines_match_repo_artifacts():
+    """The committed baselines must agree with themselves (sanity: the
+    sentry exits 0 when current == baseline)."""
+    from tools import bench_diff
+    base = bench_diff.BASELINE_DIR / "BENCH_kernel_throughput.json"
+    assert base.exists()
+    assert bench_diff.main([str(base), str(base)]) == 0

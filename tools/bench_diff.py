@@ -1,0 +1,200 @@
+"""bench-diff: regression sentry over ``BENCH_*.json`` artifacts.
+
+Turns the benchmark artifacts from write-only outputs into an enforced
+perf/accuracy trajectory: diff a freshly-produced artifact against a
+committed baseline under ``benchmarks/baselines/`` (or any two artifacts,
+or a pair of run ledgers) using **per-key tolerance specs**, and exit
+non-zero on drift so CI fails the PR that caused it.
+
+Usage::
+
+    # current vs an explicit baseline
+    python -m tools.bench_diff BENCH_kernel_throughput.json \
+        benchmarks/baselines/BENCH_kernel_throughput.json
+
+    # each artifact vs its committed baseline of the same name
+    python -m tools.bench_diff --against-baselines \
+        BENCH_kernel_throughput.json BENCH_async_fl.json
+
+    # two run ledgers (compares manifest fingerprint + summary fields)
+    python -m tools.bench_diff run_a.jsonl run_b.jsonl
+
+Tolerance specs live in ``benchmarks/baselines/tolerances.json``: one
+entry per artifact basename mapping dotted key paths to a rule —
+``{"equals": v}`` (exact expected value), ``{"rel": r}`` /
+``{"abs": a}`` (relative/absolute drift vs the baseline value),
+``{"min": m}`` / ``{"max": m}`` (absolute floor/ceiling on the current
+value). Keys absent from the spec are informational only (wall-clock
+timings vary across machines and must not gate), but a spec'd key
+missing from the current artifact is always drift. Exit codes: 0 = no
+drift, 1 = drift, 2 = unusable inputs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE_DIR = REPO_ROOT / "benchmarks" / "baselines"
+DEFAULT_SPEC = BASELINE_DIR / "tolerances.json"
+
+# Ledger pairs are compared on these summary fields with a shared default
+# rule (overridable by a "_ledger" spec entry).
+LEDGER_SUMMARY_RULES = {
+    "summary.final_accuracy": {"abs": 0.1},
+    "summary.airtime_s": {"rel": 0.05},
+    "manifest.fingerprint": {"equals_baseline": True},
+}
+
+
+def flatten(obj, prefix: str = "") -> dict:
+    """Flatten nested dicts/lists into ``{dotted.path: scalar}``."""
+    out: dict = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            out.update(flatten(v, f"{prefix}.{i}" if prefix else str(i)))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def _load_artifact(path: pathlib.Path) -> dict:
+    """Load one artifact: a BENCH json object, or a JSONL run ledger
+    reduced to its ``manifest.*`` / ``summary.*`` views."""
+    if path.suffix == ".jsonl":
+        manifest, summary = {}, {}
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn final line: the tolerated crash case
+                if obj.get("kind") == "manifest":
+                    manifest = obj
+                elif obj.get("kind") == "summary":
+                    summary = obj
+        return {"manifest": manifest, "summary": summary}
+    with open(path) as f:
+        obj = json.load(f)
+    if not isinstance(obj, dict):
+        raise ValueError(f"{path}: top level is not an object")
+    return obj
+
+
+def check_key(key: str, rule: dict, cur, base) -> str | None:
+    """Apply one tolerance rule; returns a drift message or ``None``."""
+    if cur is None:
+        return f"{key}: missing from current artifact (baseline: {base!r})"
+    if rule.get("equals_baseline"):
+        if cur != base:
+            return f"{key}: {cur!r} != baseline {base!r}"
+        return None
+    if "equals" in rule:
+        if cur != rule["equals"]:
+            return f"{key}: {cur!r} != expected {rule['equals']!r}"
+        return None
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        return f"{key}: non-numeric value {cur!r} under a numeric rule"
+    if "min" in rule and cur < rule["min"]:
+        return f"{key}: {cur:.6g} < floor {rule['min']:.6g}"
+    if "max" in rule and cur > rule["max"]:
+        return f"{key}: {cur:.6g} > ceiling {rule['max']:.6g}"
+    if "rel" in rule or "abs" in rule:
+        if base is None or not isinstance(base, (int, float)) \
+                or isinstance(base, bool):
+            return (f"{key}: baseline has no numeric value "
+                    f"({base!r}) for a rel/abs rule")
+        delta = abs(cur - base)
+        bound = rule.get("abs", 0.0) + rule.get("rel", 0.0) * abs(base)
+        if delta > bound:
+            return (f"{key}: {cur:.6g} drifted from baseline {base:.6g} "
+                    f"(|delta| {delta:.3g} > allowed {bound:.3g})")
+    return None
+
+
+def diff(current: pathlib.Path, baseline: pathlib.Path,
+         spec: dict) -> tuple[list[str], int]:
+    """Diff one artifact pair; returns ``(drift messages, keys checked)``.
+
+    The spec entry is selected by the baseline's basename (falling back to
+    the current's); ledger pairs use the built-in summary rules merged
+    under any ``"_ledger"`` entry.
+    """
+    cur = flatten(_load_artifact(current))
+    base = flatten(_load_artifact(baseline))
+    if current.suffix == ".jsonl":
+        rules = dict(LEDGER_SUMMARY_RULES)
+        rules.update(spec.get("_ledger", {}))
+    else:
+        rules = spec.get(baseline.name) or spec.get(current.name)
+        if rules is None:
+            raise ValueError(
+                f"no tolerance spec for {baseline.name!r} "
+                f"(add it to {DEFAULT_SPEC.name})")
+    problems = []
+    for key, rule in sorted(rules.items()):
+        msg = check_key(key, rule, cur.get(key), base.get(key))
+        if msg is not None:
+            problems.append(f"{current}: {msg}")
+    return problems, len(rules)
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the exit code (0 ok / 1 drift / 2 usage)."""
+    ap = argparse.ArgumentParser(
+        description="Diff BENCH_*.json artifacts (or run-ledger pairs) "
+                    "against tolerance specs; non-zero exit on drift")
+    ap.add_argument("paths", nargs="+",
+                    help="CURRENT BASELINE — or, with --against-baselines, "
+                         "one or more artifacts to check against "
+                         "benchmarks/baselines/<name>")
+    ap.add_argument("--against-baselines", action="store_true",
+                    help="compare each artifact against the committed "
+                         "baseline of the same basename")
+    ap.add_argument("--spec", default=str(DEFAULT_SPEC),
+                    help="tolerance spec json (default: "
+                         "benchmarks/baselines/tolerances.json)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.spec) as f:
+            spec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: unreadable spec {args.spec}: {e}",
+              file=sys.stderr)
+        return 2
+    if args.against_baselines:
+        pairs = [(pathlib.Path(p), BASELINE_DIR / pathlib.Path(p).name)
+                 for p in args.paths]
+    else:
+        if len(args.paths) != 2:
+            print("bench_diff: need exactly CURRENT and BASELINE "
+                  "(or use --against-baselines)", file=sys.stderr)
+            return 2
+        pairs = [(pathlib.Path(args.paths[0]), pathlib.Path(args.paths[1]))]
+    drifted = False
+    for current, baseline in pairs:
+        try:
+            problems, checked = diff(current, baseline, spec)
+        except (OSError, ValueError) as e:
+            print(f"bench_diff: {e}", file=sys.stderr)
+            return 2
+        if problems:
+            drifted = True
+            for p in problems:
+                print(f"DRIFT {p}")
+        else:
+            print(f"OK {current} vs {baseline} ({checked} keys checked)")
+    return 1 if drifted else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

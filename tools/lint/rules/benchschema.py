@@ -50,8 +50,9 @@ EXPECTED: dict[str, tuple[frozenset, ...]] = {
     ),
     "BENCH_obs.json": (frozenset({
         "clients", "rounds", "scenario", "ledger", "trace",
-        "ledger_rounds", "ledger_events", "track_types", "phases",
-        "sinks_are_neutral", "meta"}),),
+        "ledger_rounds", "ledger_events", "sketch_rounds", "track_types",
+        "phases", "sinks_are_neutral", "overhead", "sketch_scale",
+        "meta"}),),
 }
 
 

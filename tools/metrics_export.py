@@ -1,0 +1,53 @@
+"""OpenMetrics exporter CLI: run ledger -> Prometheus text exposition.
+
+Usage::
+
+    PYTHONPATH=src python -m tools.metrics_export RUN_LEDGER.jsonl
+    PYTHONPATH=src python -m tools.metrics_export RUN_LEDGER.jsonl -o out.prom
+
+Rebuilds a :class:`repro.obs.metrics.MetricsRegistry` from the ledger
+(round/event counters, final-accuracy/airtime gauges, and one merged
+histogram per sketched metric — the per-round sketch groups merge by
+element-wise count addition, so the export is identical no matter how the
+rounds were batched) and writes the OpenMetrics text to stdout or a file.
+The output is scrape-ready: ``# HELP``/``# TYPE`` metadata, cumulative
+``_bucket{le=...}`` series, and a final ``# EOF``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def export(path, out=None) -> str:
+    """Render ``path``'s ledger as OpenMetrics text (also returns it)."""
+    from repro.obs.metrics import registry_from_ledger
+
+    text = registry_from_ledger(path).render()
+    if out is None:
+        sys.stdout.write(text)
+    else:
+        with open(out, "w") as f:
+            f.write(text)
+    return text
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(
+        description="Export a run ledger as OpenMetrics text")
+    ap.add_argument("ledger", help="path to a RUN_LEDGER.jsonl")
+    ap.add_argument("-o", "--out", default=None,
+                    help="output file (default: stdout)")
+    args = ap.parse_args(argv)
+    try:
+        export(args.ledger, args.out)
+    except (OSError, ValueError) as e:
+        print(f"metrics_export: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,8 +6,9 @@ One ledger -> a run summary::
 
 prints the manifest (engine, algorithm, scenario, fingerprint, provenance),
 the accuracy-vs-airtime eval curve, the aggregate link-mode histogram, the
-per-leg BER aggregates, and the phase-timer table when the run collected
-one.
+per-leg BER aggregates, the run-level sketch quantile table with ASCII
+histograms (when the run attached ``sketches=``), and the phase-timer
+table when the run collected one.
 
 Two ledgers -> a diff::
 
@@ -24,6 +25,7 @@ from __future__ import annotations
 import argparse
 
 from repro.obs import ledger as obs_ledger
+from repro.obs import sketch as sketch_lib
 
 
 def _fmt(v, digits: int = 4) -> str:
@@ -74,6 +76,74 @@ def ber_per_leg(data: obs_ledger.LedgerData) -> dict:
     return out
 
 
+def collect_sketches(data: obs_ledger.LedgerData) -> dict:
+    """Run-level :class:`~repro.obs.sketch.Sketch` objects for a ledger.
+
+    Prefers the summary line's ``sketches`` group; a crashed run (no
+    summary) falls back to merging the per-round groups — the merge is
+    element-wise count addition, so both paths agree exactly.
+    """
+    group = (data.summary or {}).get("sketches")
+    if group:
+        return {m: sketch_lib.Sketch.from_dict(d)
+                for m, d in group.items()}
+    out: dict = {}
+    for rec in data.rounds:
+        if not rec.sketches:
+            continue
+        for m, d in rec.sketches.items():
+            if m == "exemplars":
+                continue
+            sk = sketch_lib.Sketch.from_dict(d)
+            out[m] = out[m].merge(sk) if m in out else sk
+    return out
+
+
+def _ascii_hist(sk: sketch_lib.Sketch, width: int = 48) -> str:
+    """One-line ASCII density strip over the sketch's in-range buckets.
+
+    Buckets rebin into ``width`` columns; glyph height scales with the
+    column's share of the peak column (any non-empty column renders at
+    least the lowest glyph).
+    """
+    n = sk.layout.n
+    counts = [int(c) for c in sk.counts[:n]]
+    cols = []
+    for i in range(width):
+        lo = i * n // width
+        hi = max(lo + 1, (i + 1) * n // width)
+        cols.append(sum(counts[lo:hi]))
+    peak = max(cols)
+    if peak == 0:
+        return " " * width
+    glyphs = " .:-=+*#%@"
+    out = []
+    for c in cols:
+        level = 0 if c == 0 else max(1, c * (len(glyphs) - 1) // peak)
+        out.append(glyphs[level])
+    return "".join(out)
+
+
+def print_sketches(data: obs_ledger.LedgerData) -> None:
+    """Quantile table + per-metric ASCII histograms (no-op when the run
+    collected no sketches)."""
+    sketches = collect_sketches(data)
+    if not sketches:
+        return
+    rows = [[m, sk.total, sk.quantile(0.5), sk.quantile(0.9),
+             sk.quantile(0.99), sk.mean()]
+            for m, sk in sorted(sketches.items()) if sk.total > 0]
+    print("\nper-client sketches (run-level):")
+    print(_table(rows, ["metric", "n", "p50", "p90", "p99", "mean"]))
+    for m, sk in sorted(sketches.items()):
+        if sk.total == 0:
+            continue
+        lay = sk.layout
+        lo = f"{lay.lo:.3g}"
+        hi = f"{lay.hi:.3g}"
+        print(f"  {m:<14} {lo:>8} |{_ascii_hist(sk)}| {hi}")
+
+
 def accuracy_at_airtime(data: obs_ledger.LedgerData,
                         budget_s: float) -> float | None:
     """Best accuracy reached within ``budget_s`` cumulative airtime."""
@@ -122,6 +192,7 @@ def summarize(path: str) -> None:
     ber = ber_per_leg(data)
     for leg, val in ber.items():
         print(f"mean {leg} BER: {val:.3e}")
+    print_sketches(data)
 
     if data.summary:
         s = data.summary
